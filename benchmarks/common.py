@@ -1,0 +1,121 @@
+"""Shared benchmark harness: trained pairs, engine construction, H-RAD
+training cache, aggregate reporting.
+
+All numbers are produced under the paper's evaluation conditions (Sec. 6 /
+E.3): greedy target (temp 0), greedy drafting with temp-1 signals, cost
+model priced by the pair's speed ratio c.  This container is CPU-only, so
+"speed (tokens/s)" is calibrated: AR target decoding is assigned the paper's
+measured AR tokens/s for the corresponding model pair, and engine speeds
+scale by the cost-model speedup.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from typing import Dict, List, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import hrad as H  # noqa: E402
+from repro.data.synthetic import ZipfMarkov  # noqa: E402
+from repro.runtime import hrad_data  # noqa: E402
+from repro.runtime.cost_model import CostModel  # noqa: E402
+from repro.runtime.engines import (AdaEDLEngine, AutoregressiveEngine,  # noqa: E402
+                                   ConfidenceSDEngine, EngineConfig,
+                                   LookaheadEngine, PEARLEngine, SpSEngine)
+from repro.runtime.specbranch import SpecBranchEngine  # noqa: E402
+from repro.training.pairs import VOCAB, get_pair  # noqa: E402
+
+CACHE_DIR = os.environ.get("REPRO_PAIR_CACHE", ".cache/pairs")
+
+# paper Sec. 6: c per pair; AR tokens/s calibration from Table 2 (Speed of
+# the 1.00x AR baseline ~= SpS speed / SpS speedup)
+PAIR_C = {"misaligned": 15.0, "aligned": 5.0}
+PAIR_AR_TPS = {"misaligned": 30.5, "aligned": 7.1}
+
+N_PROMPTS = int(os.environ.get("REPRO_BENCH_PROMPTS", "3"))
+N_NEW = int(os.environ.get("REPRO_BENCH_TOKENS", "48"))
+
+
+def default_ecfg(kind: str, **kw) -> EngineConfig:
+    # signal_temperature=0.3 calibrates the tiny drafts' confidence onto the
+    # paper's operating range (accepted ~0.65-0.85, rejected ~0.35 — cf.
+    # Fig. 14/15); epsilon sits between the two modes.  branch_mode="topk"
+    # is Eq. 7's literal Top-K (lossless under the greedy target used here).
+    # gamma_branch_override=gamma: our tiny drafts are far weaker relative
+    # to c than the paper's pairs, so c-length branch continuations
+    # over-draft (RB inflates with no speedup gain); see EXPERIMENTS.md.
+    base = dict(gamma=4, k_max=6, epsilon=0.5, c=PAIR_C[kind],
+                temperature=0.0, draft_temperature=0.0,
+                signal_temperature=0.3, branch_mode="topk",
+                gamma_branch_override=4, max_len=2048)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def prompts(n: int = N_PROMPTS, length: int = 12, seed: int = 11):
+    zm = ZipfMarkov(vocab=VOCAB, seed=7)
+    return zm.prompts(n, length, seed=seed)
+
+
+def hrad_for_pair(kind: str, ecfg: Optional[EngineConfig] = None,
+                  k_layers: int = 4):
+    """Train (or load cached) H-RAD for a pair."""
+    path = os.path.join(CACHE_DIR, f"hrad-{kind}-K{k_layers}.npz")
+    dp, dcfg, tp, tcfg = get_pair(kind)
+    ecfg = ecfg or default_ecfg(kind, hrad_k_layers=k_layers)
+    d_in = (k_layers + 1) * tcfg.d_model
+    if os.path.exists(path):
+        data = np.load(path)
+        return {k: data[k] for k in data.files}
+    zm = ZipfMarkov(vocab=VOCAB, seed=7)
+    z, labels = hrad_data.collect(
+        dp, dcfg, tp, tcfg, zm.prompts(6, 12, seed=5), 48,
+        ecfg._replace() if hasattr(ecfg, "_replace") else ecfg)
+    hcfg = H.HRADConfig(k_layers=k_layers, d_model=tcfg.d_model, epochs=12,
+                        lr=1e-3)
+    params, metrics = H.train_mlp(z, labels, hcfg)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+    return params
+
+
+def build_engines(kind: str, ecfg: Optional[EngineConfig] = None,
+                  names: Optional[List[str]] = None,
+                  with_hrad: bool = True) -> Dict[str, object]:
+    dp, dcfg, tp, tcfg = get_pair(kind)
+    ecfg = ecfg or default_ecfg(kind)
+    hp = hrad_for_pair(kind, ecfg) if with_hrad else None
+    all_engines = {
+        "autoregressive": lambda: AutoregressiveEngine(tp, tcfg, ecfg),
+        "sps": lambda: SpSEngine(dp, dcfg, tp, tcfg, ecfg),
+        "adaedl": lambda: AdaEDLEngine(dp, dcfg, tp, tcfg, ecfg),
+        "confidence-sd": lambda: ConfidenceSDEngine(dp, dcfg, tp, tcfg,
+                                                    ecfg),
+        "lookahead": lambda: LookaheadEngine(tp, tcfg, ecfg),
+        "pearl": lambda: PEARLEngine(dp, dcfg, tp, tcfg, ecfg),
+        "specbranch": lambda: SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
+                                               hrad_params=hp),
+    }
+    names = names or list(all_engines)
+    return {n: all_engines[n]() for n in names}
+
+
+def run_engine(engine, kind: str, n_new: int = N_NEW, seed: int = 0,
+               n_prompts: int = N_PROMPTS) -> Dict[str, float]:
+    cost = CostModel(c=PAIR_C[kind])
+    reps = []
+    for i, p in enumerate(prompts(n_prompts)):
+        r = engine.generate(p, n_new, jax.random.PRNGKey(seed + i))
+        rep = r.report(cost)
+        rep["tokens_per_sec"] = PAIR_AR_TPS[kind] * rep["speedup"]
+        reps.append(rep)
+    return {k: float(np.mean([x[k] for x in reps])) for k in reps[0]}
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

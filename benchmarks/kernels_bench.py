@@ -1,0 +1,96 @@
+"""Pallas kernel microbenchmarks (CPU interpret mode) vs pure-jnp oracles.
+
+Interpret-mode timings are NOT TPU performance — they validate plumbing and
+give the ref-vs-kernel call overhead; TPU roofline expectations are derived
+analytically in EXPERIMENTS.md §Roofline (kernels section).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                      # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def main(print_csv: bool = True) -> list:
+    lines = []
+    ks = jax.random.split(KEY, 8)
+    print("\n# kernel microbench (CPU interpret; name, us_per_call)")
+
+    B, T, H, KV, hd, S = 1, 64, 8, 4, 64, 256
+    q = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(S - T, S), (B, T))
+    kp = jnp.arange(S)[None].repeat(B, 0)
+    t_kern = _time(lambda: ops.flash_attention(q, k, v, qp, kp, bq=64,
+                                               bk=64))
+    t_ref = _time(lambda: ref.attention_ref(q, k, v, qp, kp))
+    flops = 4 * B * T * S * H * hd
+    lines.append(csv_line("kernel_flash_attention", t_kern,
+                          f"ref_us={t_ref:.1f};flops={flops}"))
+    print(lines[-1])
+
+    B2, T2, E, N = 1, 128, 64, 16
+    x = jax.random.normal(ks[3], (B2, T2, E))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (B2, T2, E)))
+    Bm = jax.random.normal(ks[5], (B2, T2, N))
+    Cm = jax.random.normal(ks[6], (B2, T2, N))
+    A = -jnp.exp(jax.random.normal(ks[7], (E, N)) * 0.2)
+    D = jnp.ones((E,))
+    h0 = jnp.zeros((B2, E, N))
+    t_kern = _time(lambda: ops.ssm_scan(x, dt, Bm, Cm, A, D, h0, bT=32,
+                                        bE=32)[0])
+    t_ref = _time(lambda: ref.ssm_scan_ref(x, dt, Bm, Cm, A, D, h0)[0])
+    lines.append(csv_line("kernel_ssm_scan", t_kern, f"ref_us={t_ref:.1f}"))
+    print(lines[-1])
+
+    R, V = 8, 4096
+    p = jax.random.normal(ks[0], (R, V))
+    qv = jax.random.normal(ks[1], (R, V))
+    toks = jax.random.randint(ks[2], (R,), 0, V)
+    u = jax.random.uniform(ks[3], (R,))
+    w = jax.random.uniform(ks[4], (R,))
+    t_kern = _time(lambda: ops.verify_accept(p, qv, toks, u, w)[0])
+    t_ref = _time(lambda: ref.verify_accept_ref(p, qv, toks, u, w)[0])
+    lines.append(csv_line("kernel_verify_accept", t_kern,
+                          f"ref_us={t_ref:.1f}"))
+    print(lines[-1])
+
+    kb, Sp, Ss = 4, 128, 8
+    pk = jax.random.normal(ks[5], (1, Sp, KV, hd))
+    pv = jax.random.normal(ks[6], (1, Sp, KV, hd))
+    sk = jax.random.normal(ks[7], (kb, Ss, KV, hd))
+    sv = jax.random.normal(ks[0], (kb, Ss, KV, hd))
+    qb = jax.random.normal(ks[1], (kb, 1, H, hd))
+    ppos = jnp.arange(Sp)[None]
+    spos = jnp.broadcast_to(jnp.arange(Sp, Sp + Ss), (kb, Ss))
+    qpos = jnp.full((kb, 1), Sp + Ss)
+    t_kern = _time(lambda: ops.branch_decode_attention(
+        qb, pk, pv, ppos, sk, sv, spos, qpos))
+    t_ref = _time(lambda: ref.branch_decode_ref(
+        qb, pk, pv, ppos, sk, sv, spos, qpos))
+    # HBM traffic saved by sharing the prefix across k branches:
+    saved = (kb - 1) * Sp * KV * hd * 2 * 4
+    lines.append(csv_line("kernel_branch_decode", t_kern,
+                          f"ref_us={t_ref:.1f};prefix_bytes_saved={saved}"))
+    print(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    main()

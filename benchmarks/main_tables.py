@@ -1,0 +1,41 @@
+"""Tables 2-3 reproduction: all engines x {misaligned, aligned} pairs.
+
+Reports mean accepted length M, cost-model speedup over autoregressive,
+calibrated tokens/s and rollback rate.  Expected orderings (paper):
+SpecBranch > PEARL > AdaEDL ~ SpS > Lookahead; SpecBranch's edge largest on
+the misaligned pair.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (build_engines, csv_line, default_ecfg,
+                               run_engine)
+
+ENGINES = ["autoregressive", "sps", "adaedl", "lookahead", "pearl",
+           "specbranch"]
+
+
+def main(print_csv: bool = True) -> list:
+    lines = []
+    for kind in ("misaligned", "aligned"):
+        print(f"\n# Table 2/3 proxy — {kind} pair "
+              f"(paper regime: {'68M&13B' if kind == 'misaligned' else 'LLaMA-3.1 8B&70B'})")
+        print(f"{'engine':15s} {'M':>6s} {'speedup':>8s} {'tok/s':>7s} "
+              f"{'RB':>6s}")
+        engines = build_engines(kind, names=ENGINES)
+        for name, eng in engines.items():
+            t0 = time.time()
+            rep = run_engine(eng, kind)
+            us = (time.time() - t0) * 1e6
+            print(f"{name:15s} {rep['M']:6.2f} {rep['speedup']:8.2f} "
+                  f"{rep['tokens_per_sec']:7.1f} {rep['rollback_rate']:6.2f}")
+            lines.append(csv_line(
+                f"main_{kind}_{name}", us,
+                f"M={rep['M']:.2f};speedup={rep['speedup']:.3f};"
+                f"RB={rep['rollback_rate']:.3f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Fig. 5 / Fig. 11 reproduction: rollback rates per engine and pair.
+Paper claim: SpecBranch cuts rollback ~50% vs PEARL on misaligned pairs,
+~10% on aligned pairs."""
+from __future__ import annotations
+
+from benchmarks.common import build_engines, csv_line, run_engine
+
+ENGINES = ["sps", "adaedl", "pearl", "specbranch"]
+
+
+def main(print_csv: bool = True) -> list:
+    lines = []
+    for kind in ("misaligned", "aligned"):
+        print(f"\n# Fig.5 — rollback rates, {kind} pair")
+        rb = {}
+        for name, eng in build_engines(kind, names=ENGINES).items():
+            rep = run_engine(eng, kind)
+            rb[name] = rep["rollback_rate"]
+            print(f"{name:12s} RB={rep['rollback_rate']:.3f}  "
+                  f"(rollback_tokens={rep['rollback_tokens']:.1f})")
+            lines.append(csv_line(f"rollback_{kind}_{name}", 0.0,
+                                  f"RB={rep['rollback_rate']:.4f}"))
+        if rb.get("pearl", 0) > 0:
+            red = 1 - rb["specbranch"] / rb["pearl"]
+            print(f"SpecBranch reduces PEARL rollback by {red*100:.0f}%")
+            lines.append(csv_line(f"rollback_{kind}_reduction", 0.0,
+                                  f"vs_pearl={red:.3f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

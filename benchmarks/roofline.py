@@ -1,0 +1,54 @@
+"""§Roofline report: reads the dry-run JSON dumps (experiments/dryrun/) and
+prints the per-(arch x shape x mesh) roofline table — compute / memory /
+collective terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_line
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_all():
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def main(print_csv: bool = True) -> list:
+    lines = []
+    runs = load_all()
+    if not runs:
+        print(f"# no dry-run dumps in {DRYRUN_DIR} — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return [csv_line("roofline_missing", 0.0, "no_dumps")]
+    ok = [r for r in runs if r.get("status") == "ok"]
+    print(f"\n# §Roofline — {len(ok)} compiled runs "
+          f"({len(runs) - len(ok)} skipped/failed)")
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'GiB/dev':>8s} "
+           f"{'t_comp(ms)':>10s} {'t_mem(ms)':>10s} {'t_coll(ms)':>10s} "
+           f"{'bound':>10s} {'useful':>7s}")
+    print(hdr)
+    for r in ok:
+        rl = r["roofline"]
+        useful = r.get("useful_flops_ratio")
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['per_device_total_gb']:8.2f} "
+              f"{rl['t_compute']*1e3:10.3f} {rl['t_memory']*1e3:10.3f} "
+              f"{rl['t_collective']*1e3:10.3f} {rl['dominant']:>10s} "
+              f"{useful if useful is None else format(useful, '7.2f')}")
+        lines.append(csv_line(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            max(rl['t_compute'], rl['t_memory'], rl['t_collective']) * 1e6,
+            f"dominant={rl['dominant']};gib={r['per_device_total_gb']};"
+            f"useful={useful}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

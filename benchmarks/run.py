@@ -1,0 +1,73 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines at the end (and per-section
+human-readable tables as it goes).
+
+  theory            Fig. 2  — Theorem 1 curves + Monte-Carlo check
+  main_tables       Tab 2/3 — engines x pairs: M, speedup, tokens/s
+  rollback          Fig. 5  — rollback rates
+  ablation          Fig. 6  — w/o branch, w/o H-RAD
+  threshold         Tab 4   — epsilon sensitivity
+  feature_layers    Tab 5   — H-RAD K sweep
+  memory            Fig. 7a — branch cache overhead
+  token_distribution Fig.1b — truncated-geometric fit
+  lossless          Tab 6   — greedy exact match + T>0 marginals
+  kernels_bench     —       — Pallas kernel microbench
+  roofline          §Roofline — dry-run derived terms
+
+Set REPRO_BENCH_FAST=1 (default) for the quick pass; =0 for the full pass.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SECTIONS = [
+    "theory",
+    "kernels_bench",
+    "memory",
+    "token_distribution",
+    "main_tables",
+    "rollback",
+    "ablation",
+    "threshold",
+    "feature_layers",
+    "feature_decay",
+    "lossless",
+    "roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    all_lines = []
+    failures = []
+    t0 = time.time()
+    for name in SECTIONS:
+        if only and name != only:
+            continue
+        print(f"\n{'='*70}\n== benchmark: {name}\n{'='*70}")
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            lines = mod.main() or []
+            all_lines.extend(lines)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, str(e)))
+    print(f"\n{'='*70}\n== CSV (name,us_per_call,derived) — "
+          f"{time.time()-t0:.0f}s total\n{'='*70}")
+    for line in all_lines:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} benchmark section(s) FAILED: "
+              f"{[f[0] for f in failures]}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Table 4 reproduction: sensitivity to the stop threshold epsilon.
+
+Implicit (confidence), implicit (entropy / AdaEDL) and hybrid (H-RAD + SD,
+i.e. SpecBranch w/o branch) across epsilon.  Paper: the hybrid's speed is
+far flatter in epsilon than the implicit methods'.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (PAIR_AR_TPS, csv_line, default_ecfg,
+                               hrad_for_pair, run_engine)
+from repro.runtime.engines import AdaEDLEngine, ConfidenceSDEngine
+from repro.runtime.specbranch import SpecBranchEngine
+from repro.training.pairs import get_pair
+
+EPSILONS = (0.1, 0.2, 0.4, 0.6, 0.8)
+KIND = "misaligned"
+
+
+def main(print_csv: bool = True) -> list:
+    lines = []
+    dp, dcfg, tp, tcfg = get_pair(KIND)
+    hp = hrad_for_pair(KIND)
+    print(f"\n# Table 4 — epsilon sensitivity ({KIND} pair, tokens/s)")
+    print(f"{'eps':>5s} {'conf':>7s} {'entropy':>8s} {'H-RAD':>7s}")
+    speeds = {"conf": [], "entropy": [], "hrad": []}
+    for eps in EPSILONS:
+        ecfg = default_ecfg(KIND, epsilon=eps)
+        r_conf = run_engine(ConfidenceSDEngine(dp, dcfg, tp, tcfg, ecfg),
+                            KIND)
+        r_ent = run_engine(AdaEDLEngine(dp, dcfg, tp, tcfg, ecfg), KIND)
+        ecfg_h = default_ecfg(KIND, epsilon=eps, use_branch=False)
+        r_hrad = run_engine(
+            SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg_h, hrad_params=hp),
+            KIND)
+        row = (r_conf["tokens_per_sec"], r_ent["tokens_per_sec"],
+               r_hrad["tokens_per_sec"])
+        for k, v in zip(speeds, row):
+            speeds[k].append(v)
+        print(f"{eps:5.1f} {row[0]:7.1f} {row[1]:8.1f} {row[2]:7.1f}")
+        lines.append(csv_line(f"threshold_eps{eps}", 0.0,
+                              f"conf={row[0]:.1f};entropy={row[1]:.1f};"
+                              f"hrad={row[2]:.1f}"))
+    for k, v in speeds.items():
+        spread = (max(v) - min(v)) / max(max(v), 1e-9)
+        print(f"{k}: relative spread over eps = {spread*100:.0f}%")
+        lines.append(csv_line(f"threshold_spread_{k}", 0.0,
+                              f"spread={spread:.3f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

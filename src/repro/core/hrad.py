@@ -1,0 +1,242 @@
+"""H-RAD — Hybrid Rollback-Aware Draft structure (Sec. 5.1, Eq. 4-6).
+
+A lightweight 3-layer MLP maps
+
+    z_t = concat(h_{t-1}^{1..K}, e_t)  in  R^{K*D + D_emb}
+
+(the target model's hidden state after each of the last K scan points,
+at the previous position, plus the embedding of the newest token) to a
+3-class signal
+
+    s_t = 0  all-reject   (hard: branch at the first token of this round)
+    s_t = 1  confidence   (soft: branch where draft confidence < eps)
+    s_t = 2  all-accept   (hard: branch at the first token of next round)
+
+Training is offline (Sec. E.4): AdamW, label smoothing 0.1, class
+re-weighting + SMOTE-style minority oversampling, dropout 0.4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jax.Array]
+
+HIDDEN = (256, 64)
+N_CLASSES = 3
+DROPOUT = 0.4
+
+
+@dataclasses.dataclass
+class HRADConfig:
+    k_layers: int = 4          # K — how many trailing feature points to use
+    d_model: int = 0           # filled from the target ModelConfig
+    lr: float = 5e-5
+    weight_decay: float = 1e-4
+    epochs: int = 20
+    batch_size: int = 32
+    label_smoothing: float = 0.1
+    seed: int = 0
+
+    @property
+    def d_in(self) -> int:
+        return (self.k_layers + 1) * self.d_model
+
+
+# ---------------------------------------------------------------------------
+# feature construction (Eq. 4)
+# ---------------------------------------------------------------------------
+
+def build_feature(features: jax.Array, embed: jax.Array, k_layers: int
+                  ) -> jax.Array:
+    """features: (n_points, B, D) from model aux; embed: (B, D) of the next
+    token.  Returns z: (B, (K+1)*D).  Uses the last K feature points (the
+    deepest layers — Sec. 5.1 takes the target's last K layers)."""
+    n = features.shape[0]
+    k = min(k_layers, n)
+    sel = features[n - k:]                       # (k, B, D)
+    if k < k_layers:                             # pad by repeating deepest
+        sel = jnp.concatenate(
+            [jnp.repeat(sel[:1], k_layers - k, axis=0), sel], axis=0)
+    z = jnp.concatenate(
+        [sel.transpose(1, 0, 2).reshape(embed.shape[0], -1),
+         embed], axis=-1)
+    return z.astype(jnp.float32)
+
+
+def token_embedding(model_params, token: jax.Array) -> jax.Array:
+    """e_t for a (B,) token id batch."""
+    return model_params["embed"][token].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_in: int) -> Params:
+    dims = (d_in,) + HIDDEN + (N_CLASSES,)
+    keys = jax.random.split(key, len(dims) - 1)
+    p: Params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"w{i}"] = jax.random.normal(keys[i], (a, b)) * np.sqrt(2.0 / a)
+        p[f"b{i}"] = jnp.zeros((b,))
+    return p
+
+
+def apply_mlp(p: Params, z: jax.Array, *, train: bool = False,
+              key=None) -> jax.Array:
+    """z: (B, d_in) -> logits (B, 3)."""
+    h = z
+    n_layers = len([k for k in p if k.startswith("w")])
+    for i in range(n_layers):
+        h = h @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+            if train and key is not None:
+                key, sub = jax.random.split(key)
+                keep = jax.random.bernoulli(sub, 1.0 - DROPOUT, h.shape)
+                h = jnp.where(keep, h / (1.0 - DROPOUT), 0.0)
+    return h
+
+
+def predict(p: Params, z: jax.Array) -> jax.Array:
+    """s_t = argmax softmax(MLP(z)) (Eq. 5).  Returns (B,) int32 in {0,1,2}."""
+    return jnp.argmax(apply_mlp(p, z), axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# offline training (Sec. E.4)
+# ---------------------------------------------------------------------------
+
+def _smote(x: np.ndarray, y: np.ndarray, seed: int = 0,
+           k_neighbors: int = 5) -> Tuple[np.ndarray, np.ndarray]:
+    """Minimal SMOTE: oversample minority classes to the majority count by
+    interpolating each sample with one of its k nearest same-class
+    neighbours."""
+    rng = np.random.default_rng(seed)
+    counts = np.bincount(y, minlength=N_CLASSES)
+    target = counts.max()
+    xs, ys = [x], [y]
+    for c in range(N_CLASSES):
+        xc = x[y == c]
+        need = int(target - counts[c])
+        if need <= 0 or len(xc) == 0:
+            continue
+        if len(xc) == 1:
+            xs.append(np.repeat(xc, need, axis=0))
+            ys.append(np.full(need, c, dtype=y.dtype))
+            continue
+        idx = rng.integers(0, len(xc), size=need)
+        base = xc[idx]
+        # nearest neighbours among a subsample (cheap approximate kNN)
+        sub = xc[rng.integers(0, len(xc), size=(need, k_neighbors))]
+        d = np.linalg.norm(sub - base[:, None], axis=-1)
+        d[d == 0] = np.inf
+        nn = sub[np.arange(need), np.argmin(d, axis=1)]
+        lam = rng.random((need, 1))
+        xs.append(base + lam * (nn - base))
+        ys.append(np.full(need, c, dtype=y.dtype))
+    return np.concatenate(xs), np.concatenate(ys)
+
+
+def train_mlp(z: np.ndarray, labels: np.ndarray, cfg: HRADConfig,
+              verbose: bool = False) -> Tuple[Params, Dict[str, float]]:
+    """Offline H-RAD training.  z: (N, d_in) float32; labels: (N,) in {0,1,2}.
+
+    Returns (params, metrics) with metrics = train/val accuracy + per-class
+    recall on a held-out 10% split.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    n = len(z)
+    perm = rng.permutation(n)
+    z, labels = z[perm], labels[perm]
+    n_val = max(1, n // 10)
+    zv, yv = z[:n_val], labels[:n_val]
+    zt, yt = z[n_val:], labels[n_val:]
+
+    # standardize (SMOTE in standardized space, per E.4)
+    mu, sd = zt.mean(0), zt.std(0) + 1e-6
+    zt_s = (zt - mu) / sd
+    zt_s, yt = _smote(zt_s, yt, seed=cfg.seed)
+    zt = zt_s * sd + mu
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_mlp(key, z.shape[1])
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+
+    eps_ls = cfg.label_smoothing
+
+    def loss_fn(p, zb, yb, dk):
+        logits = apply_mlp(p, zb, train=True, key=dk)
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(yb, N_CLASSES)
+        smoothed = onehot * (1 - eps_ls) + eps_ls / N_CLASSES
+        return -jnp.mean(jnp.sum(smoothed * logp, axis=-1))
+
+    @jax.jit
+    def step(p, m, v, zb, yb, dk, t, lr):
+        g = jax.grad(loss_fn)(p, zb, yb, dk)
+        b1, b2, e = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+        # decoupled weight decay + gradient clipping (E.4)
+        gnorm = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(mh)))
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-8))
+        p = jax.tree.map(
+            lambda a, mm, vv: a - lr * (scale * mm / (jnp.sqrt(vv) + e)
+                                        + cfg.weight_decay * a),
+            p, mh, vh)
+        return p, m, v
+
+    lr = cfg.lr
+    best_val, patience, t = -1.0, 0, 0
+    nb = max(1, len(zt) // cfg.batch_size)
+    for epoch in range(cfg.epochs):
+        order = rng.permutation(len(zt))
+        for b in range(nb):
+            sel = order[b * cfg.batch_size:(b + 1) * cfg.batch_size]
+            t += 1
+            key, dk = jax.random.split(key)
+            params, opt_m, opt_v = step(
+                params, opt_m, opt_v, jnp.asarray(zt[sel]),
+                jnp.asarray(yt[sel]), dk, t, lr)
+        val_acc = float(np.mean(
+            np.asarray(predict(params, jnp.asarray(zv))) == yv))
+        if val_acc > best_val + 1e-4:
+            best_val, patience = val_acc, 0
+        else:
+            patience += 1
+            if patience >= 2:                 # ReduceLROnPlateau(factor=.5)
+                lr *= 0.5
+            if patience >= 5:                 # early stopping
+                break
+        if verbose:
+            print(f"  epoch {epoch}: val_acc={val_acc:.3f} lr={lr:.2e}")
+
+    pred_v = np.asarray(predict(params, jnp.asarray(zv)))
+    recalls = {}
+    for c in range(N_CLASSES):
+        m = yv == c
+        recalls[f"recall_{c}"] = float((pred_v[m] == c).mean()) if m.any() else float("nan")
+    metrics = {"val_acc": best_val, **recalls,
+               "train_acc": float(np.mean(
+                   np.asarray(predict(params, jnp.asarray(zt[:2048]))) ==
+                   yt[:2048]))}
+    return params, metrics
+
+
+def label_from_outcome(n_accepted: int, gamma: int) -> int:
+    """Dataset label for a finished verification round (Sec. 6, H-RAD
+    Training): 0 = nothing accepted, 2 = everything accepted, 1 = partial."""
+    if n_accepted <= 0:
+        return 0
+    if n_accepted >= gamma:
+        return 2
+    return 1

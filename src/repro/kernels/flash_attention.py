@@ -1,0 +1,178 @@
+"""Pallas TPU attention kernel (prefill + decode + shared-prefix branches).
+
+One online-softmax kernel covers all three uses:
+
+  * prefill flash attention (causal / sliding-window / softcap / GQA),
+  * multi-token decode against a long KV cache (position-mask driven),
+  * branch decode with a *shared prefix* (Eq. 8): the prefix KV block is
+    stored ONCE and broadcast across the k branches via the BlockSpec
+    index_map (branch row -> prefix row 0), so VMEM/HBM traffic for the
+    prefix is O(S_prefix) instead of O(k * S_prefix).  The suffix pass runs
+    per-branch, and ops.branch_decode_attention merges the two passes with
+    the standard (m, l) flash combination.
+
+Layout: q is pre-arranged to (B, KV, G, T, hd) (G = H // KV query groups per
+KV head); k/v are (B, KV, S, hd).  Grid = (B, KV, nq, nk); the kv axis is
+innermost so the (m, l, acc) running state lives in VMEM scratch across kv
+blocks.  Masking is position-driven: q_pos (B, T), k_pos (B, S) with -1
+marking invalid (unwritten cache) slots — exactly the runtime's ring-buffer
+convention.
+
+Tile sizes default to (bq, bk) = (128, 128): MXU-aligned on the contraction
+(hd >= 64 in all assigned configs) and small enough that the working set
+q(128*hd) + k/v(2*128*hd) + acc(G*128*hd) stays well under VMEM for G <= 8.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref,
+            o_ref, m_out_ref, l_out_ref,
+            m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, cap: Optional[float], scale: float,
+            nk: int, out_stats: bool):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+    logits = jax.lax.dot_general(
+        q, k, (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (G, bq, bk)
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+    qp = qpos_ref[0]                                   # (bq,)
+    kp = kpos_ref[0]                                   # (bk,)
+    mask = (kp >= 0)[None, None, :]
+    if causal:
+        mask &= kp[None, None, :] <= qp[None, :, None]
+    if window > 0:
+        mask &= (qp[None, :, None] - kp[None, None, :]) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    v = v_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+    pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+        if out_stats:
+            m_out_ref[0, 0] = m_scr[...]
+            l_out_ref[0, 0] = l_scr[...]
+
+
+def _pad_to(x, axis, mult, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "cap", "bq", "bk", "out_stats",
+                     "shared_kv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, k_pos: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    cap: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    out_stats: bool = False, shared_kv: bool = False,
+                    interpret: bool = True):
+    """Online-softmax attention.
+
+    q: (B, T, H, hd); k, v: (Bk, S, KV, hd); q_pos: (B, T); k_pos: (Bk, S).
+    shared_kv=True broadcasts a single KV batch row (Bk == 1) across all B
+    query rows (the shared-prefix branch pass).
+    Returns out (B, T, H, hd) [, m, l of shape (B, KV, G, T) if out_stats].
+    """
+    B, T, H, hd = q.shape
+    Bk, S, KV, _ = k.shape
+    assert (Bk == B) or (shared_kv and Bk == 1)
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(B, T, KV, G, hd).transpose(0, 2, 3, 1, 4)  # (B,KV,G,T,hd)
+    kr = k.transpose(0, 2, 1, 3)                              # (Bk,KV,S,hd)
+    vr = v.transpose(0, 2, 1, 3)
+
+    bq_ = min(bq, max(8, T))
+    bk_ = min(bk, max(8, S))
+    qr = _pad_to(qr, 3, bq_)
+    q_pos_p = _pad_to(q_pos, 1, bq_, value=-(10 ** 9))
+    kr = _pad_to(kr, 2, bk_)
+    vr = _pad_to(vr, 2, bk_)
+    k_pos_p = _pad_to(k_pos, 1, bk_, value=-1)
+    Tp, Sp = qr.shape[3], kr.shape[2]
+    nq, nk = Tp // bq_, Sp // bk_
+
+    kb = (lambda b, h, iq, ik: (0, h, ik, 0)) if shared_kv else \
+         (lambda b, h, iq, ik: (b, h, ik, 0))
+    kpb = (lambda b, h, iq, ik: (0, ik)) if shared_kv else \
+          (lambda b, h, iq, ik: (b, ik))
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, cap=cap, scale=scale, nk=nk,
+        out_stats=out_stats)
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, KV, G, Tp, hd), q.dtype),
+        jax.ShapeDtypeStruct((B, KV, G, Tp), jnp.float32),
+        jax.ShapeDtypeStruct((B, KV, G, Tp), jnp.float32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, G, bq_, hd), lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+        pl.BlockSpec((1, 1, G, bq_), lambda b, h, iq, ik: (b, h, 0, iq)),
+        pl.BlockSpec((1, 1, G, bq_), lambda b, h, iq, ik: (b, h, 0, iq)),
+    ]
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq_), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bk_), kpb),
+            pl.BlockSpec((1, 1, G, bq_, hd),
+                         lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((1, 1, bk_, hd), kb),
+            pl.BlockSpec((1, 1, bk_, hd), kb),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((G, bq_), jnp.float32),
+            pltpu.VMEM((G, bq_), jnp.float32),
+            pltpu.VMEM((G, bq_, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos_p, k_pos_p, qr, kr, vr)
+
+    out = o[:, :, :, :T].transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
+    if out_stats:
+        return out, m[:, :, :, :T], l[:, :, :, :T]
+    return out

@@ -1,0 +1,80 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; on a
+real v5e slice set REPRO_PALLAS_INTERPRET=0 or pass interpret=False).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssm_scan as _ssm
+from repro.kernels import verify_accept as _va
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                    cap: Optional[float] = None, bq=128, bk=128,
+                    interpret: Optional[bool] = None):
+    """Prefill/decode attention.  See kernels.flash_attention."""
+    it = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window, cap=cap, bq=bq, bk=bk,
+                               interpret=it)
+
+
+def branch_decode_attention(q, prefix_k, prefix_v, prefix_pos,
+                            suffix_k, suffix_v, suffix_pos, q_pos, *,
+                            cap: Optional[float] = None,
+                            interpret: Optional[bool] = None):
+    """Shared-prefix branch decode (Eq. 8).
+
+    q: (k, Tq, H, hd) — one row per branch; prefix_k/v: (1, Sp, KV, hd)
+    stored ONCE; suffix_k/v: (k, Ss, KV, hd) per-branch diverging KV.
+    Two flash passes (prefix broadcast via index_map, suffix per-branch)
+    merged with the standard (m, l) combination.
+    """
+    it = _default_interpret() if interpret is None else interpret
+    o1, m1, l1 = _fa.flash_attention(
+        q, prefix_k, prefix_v, q_pos, prefix_pos, causal=True, cap=cap,
+        out_stats=True, shared_kv=True, interpret=it)
+    o2, m2, l2 = _fa.flash_attention(
+        q, suffix_k, suffix_v, q_pos, suffix_pos, causal=True, cap=cap,
+        out_stats=True, interpret=it)
+    m = jnp.maximum(m1, m2)
+    w1 = l1 * jnp.exp(m1 - m)
+    w2 = l2 * jnp.exp(m2 - m)
+    denom = jnp.maximum(w1 + w2, 1e-20)
+    kb, Tq, H, hd = q.shape
+    KV = prefix_k.shape[2]
+    G = H // KV
+
+    def expand(w):  # (B, KV, G, T) -> (B, T, H, 1)
+        return w.transpose(0, 3, 1, 2).reshape(kb, Tq, H)[..., None]
+
+    out = (o1.astype(jnp.float32) * expand(w1 / denom)
+           + o2.astype(jnp.float32) * expand(w2 / denom))
+    return out.astype(q.dtype)
+
+
+def ssm_scan(x, dt, Bm, Cm, A, D, h0, *, bT=128, bE=256,
+             interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    it = _default_interpret() if interpret is None else interpret
+    return _ssm.ssm_scan(x, dt, Bm, Cm, A, D, h0, bT=bT, bE=bE, interpret=it)
+
+
+def verify_accept(p_logits, q_logits, tokens, uniforms, res_uniforms, *,
+                  interpret: Optional[bool] = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _va.verify_accept(p_logits, q_logits, tokens, uniforms,
+                             res_uniforms, interpret=it)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+The scan h_t = exp(dt_t * A) h_{t-1} + (dt_t x_t) B_t ;  y_t = <h_t, C_t> + D x_t
+is sequential in T but embarrassingly parallel in (batch, d_inner).  TPU
+adaptation (DESIGN.md §3): chunk the sequence, keep the (bE, N) state tile
+resident in VMEM scratch across chunk grid steps (the TPU grid is executed
+sequentially with the innermost axis fastest), and block d_inner so each
+program's working set — x/dt chunks (bT, bE), B/C chunks (bT, N), state
+(bE, N) — stays in VMEM.  The within-chunk recurrence is a fori_loop over
+bT steps of pure VREG work; the matmul-shaped contractions (drive outer
+product and <h, C>) map onto the VPU/MXU.
+
+Grid = (B, nE, nT) with nT innermost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+            y_ref, hT_ref, h_scr, *, bT: int, nT: int, T: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)      # (bE, N)
+
+    x = x_ref[0].astype(jnp.float32)        # (bT, bE)
+    dt = dt_ref[0].astype(jnp.float32)      # (bT, bE)
+    Bm = b_ref[0].astype(jnp.float32)       # (bT, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (bT, N)
+    A = a_ref[...].astype(jnp.float32)      # (bE, N)
+    D = d_ref[...].astype(jnp.float32)      # (bE,)
+
+    def step(t, carry):
+        h, ys = carry
+        d_t = dt[t]                          # (bE,)
+        decay = jnp.exp(d_t[:, None] * A)    # (bE, N)
+        drive = (d_t * x[t])[:, None] * Bm[t][None, :]
+        h = decay * h + drive
+        y_t = (h * Cm[t][None, :]).sum(-1) + D * x[t]   # (bE,)
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y_t, t, 0)
+        return h, ys
+
+    ys0 = jnp.zeros((bT,) + h_scr.shape[:1], jnp.float32)
+    # only iterate over valid timesteps in the (padded) last chunk
+    valid = jnp.minimum(bT, T - it * bT)
+    h, ys = jax.lax.fori_loop(0, valid, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(it == nT - 1)
+    def _finish():
+        hT_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bT", "bE", "interpret"))
+def ssm_scan(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+             A: jax.Array, D: jax.Array, h0: jax.Array, *,
+             bT: int = 128, bE: int = 256, interpret: bool = True
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan.
+
+    x, dt: (B, T, E); Bm, Cm: (B, T, N); A: (E, N); D: (E,); h0: (B, E, N).
+    Returns (y (B, T, E) float32, hT (B, E, N) float32).
+    """
+    B, T, E = x.shape
+    N = A.shape[1]
+    bT_ = min(bT, T)
+    bE_ = min(bE, E)
+    padT = (-T) % bT_
+    padE = (-E) % bE_
+
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, padT), (0, 0))) if padT else a
+
+    def pade(a, axis):
+        if padE == 0:
+            return a
+        w = [(0, 0)] * a.ndim
+        w[axis] = (0, padE)
+        return jnp.pad(a, w)
+
+    xp, dtp = pade(padt(x), 2), pade(padt(dt), 2)
+    Bp, Cp = padt(Bm), padt(Cm)
+    Ap, Dp = pade(A, 0), pade(D, 0)
+    h0p = pade(h0, 1)
+    Tp, Ep = T + padT, E + padE
+    nT, nE = Tp // bT_, Ep // bE_
+
+    kernel = functools.partial(_kernel, bT=bT_, nT=nT, T=T)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, nE, nT),
+        in_specs=[
+            pl.BlockSpec((1, bT_, bE_), lambda b, ie, it: (b, it, ie)),  # x
+            pl.BlockSpec((1, bT_, bE_), lambda b, ie, it: (b, it, ie)),  # dt
+            pl.BlockSpec((1, bT_, N), lambda b, ie, it: (b, it, 0)),     # B
+            pl.BlockSpec((1, bT_, N), lambda b, ie, it: (b, it, 0)),     # C
+            pl.BlockSpec((bE_, N), lambda b, ie, it: (ie, 0)),           # A
+            pl.BlockSpec((bE_,), lambda b, ie, it: (ie,)),               # D
+            pl.BlockSpec((1, bE_, N), lambda b, ie, it: (b, ie, 0)),     # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bT_, bE_), lambda b, ie, it: (b, it, ie)),
+            pl.BlockSpec((1, bE_, N), lambda b, ie, it: (b, ie, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Tp, Ep), jnp.float32),
+            jax.ShapeDtypeStruct((B, Ep, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bE_, N), jnp.float32)],
+        interpret=interpret,
+    )(xp, dtp, Bp, Cp, Ap, Dp, h0p)
+    return y[:, :T, :E], hT[:, :E]

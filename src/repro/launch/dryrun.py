@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, print memory/cost analysis, and dump the roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+other import, including jax) — 512 placeholder host devices stand in for the
+2x16x16 v5e fleet.  Nothing is allocated: inputs are ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config            # noqa: E402
+from repro.launch import steps                            # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.models.config import ModelConfig               # noqa: E402
+from repro.sharding.hlo_analysis import collective_bytes, dot_flops  # noqa: E402
+
+
+def _first(d, *keys, default=0.0):
+    for k in keys:
+        if k in d:
+            return float(d[k])
+    return default
+
+
+def roofline_terms(cost: dict, coll: dict, n_chips: int,
+                   parsed_flops: float = 0.0) -> dict:
+    """Three-term roofline.
+
+    XLA's cost_analysis does NOT fold while-loop trip counts (a layer scan's
+    body is counted once), so FLOPs come from the loop-aware HLO dot parser
+    (per-device; see sharding/hlo_analysis.dot_flops).  HBM bytes are
+    cost_analysis bytes scaled by the same loop multiplier (flop-weighted) —
+    approximate but consistent, since the loop bodies dominate both.
+    """
+    raw_flops = _first(cost, "flops")
+    raw_bytes = (_first(cost, "bytes accessed") or
+                 sum(v for k, v in cost.items()
+                     if k.startswith("bytes accessed")))
+    per_dev_flops = max(parsed_flops, raw_flops)
+    loop_mult = per_dev_flops / max(raw_flops, 1.0)
+    bytes_hbm = raw_bytes * max(1.0, loop_mult)
+    t_compute = per_dev_flops / PEAK_FLOPS_BF16     # per-device quantities
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = coll.get("total", 0.0) / ICI_BW
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)], key=lambda kv: kv[1])[0]
+    return dict(hlo_flops=per_dev_flops * n_chips,
+                hlo_flops_per_device=per_dev_flops,
+                raw_cost_flops=raw_flops, loop_multiplier=loop_mult,
+                hbm_bytes=bytes_hbm * n_chips,
+                collective_bytes=coll.get("total", 0.0),
+                t_compute=t_compute, t_memory=t_memory,
+                t_collective=t_coll, dominant=dominant)
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool, verbose: bool = True,
+            cfg_override: ModelConfig = None,
+            save_hlo: str = None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    ok, why = steps.applicable(cfg, shape)
+    if not ok:
+        return dict(arch=arch, shape=shape, status="skipped", reason=why)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        spec = steps.input_specs(cfg, shape, mesh)
+        with mesh:
+            lowered = jax.jit(
+                spec["fn"], in_shardings=spec["in_shardings"],
+                out_shardings=spec["out_shardings"]).lower(*spec["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        if save_hlo:
+            import gzip
+            os.makedirs(os.path.dirname(save_hlo), exist_ok=True)
+            with gzip.open(save_hlo, "wt") as f:
+                f.write(hlo)
+        coll = collective_bytes(hlo, default_group=n_chips)
+        parsed_flops = dot_flops(hlo)
+        per_dev_bytes = {
+            "argument": getattr(mem, "argument_size_in_bytes", 0),
+            "output": getattr(mem, "output_size_in_bytes", 0),
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+        total_dev = (per_dev_bytes["argument"] + per_dev_bytes["temp"] +
+                     per_dev_bytes["output"])
+        rl = roofline_terms(cost, coll, n_chips, parsed_flops=parsed_flops)
+        # MODEL_FLOPS: 6 N D tokens (training fwd+bwd) or 2 N D (inference)
+        ss = steps.SHAPES[shape]
+        n_active = cfg.active_param_count()
+        tokens = ss.batch * (ss.seq_len if ss.kind != "decode"
+                             else steps.GAMMA_VERIFY)
+        model_flops = (6 if ss.kind == "train" else 2) * n_active * tokens
+        result = dict(
+            arch=arch, shape=shape, status="ok",
+            mesh="2x16x16" if multi_pod else "16x16", n_chips=n_chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            per_device_bytes=per_dev_bytes,
+            per_device_total_gb=round(total_dev / 2**30, 3),
+            cost=dict(cost), collectives=coll,
+            roofline=rl, model_flops=model_flops,
+            useful_flops_ratio=(model_flops / rl["hlo_flops"]
+                                if rl["hlo_flops"] else None),
+        )
+        if verbose:
+            print(f"[OK] {arch} x {shape} ({result['mesh']}): "
+                  f"{result['per_device_total_gb']} GiB/dev, "
+                  f"compute {rl['t_compute']*1e3:.2f} ms, "
+                  f"memory {rl['t_memory']*1e3:.2f} ms, "
+                  f"collective {rl['t_collective']*1e3:.2f} ms "
+                  f"-> {rl['dominant']}-bound "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        return result
+    except Exception as e:  # noqa: BLE001 — a dry-run failure IS the signal
+        if verbose:
+            print(f"[FAIL] {arch} x {shape}: {e}")
+            traceback.print_exc()
+        return dict(arch=arch, shape=shape, status="failed", error=str(e))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(steps.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    runs = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(steps.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                r = run_one(arch, shape, multi_pod=mp,
+                            save_hlo=os.path.join(args.out, "hlo",
+                                                  tag + ".hlo.gz"))
+                runs.append(r)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(r, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in runs)
+    n_skip = sum(r["status"] == "skipped" for r in runs)
+    n_fail = sum(r["status"] == "failed" for r in runs)
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} FAILED ==")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

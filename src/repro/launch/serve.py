@@ -1,0 +1,81 @@
+"""Serving driver: SpecBranch (or any baseline engine) over batched
+requests with the round-robin scheduler.
+
+On this CPU container it serves the trained tiny Zipf-Markov pair; on real
+hardware the same engines run with draft/target sharded on disjoint mesh
+sub-axes (DESIGN.md §3).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --engine specbranch \
+      --requests 4 --new-tokens 48
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.data.synthetic import ZipfMarkov
+from repro.runtime.cost_model import CostModel
+from repro.runtime.engines import (AdaEDLEngine, AutoregressiveEngine,
+                                   EngineConfig, LookaheadEngine, PEARLEngine,
+                                   SpSEngine)
+from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.specbranch import SpecBranchEngine
+from repro.training.pairs import VOCAB, get_pair
+
+ENGINES = {
+    "autoregressive": AutoregressiveEngine,
+    "sps": SpSEngine,
+    "adaedl": AdaEDLEngine,
+    "lookahead": LookaheadEngine,
+    "pearl": PEARLEngine,
+    "specbranch": SpecBranchEngine,
+}
+
+
+def build_engine(name: str, ecfg: EngineConfig, pair_kind: str = "misaligned",
+                 hrad_params=None):
+    dp, dcfg, tp, tcfg = get_pair(pair_kind)
+    cls = ENGINES[name]
+    if name in ("autoregressive", "lookahead"):
+        return cls(tp, tcfg, ecfg)
+    if name == "specbranch":
+        return cls(dp, dcfg, tp, tcfg, ecfg, hrad_params=hrad_params)
+    return cls(dp, dcfg, tp, tcfg, ecfg)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="specbranch", choices=list(ENGINES))
+    ap.add_argument("--pair", default="misaligned",
+                    choices=["misaligned", "aligned"])
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=48)
+    ap.add_argument("--gamma", type=int, default=4)
+    ap.add_argument("--c", type=float, default=10.0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    ecfg = EngineConfig(gamma=args.gamma, c=args.c,
+                        temperature=args.temperature, max_len=2048)
+    engine = build_engine(args.engine, ecfg, args.pair)
+    zm = ZipfMarkov(vocab=VOCAB, seed=7)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens)
+            for i, p in enumerate(zm.prompts(args.requests, 16, seed=3))]
+    sched = Scheduler(engine)
+    t0 = time.time()
+    done = sched.run(reqs, key=jax.random.PRNGKey(0))
+    wall = time.time() - t0
+    cost = CostModel(c=args.c)
+    print(f"\n== {args.engine} on {args.pair} pair: {len(done)} requests, "
+          f"{wall:.1f}s wall (CPU) ==")
+    for r in done:
+        rep = r.result.report(cost)
+        print(f"req {r.rid}: {rep['tokens']} tok  M={rep['M']:.2f} "
+              f"speedup={rep['speedup']:.2f}x  RB={rep['rollback_rate']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,291 @@
+"""The lowered production programs per input shape, with their sharding
+specs and ShapeDtypeStruct input stand-ins (no device allocation).
+
+Shapes (assigned):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill_step
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (gamma-token
+               SpecBranch verification against a full-length KV cache)
+  long_500k    seq 524288, global_batch 1     -> serve_step, cache sequence
+               sharded over "data" (batch=1 cannot shard)
+
+Applicability rules (DESIGN.md §6): encoder-only archs skip decode shapes;
+pure-full-attention archs skip long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.sharding import rules
+from repro.training import optim
+from repro.training.train import lm_loss
+
+GAMMA_VERIFY = 4          # draft tokens per SpecBranch verification step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# microbatch count for train_4k (grad accumulation inside the step) —
+# sized so per-device activations fit v5e HBM with remat on
+MICROBATCHES = {
+    "jamba-1.5-large-398b": 16,
+    "grok-1-314b": 16,
+    "gemma2-27b": 8,
+    "mistral-nemo-12b": 8,
+    "qwen3-8b": 8,
+    "falcon-mamba-7b": 8,
+    "gemma3-4b": 4,
+    "hubert-xlarge": 4,
+    "internvl2-2b": 4,
+    "granite-moe-3b-a800m": 4,
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    ss = SHAPES[shape]
+    if ss.kind == "decode":
+        if not cfg.supports_decode():
+            return False, "encoder-only (no autoregressive decode)"
+        if shape == "long_500k" and not cfg.supports_long_context():
+            return False, "pure full attention (no sub-quadratic variant)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# programs
+# ---------------------------------------------------------------------------
+
+def _dist_fwd_kwargs(cfg: ModelConfig, mesh: Optional[Mesh]) -> dict:
+    """Distributed-execution forward knobs (sharding constraints + one-hot
+    embedding lookup).  No-ops when mesh is None (host runs)."""
+    if mesh is None:
+        return {}
+    ba = rules.batch_axes(mesh)
+    vocab_ax = "model"
+    db = os.environ.get("REPRO_OPT_DECODE_BATCH", "")
+    if db:                      # hillclimb A2: batch over "model"
+        ba, vocab_ax = (db,), "data"
+    kw = dict(
+        act_spec=P(ba, None, None),
+        logits_spec=P(ba, None,
+                      rules._fit(mesh, cfg.vocab_size, vocab_ax)),
+        onehot_embed=True,
+    )
+    if cfg.num_experts:
+        dm = rules._fit(mesh, cfg.d_model, "model")
+        kw["moe_specs"] = dict(buf=P(None, None, dm))
+    return kw
+
+
+def make_train_step(cfg: ModelConfig, n_micro: int,
+                    ocfg: Optional[optim.AdamWConfig] = None,
+                    mesh: Optional[Mesh] = None):
+    """Grad-accumulated AdamW train step over the global batch."""
+    ocfg = ocfg or optim.AdamWConfig()
+    fwd_kwargs = _dist_fwd_kwargs(cfg, mesh)
+
+    def step(params, opt_state, batch):                 # batch (B, T+1)
+        B = batch.shape[0]
+        micro = batch.reshape(n_micro, B // n_micro, batch.shape[1])
+
+        def micro_grad(carry, mb):
+            gacc, lacc = carry
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, mb, remat=True,
+                                  fwd_kwargs=fwd_kwargs),
+                has_aux=True)(params)
+            gacc = jax.tree.map(jnp.add, gacc, grads)
+            return (gacc, lacc + loss), None
+
+        # accumulate in the parameter dtype: f32 accumulators for a 398B
+        # model cost 6.2 GiB/dev on the 16x16 mesh (§Perf It.7)
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (gsum, lsum), _ = jax.lax.scan(micro_grad, (zeros, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        new_params, new_opt = optim.apply(ocfg, params, grads, opt_state)
+        return new_params, new_opt, lsum / n_micro
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    kw = _dist_fwd_kwargs(cfg, mesh)
+    kw.pop("logits_spec", None)        # prefill emits only the last position
+    def step(params, tokens, cache):
+        positions = jnp.broadcast_to(
+            jnp.arange(tokens.shape[1], dtype=jnp.int32),
+            tokens.shape)
+        logits, cache, _ = M.forward(
+            params, cfg, tokens, cache=cache, positions=positions,
+            logits_mode="last", kv_chunk=2048, cache_mode="fresh", **kw)
+        return logits[:, -1], cache
+    return step
+
+
+def make_prefill_step_embeds(cfg: ModelConfig):
+    """Encoder / frontend prefill: embeddings in, per-position logits out."""
+    def step(params, embeds):
+        logits, _, _ = M.forward(params, cfg, None, embeds=embeds,
+                                 logits_mode="all", kv_chunk=2048)
+        return logits
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, gamma: int = GAMMA_VERIFY,
+                    mesh: Optional[Mesh] = None):
+    """SpecBranch target-side verification: gamma draft tokens against a
+    full-length KV cache; returns per-position logits + updated cache.
+
+    When the cache is hd-sharded (KV heads don't divide "model"), the query
+    is constrained to the same hd sharding so the q·k contraction psums the
+    small chunk logits instead of all-gathering the whole cache — a 22x
+    collective reduction on qwen3 decode_32k (§Perf hillclimb A3).  Opt out
+    with REPRO_OPT_NO_ATTN_QHD=1 (the paper-faithful baseline).
+    """
+    kw = _dist_fwd_kwargs(cfg, mesh)
+    q_spec = None
+    if (mesh is not None and cfg.has_attention()
+            and os.environ.get("REPRO_OPT_NO_ATTN_QHD", "0") != "1"
+            and not os.environ.get("REPRO_OPT_DECODE_BATCH", "")
+            and rules._fit(mesh, cfg.num_kv_heads, "model") is None
+            and rules._fit(mesh, cfg.hd, "model") is not None):
+        ba = rules.batch_axes(mesh)
+        q_spec = P(ba, None, None, None, "model")
+
+    def step(params, tokens, cache, pos):
+        from repro.models import layers as L
+        positions = pos[:, None] + jnp.arange(gamma, dtype=jnp.int32)[None]
+        old_spec = L.ATTN_Q_SPEC
+        L.ATTN_Q_SPEC = q_spec if q_spec is not None else old_spec
+        try:
+            logits, cache, _ = M.forward(
+                params, cfg, tokens, cache=cache, positions=positions,
+                logits_mode="all", kv_chunk=2048, **kw)
+        finally:
+            L.ATTN_Q_SPEC = old_spec
+        return logits, cache
+    return step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, weak-type correct, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_params, jax.random.PRNGKey(0), cfg))
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, max_len))
+
+
+def opt_shape(params):
+    return jax.eval_shape(optim.init, params)
+
+
+def input_specs(cfg: ModelConfig, shape: str, mesh: Mesh) -> Dict[str, Any]:
+    """Returns dict(fn, args=(ShapeDtypeStructs...), in_shardings,
+    out_shardings) ready for jax.jit(...).lower(*args)."""
+    ss = SHAPES[shape]
+    # perf-experiment knobs (EXPERIMENTS.md §Perf): opt-in via env
+    tp_only = os.environ.get("REPRO_OPT_TP_ONLY", "0") == "1"
+    decode_seq = os.environ.get("REPRO_OPT_DECODE_SEQ", "")
+    pshape = params_shape(cfg)
+    pspec = rules.params_specs(mesh, cfg, pshape, tp_only=tp_only)
+    psh = rules.named(mesh, pspec)
+    ba = rules.batch_axes(mesh)
+    btok = rules.tokens_spec(mesh, ss.batch)
+
+    if ss.kind == "train":
+        n_micro = MICROBATCHES.get(cfg.name, 1)
+        fn = make_train_step(cfg, n_micro, mesh=mesh)
+        ospec = optim.OptState(m=pspec, v=pspec, step=P())
+        osh = rules.named(mesh, ospec)
+        batch = _sds((ss.batch, ss.seq_len + 1), jnp.int32)
+        bsh = rules.named(mesh, btok)
+        return dict(
+            fn=fn, args=(pshape, opt_shape(pshape), batch),
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, NamedSharding(mesh, P())),
+        )
+
+    if ss.kind == "prefill":
+        if cfg.frontend == "audio":
+            fn = make_prefill_step_embeds(cfg)
+            embeds = _sds((ss.batch, ss.seq_len, cfg.d_model), cfg.jdtype)
+            esh = rules.named(mesh, P(rules._fit(mesh, ss.batch, ba, "data"),
+                                      None, None))
+            osh = rules.named(mesh, P(rules._fit(mesh, ss.batch, ba, "data"),
+                                      None,
+                                      rules._fit(mesh, cfg.vocab_size,
+                                                 "model")))
+            return dict(fn=fn, args=(pshape, embeds),
+                        in_shardings=(psh, esh), out_shardings=osh)
+        fn = make_prefill_step(cfg, mesh=mesh)
+        csh_tree = cache_shape(cfg, ss.batch, ss.seq_len)
+        cspec = rules.cache_specs(mesh, cfg, csh_tree)
+        csh = rules.named(mesh, cspec)
+        tokens = _sds((ss.batch, ss.seq_len), jnp.int32)
+        logits_sh = rules.named(
+            mesh, P(rules._fit(mesh, ss.batch, ba, "data"),
+                    rules._fit(mesh, cfg.vocab_size, "model")))
+        return dict(fn=fn, args=(pshape, tokens, csh_tree),
+                    in_shardings=(psh, rules.named(mesh, btok), csh),
+                    out_shardings=(logits_sh, csh))
+
+    # decode
+    decode_batch = os.environ.get("REPRO_OPT_DECODE_BATCH", "")
+    shard_seq = (shape == "long_500k") or bool(decode_seq) \
+        or bool(decode_batch)
+    seq_axis = decode_seq or "data"
+    fn = make_serve_step(cfg, mesh=mesh)
+    csh_tree = cache_shape(cfg, ss.batch, ss.seq_len)
+    if decode_batch:
+        # hillclimb A2: batch over "model" (attention local per batch
+        # shard), cache sequence over "data"; weights all-gather instead
+        cspec = rules.cache_specs(mesh, cfg, csh_tree, shard_seq=True,
+                                  seq_axis="data", batch_axis=decode_batch)
+    else:
+        cspec = rules.cache_specs(mesh, cfg, csh_tree, shard_seq=shard_seq,
+                                  seq_axis=seq_axis)
+    csh = rules.named(mesh, cspec)
+    tokens = _sds((ss.batch, GAMMA_VERIFY), jnp.int32)
+    pos = _sds((ss.batch,), jnp.int32)
+    bax = (rules._fit(mesh, ss.batch, decode_batch) if decode_batch
+           else rules._fit(mesh, ss.batch, ba, "data"))
+    vocab_ax = "data" if decode_batch else "model"
+    logits_sh = rules.named(
+        mesh, P(bax, None, rules._fit(mesh, cfg.vocab_size, vocab_ax)))
+    return dict(
+        fn=fn, args=(pshape, tokens, csh_tree, pos),
+        in_shardings=(psh, rules.named(mesh, P(bax, None)), csh,
+                      rules.named(mesh, P(bax))),
+        out_shardings=(logits_sh, csh))

@@ -1,0 +1,82 @@
+"""Distributed training driver.
+
+On real hardware: builds the production mesh, shards params/optimizer with
+the FSDP x TP rules, and runs the grad-accumulated train step.  On this CPU
+container it runs the same code path on a 1x1 mesh with a reduced config —
+the full-size mesh is exercised compile-only by dryrun.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-4b --reduced \
+      --steps 20 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.synthetic import ZipfMarkov, token_stream
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.sharding import rules
+from repro.training import optim
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (requires 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"mesh {dict(mesh.shape)}")
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = optim.init(params)
+    pspec = rules.params_specs(mesh, cfg, params)
+    psh = rules.named(mesh, pspec)
+    osh = rules.named(mesh, optim.OptState(
+        m=pspec, v=pspec, step=jax.sharding.PartitionSpec()))
+    bsh = rules.named(mesh, rules.tokens_spec(mesh, args.batch))
+
+    step_fn = S.make_train_step(
+        cfg, args.micro,
+        optim.AdamWConfig(lr=1e-3, total_steps=args.steps))
+    with mesh:
+        jstep = jax.jit(step_fn, in_shardings=(psh, osh, bsh),
+                        out_shardings=(psh, osh, None))
+        params = jax.device_put(params, psh)
+        opt_state = jax.device_put(opt_state, osh)
+        zm = ZipfMarkov(vocab=min(cfg.vocab_size, 499), seed=7)
+        data = (zm.batch_iter(args.batch, args.seq, seed=0)
+                if cfg.vocab_size >= 64 else
+                token_stream(cfg.vocab_size, args.batch, args.seq))
+        t0 = time.time()
+        for i in range(args.steps):
+            batch = jnp.asarray(next(data) % cfg.vocab_size)
+            params, opt_state, loss = jstep(params, opt_state, batch)
+            if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss={float(loss):.4f}  "
+                      f"({time.time()-t0:.1f}s)")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Model configuration covering all six assigned architecture families.
+
+A single ``ModelConfig`` describes dense transformers (GQA, qk-norm, logit
+softcap, local/global alternating attention), MoE transformers, Mamba-1 SSMs,
+hybrid Mamba+attention+MoE stacks (Jamba), encoder-only audio backbones and
+VLM language decoders.
+
+The layer stack is described as a repeating *period* of slots.  Each slot is a
+``(mixer, ffn)`` pair where
+
+  mixer ∈ {"attn", "local", "mamba"}     ("local" = sliding-window attention)
+  ffn   ∈ {"none", "dense", "moe"}
+
+``num_layers = n_periods * len(pattern) + remainder``; the remainder layers
+reuse the pattern prefix and are unrolled (the periodic part is scanned with
+stacked parameters to keep the lowered HLO small for the 512-device dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Slot = Tuple[str, str]  # (mixer_kind, ffn_kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[Slot, ...]        # repeating period of (mixer, ffn) slots
+
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # --- attention options -------------------------------------------------
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    sliding_window: int = 0          # window for "local" mixers
+    causal: bool = True              # False for encoder-only (hubert)
+    # --- MoE options -------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba-1) options ----------------------------------------------
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0                 # 0 -> ceil(d_model / 16)
+    # --- embedding / io ----------------------------------------------------
+    tie_embeddings: bool = True
+    frontend: Optional[str] = None   # None | "audio" | "vision" (stub embeds)
+    num_patches: int = 256           # stub frontend sequence length (vlm)
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # --- bookkeeping -------------------------------------------------------
+    source: str = ""                 # citation for the assigned config
+
+    # ------------------------------------------------------------------ api
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank or max(1, math.ceil(self.d_model / 16))
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return self.num_layers // self.period
+
+    @property
+    def n_rem(self) -> int:
+        return self.num_layers - self.n_periods * self.period
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_kinds(self) -> Tuple[Slot, ...]:
+        """Per-layer (mixer, ffn) kinds for the full stack."""
+        return tuple(self.pattern[i % self.period] for i in range(self.num_layers))
+
+    def has_attention(self) -> bool:
+        return any(m in ("attn", "local") for m, _ in self.pattern)
+
+    def pure_full_attention(self) -> bool:
+        """True if every mixer is full (non-windowed) attention."""
+        return all(m == "attn" for m, _ in self.pattern)
+
+    def supports_decode(self) -> bool:
+        return self.causal
+
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic-per-token state growth: SSM / hybrid / windowed."""
+        return self.supports_decode() and not self.pure_full_attention()
+
+    def param_count(self) -> int:
+        """Analytic parameter count (total, incl. all experts)."""
+        D, F, V, hd = self.d_model, self.d_ff, self.vocab_size, self.hd
+        n = V * D                                    # embedding
+        if not self.tie_embeddings:
+            n += V * D
+        for mixer, ffn in self.layer_kinds():
+            n += D                                   # ln1
+            if mixer in ("attn", "local"):
+                n += D * self.num_heads * hd         # q
+                n += 2 * D * self.num_kv_heads * hd  # k, v
+                n += self.num_heads * hd * D         # o
+                if self.qk_norm:
+                    n += 2 * hd
+            else:                                    # mamba
+                E, N, R = self.d_inner, self.ssm_state, self.dtr
+                n += D * 2 * E                       # in_proj
+                n += self.ssm_conv * E + E           # conv
+                n += E * (R + 2 * N)                 # x -> (dt, B, C)
+                n += R * E + E                       # dt_proj
+                n += E * N + E                       # A_log, D skip
+                n += E * D                           # out_proj
+            if ffn == "dense":
+                n += D + 3 * D * F                   # ln2 + gate/up/down
+            elif ffn == "moe":
+                Ef = self.expert_ff
+                n += D + D * self.num_experts        # ln2 + router
+                n += self.num_experts * 3 * D * Ef
+        n += D                                       # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        Ef = self.expert_ff
+        n_moe_layers = sum(1 for _, f in self.layer_kinds() if f == "moe")
+        inactive = n_moe_layers * (self.num_experts - self.num_experts_per_tok) \
+            * 3 * self.d_model * Ef
+        return self.param_count() - inactive
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- variants
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: ≤2 periods, d_model ≤ 512, ≤ 4 experts."""
+        P = self.period
+        d = min(self.d_model, 256)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, max(1, heads // 2))
+        return self.replace(
+            name=self.name + "-reduced",
+            num_layers=min(self.num_layers, 2 * P),
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=d // heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            moe_d_ff=min(self.expert_ff, 256) if self.num_experts else 0,
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4),
+            num_experts_per_tok=min(self.num_experts_per_tok,
+                                    min(self.num_experts, 4)) or 0,
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else 0,
+            num_patches=16,
+            # drop-free capacity (C == n_tokens) so smoke tests are exactly
+            # batch-composition independent
+            capacity_factor=(self.num_experts / max(1, self.num_experts_per_tok)
+                             if self.num_experts else self.capacity_factor),
+            dtype="float32",
+        )
+
+    def draft(self) -> "ModelConfig":
+        """Same-family scaled-down draft model for speculative decoding."""
+        P = self.period
+        d = max(256, self.d_model // 8)
+        heads = max(2, self.num_heads // 8)
+        kv = max(1, min(self.num_kv_heads, heads))
+        return self.replace(
+            name=self.name + "-draft",
+            num_layers=min(self.num_layers, 2 * P),
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=d // heads,
+            d_ff=(4 * d) if self.d_ff else 0,
+            moe_d_ff=d if self.num_experts else 0,
+            num_experts=min(self.num_experts, 4),
+            num_experts_per_tok=min(self.num_experts_per_tok, 2) or 0,
+        )
+
+
+def dense_pattern(local_ratio: int = 0) -> Tuple[Slot, ...]:
+    """local_ratio = n means (n local : 1 global); 0 means all-global."""
+    if local_ratio == 0:
+        return (("attn", "dense"),)
+    return tuple([("local", "dense")] * local_ratio + [("attn", "dense")])

@@ -1,0 +1,281 @@
+"""Full model: embedding -> scanned periodic layer stack -> logits.
+
+The layer stack repeats ``cfg.pattern`` (a tuple of (mixer, ffn) slots).
+The periodic part is executed with ``jax.lax.scan`` over ``n_periods`` with
+parameters stacked on a leading axis (one stack per slot), which keeps the
+lowered HLO size O(period) instead of O(num_layers) — essential for compiling
+72-layer models on a 512-device simulated mesh.  Remainder layers (when
+``num_layers % period != 0``) are unrolled.
+
+Forward returns ``(logits, new_cache, aux)`` where ``aux["features"]`` holds
+the last-position hidden state after every period/remainder layer — the raw
+material for H-RAD's last-K-layer feature vector (Eq. 4 of the paper).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_slot(key, cfg: ModelConfig, slot) -> Params:
+    mixer, ffn_kind = slot
+    k1, k2 = jax.random.split(key)
+    p: Params = {}
+    if mixer in ("attn", "local"):
+        p["mixer"] = L.init_attention(k1, cfg)
+    else:
+        p["mixer"] = L.init_mamba(k1, cfg)
+    if ffn_kind == "dense":
+        p["ffn"] = L.init_ffn(k2, cfg)
+    elif ffn_kind == "moe":
+        p["ffn"] = L.init_moe(k2, cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    P, nper, nrem = cfg.period, cfg.n_periods, cfg.n_rem
+    # periodic stacks: one stacked pytree per slot
+    blocks = []
+    for s in range(P):
+        per_period = [_init_slot(keys[i * P + s], cfg, cfg.pattern[s])
+                      for i in range(nper)]
+        blocks.append(jax.tree.map(lambda *a: jnp.stack(a), *per_period)
+                      if nper > 1 else
+                      jax.tree.map(lambda a: a[None], per_period[0]))
+    rem = [_init_slot(keys[nper * P + r], cfg, cfg.pattern[r])
+           for r in range(nrem)]
+    dt = cfg.jdtype
+    params: Params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model))
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "blocks": blocks,
+        "rem": rem,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_size))
+            * (1.0 / math.sqrt(cfg.d_model))).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def _slot_window(cfg: ModelConfig, mixer: str) -> int:
+    return cfg.sliding_window if mixer == "local" else 0
+
+
+def _init_slot_cache(cfg: ModelConfig, slot, batch: int, max_len: int
+                     ) -> Params:
+    mixer, _ = slot
+    if mixer in ("attn", "local"):
+        return L.init_attn_cache(cfg, batch, max_len, _slot_window(cfg, mixer))
+    return L.init_mamba_cache(cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Decode cache pytree mirroring the params layout.
+
+    Every leaf has a leading "stack" axis (n_periods for the scanned blocks,
+    1 for remainder layers) so batch is uniformly axis 1 — branch fork/select
+    in the runner rely on this.
+    """
+    P, nper, nrem = cfg.period, cfg.n_periods, cfg.n_rem
+    blocks = []
+    for s in range(P):
+        one = _init_slot_cache(cfg, cfg.pattern[s], batch, max_len)
+        blocks.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (nper,) + a.shape).copy()
+            if nper > 1 else a[None], one))
+    rem = [jax.tree.map(lambda a: a[None],
+                        _init_slot_cache(cfg, cfg.pattern[r], batch, max_len))
+           for r in range(nrem)]
+    return {"blocks": blocks, "rem": rem}
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
+                positions: jax.Array, cache: Optional[Params],
+                kv_chunk: int, moe_specs=None, cache_mode: str = "append"
+                ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    mixer, ffn_kind = slot
+    aux_loss = jnp.zeros((), jnp.float32)
+    if mixer in ("attn", "local"):
+        mx, new_cache = L.attention(
+            p["mixer"], x, cfg, positions=positions, cache=cache,
+            window=_slot_window(cfg, mixer), kv_chunk=kv_chunk,
+            cache_mode=cache_mode)
+    else:
+        mx, new_cache = L.mamba(p["mixer"], x, cfg, cache=cache)
+    x = x + mx
+    if ffn_kind == "dense":
+        x = x + L.ffn(p["ffn"], x, cfg)
+    elif ffn_kind == "moe":
+        y, aux_loss = L.moe_ffn(p["ffn"], x, cfg, moe_specs=moe_specs)
+        x = x + y
+    return x, new_cache, aux_loss
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
+            embeds: Optional[jax.Array] = None,
+            cache: Optional[Params] = None,
+            positions: Optional[jax.Array] = None,
+            kv_chunk: int = 2048,
+            feature_mode: str = "last",
+            logits_mode: str = "all",
+            remat: bool = False,
+            act_spec=None,
+            logits_spec=None,
+            moe_specs=None,
+            cache_mode: str = "append",
+            onehot_embed: bool = False
+            ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
+    """Run the model.
+
+    tokens:  (B, T) int32 token ids, or None (pure-embedding input).
+    embeds:  (B, Tp, d_model) stub frontend embeddings (audio frames / vision
+             patches), prepended to the token embeddings when both given.
+    cache:   decode cache from ``init_cache`` (or None for cache-less runs).
+    positions: (B, T_total) absolute positions; default arange.
+
+    feature_mode: "last" -> aux["features"] is (n_points, B, d_model) (hidden
+    state at the final position after each period/remainder layer); "all" ->
+    (n_points, B, T, d_model) (every position — used by H-RAD's posterior
+    drafting on short verification chunks, Sec. 5.2).
+
+    Returns (logits (B, T_total, vocab), new_cache, aux).
+    """
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(cfg.jdtype))
+    if tokens is not None:
+        if onehot_embed:
+            # distributed embedding lookup as a one-hot matmul: contracts the
+            # vocab-sharded axis cleanly (a plain gather over a model-sharded
+            # table makes SPMD all-gather + replicate — see EXPERIMENTS §Perf)
+            oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=cfg.jdtype)
+            emb = oh @ params["embed"] * math.sqrt(cfg.d_model)
+        else:
+            emb = params["embed"][tokens] * math.sqrt(cfg.d_model)
+        parts.append(emb.astype(cfg.jdtype))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    if act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, act_spec)
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    P, nper = cfg.period, cfg.n_periods
+    blocks_cache = cache["blocks"] if cache is not None else [None] * P
+
+    def period_body(carry, xs):
+        x = carry
+        slot_params, slot_caches = xs
+        new_caches, feats, aux = [], None, jnp.zeros((), jnp.float32)
+        for s in range(P):
+            x, nc, al = _apply_slot(
+                slot_params[s], x, cfg, cfg.pattern[s],
+                positions=positions, cache=slot_caches[s],
+                kv_chunk=kv_chunk, moe_specs=moe_specs,
+                cache_mode=cache_mode)
+            new_caches.append(nc)
+            aux = aux + al
+        feat = x[:, -1, :] if feature_mode == "last" else x
+        return x, (tuple(new_caches), feat, aux)
+
+    if nper > 0:
+        xs = (tuple(params["blocks"]), tuple(blocks_cache))
+        body = (jax.checkpoint(period_body,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+                if remat else period_body)
+        x, (new_block_caches, per_feats, per_aux) = jax.lax.scan(
+            body, x, xs)
+        feats = [per_feats[i] for i in range(nper)]
+        moe_aux = per_aux.sum()
+        new_blocks = list(new_block_caches)
+    else:
+        feats, moe_aux, new_blocks = [], jnp.zeros((), jnp.float32), []
+
+    # remainder layers (unrolled)
+    rem_cache = cache["rem"] if cache is not None else [None] * cfg.n_rem
+    new_rem = []
+    for r in range(cfg.n_rem):
+        rc = (jax.tree.map(lambda a: a[0], rem_cache[r])
+              if rem_cache[r] is not None else None)
+        slot_r = cfg.pattern[r]
+
+        def apply_r(p_, x_, pos_, _slot=slot_r, _rc=rc):
+            return _apply_slot(p_, x_, cfg, _slot, positions=pos_,
+                               cache=_rc, kv_chunk=kv_chunk,
+                               moe_specs=moe_specs, cache_mode=cache_mode)
+
+        if remat:
+            apply_r = jax.checkpoint(
+                apply_r, policy=jax.checkpoint_policies.nothing_saveable)
+        x, nc, al = apply_r(params["rem"][r], x, positions)
+        if nc is not None:
+            nc = jax.tree.map(lambda a: a[None], nc)
+        new_rem.append(nc)
+        moe_aux = moe_aux + al
+        feats.append(x[:, -1, :] if feature_mode == "last" else x)
+
+    if logits_mode == "last":
+        x = x[:, -1:]          # prefill: only the final position's logits
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head).astype(jnp.float32)
+    if logits_spec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+    logits = L.softcap(logits, cfg.final_softcap)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"blocks": new_blocks, "rem": new_rem}
+    empty = ((0, B, cfg.d_model) if feature_mode == "last"
+             else (0, B, T, cfg.d_model))
+    aux = {"features": jnp.stack(feats) if feats else
+           jnp.zeros(empty, cfg.jdtype),
+           "moe_aux": moe_aux}
+    return logits, new_cache, aux
+
+
+def prefill(params, cfg, tokens, *, cache, embeds=None, kv_chunk: int = 2048):
+    """Prefill: forward over the prompt writing the cache."""
+    return forward(params, cfg, tokens, embeds=embeds, cache=cache,
+                   kv_chunk=kv_chunk)
+
+
+def decode_step(params, cfg, tokens, *, cache, pos, kv_chunk: int = 2048):
+    """Decode T new tokens (T = 1 for plain AR, T = gamma for verification).
+
+    pos: (B,) int32 — the absolute position of the *first* new token.
+    """
+    B, T = tokens.shape
+    positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    return forward(params, cfg, tokens, cache=cache, positions=positions,
+                   kv_chunk=kv_chunk)

@@ -1,0 +1,51 @@
+"""Step-accounting cost model (DESIGN.md §3).
+
+This container is CPU-only, so wall-clock comparisons between engines are
+meaningless; the paper's own latency model (Sec. 4.1) prices a draft-model
+token at ``t`` and a target-model call at ``c*t``.  Engines emit a timeline
+of rounds; this module turns it into the per-token latency / speedup /
+tokens-per-second numbers reported in Tables 2-3.
+
+Round kinds:
+  ("serial",   draft_tokens, target_calls)   cost = d*t + calls*c*t
+  ("parallel", draft_tokens, target_calls)   cost = max(d*t, calls*c*t)
+  ("target",   0,            target_calls)   cost = calls*c*t   (AR decode)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+Round = Tuple[str, int, int]
+
+
+@dataclasses.dataclass
+class CostModel:
+    c: float = 10.0         # target-call / draft-token speed ratio
+    t: float = 1.0          # draft per-token time (arbitrary unit)
+    tokens_per_sec_ar: float = 0.0  # optional absolute calibration
+
+    def round_cost(self, r: Round) -> float:
+        kind, d, calls = r
+        if kind == "serial":
+            return d * self.t + calls * self.c * self.t
+        if kind == "parallel":
+            return max(d * self.t, calls * self.c * self.t)
+        if kind == "target":
+            return calls * self.c * self.t
+        raise ValueError(kind)
+
+    def total(self, timeline: List[Round]) -> float:
+        return sum(self.round_cost(r) for r in timeline)
+
+    def per_token(self, timeline: List[Round], n_tokens: int) -> float:
+        return self.total(timeline) / max(n_tokens, 1)
+
+    def speedup_vs_ar(self, timeline: List[Round], n_tokens: int) -> float:
+        """Speedup over autoregressive target decoding (c*t per token)."""
+        return (self.c * self.t) / self.per_token(timeline, n_tokens)
+
+    def tokens_per_sec(self, timeline: List[Round], n_tokens: int,
+                       ar_tps: float) -> float:
+        """Absolute speed if AR decoding runs at ``ar_tps`` tokens/s."""
+        return ar_tps * self.speedup_vs_ar(timeline, n_tokens)

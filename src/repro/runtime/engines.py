@@ -1,0 +1,467 @@
+"""Serving engines: Autoregressive, SpS, AdaEDL, Lookahead, PEARL and
+SpecBranch — all over the same ``ModelRunner`` substrate so the paper's
+comparisons (Tables 2-3, Fig. 5-6) are apples-to-apples.
+
+Engine contract: ``generate(prompt, n_new, key)`` returns a ``GenResult``
+whose ``tokens`` are distributed exactly as target-model decoding (lossless;
+token-for-token identical under greedy), and whose ``timeline`` feeds the
+cost model (runtime/cost_model.py).
+
+Lineage bookkeeping: every engine maintains the invariant that
+``prompt + ctx.out`` is the committed token stream; after a rejection the
+runners are reset to ``len(prompt) + len(out) - 1`` with the newest token as
+``pending`` — uniform across engines and rollback cases.
+
+Rollback accounting (Sec. 6 / E.3): ``rollback_tokens`` counts draft-forward
+tokens discarded after target verification at *sequence-position*
+granularity; copies on parallel branches are excluded (the paper's RB
+definition excludes "additional token loss due to branch and tree
+structures").  Tokens cut by H-RAD before verification are ``pruned_tokens``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hrad as H
+from repro.models.config import ModelConfig
+from repro.runtime import sampling as S
+from repro.runtime.cost_model import CostModel, Round
+from repro.runtime.runner import ModelRunner
+
+
+# ---------------------------------------------------------------------------
+# config / results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineConfig:
+    gamma: int = 8                 # static draft length (SpS) / gamma_max
+    k_max: int = 6                 # max parallel branches (Eq. 7 cap)
+    epsilon: float = 0.3           # confidence threshold (implicit signal)
+    c: float = 10.0                # target/draft speed ratio
+    temperature: float = 0.0       # target sampling temperature
+    draft_temperature: float = 1.0 # sampling temp for drafted tokens
+    signal_temperature: float = 1.0
+    # ^ temp for *signals*: confidence/entropy stop rules, branch-point
+    #   candidates and adaptive k.  The paper sets the draft model to temp 1
+    #   so its softmax carries confidence information (Sec. 6, App. F.6);
+    #   separating the two lets greedy drafting coexist with temp-1 signals
+    #   without breaking losslessness (signals never change what is sampled,
+    #   and Alg. 2 verifies candidates against the very distribution they
+    #   were drawn from).
+    adaedl_lambda: float = 0.15
+    lookahead_n: int = 3           # n-gram size for Lookahead
+    hrad_k_layers: int = 4         # K feature layers
+    branch_mode: str = "sample"    # "sample" (lossless) | "topk" (Eq. 7)
+    use_hrad: bool = True          # ablation: SpecBranch w/o H-RAD
+    use_branch: bool = True        # ablation: SpecBranch w/o branch
+    gamma_branch_override: int = 0 # 0 = auto (speed-ratio-matched)
+    max_len: int = 4096
+    seed: int = 0
+
+    @property
+    def gamma_branch(self) -> int:
+        """Per-branch draft length in the branch stage — sized so the
+        gb+1 batched draft steps finish inside the c-cost verification
+        window (Sec. 5.2: 'maximum draft length per branch is constrained
+        by the draft/target model speed ratio c')."""
+        if self.gamma_branch_override:
+            return self.gamma_branch_override
+        return max(1, int(round(self.c)) - 1)
+
+
+@dataclasses.dataclass
+class GenStats:
+    emitted: int = 0
+    draft_tokens: int = 0          # draft-model token forwards (lineage)
+    target_calls: int = 0
+    rollback_tokens: int = 0       # drafted positions discarded post-verify
+    pruned_tokens: int = 0         # positions cut by H-RAD pre-verify
+    hrad_signals: List[int] = dataclasses.field(default_factory=list)
+    accept_runs: List[int] = dataclasses.field(default_factory=list)
+    _run: int = 0
+
+    def run_extend(self, n: int) -> None:
+        self._run += n
+
+    def run_break(self) -> None:
+        if self._run > 0:
+            self.accept_runs.append(self._run)
+        self._run = 0
+
+    def finish(self) -> None:
+        self.run_break()
+
+    @property
+    def mean_accepted(self) -> float:
+        """M — mean continuously-accepted length (Sec. 6 / E.3)."""
+        return float(np.mean(self.accept_runs)) if self.accept_runs else 0.0
+
+    @property
+    def rollback_rate(self) -> float:
+        tot = self.emitted + self.rollback_tokens
+        return self.rollback_tokens / max(tot, 1)
+
+
+@dataclasses.dataclass
+class GenResult:
+    tokens: List[int]
+    stats: GenStats
+    timeline: List[Round]
+
+    def report(self, cost: CostModel) -> Dict[str, float]:
+        n = len(self.tokens)
+        return {
+            "tokens": n,
+            "M": self.stats.mean_accepted,
+            "speedup": cost.speedup_vs_ar(self.timeline, n),
+            "per_token_latency": cost.per_token(self.timeline, n),
+            "rollback_rate": self.stats.rollback_rate,
+            "rollback_tokens": self.stats.rollback_tokens,
+            "pruned_tokens": self.stats.pruned_tokens,
+            "draft_tokens": self.stats.draft_tokens,
+            "target_calls": self.stats.target_calls,
+        }
+
+
+class _Ctx:
+    def __init__(self, key):
+        self.out: List[int] = []
+        self.stats = GenStats()
+        self.timeline: List[Round] = []
+        self.key = key
+
+    def split(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+
+# ---------------------------------------------------------------------------
+# base
+# ---------------------------------------------------------------------------
+
+class Engine:
+    name = "base"
+
+    def __init__(self, draft_params, draft_cfg: Optional[ModelConfig],
+                 target_params, target_cfg: ModelConfig,
+                 ecfg: EngineConfig, hrad_params=None):
+        self.dp, self.dcfg = draft_params, draft_cfg
+        self.tp, self.tcfg = target_params, target_cfg
+        self.ecfg = ecfg
+        self.hrad_params = hrad_params
+        self._q_stack: Optional[jax.Array] = None
+
+    def _new_runners(self) -> Tuple[Optional[ModelRunner], ModelRunner]:
+        d = (ModelRunner(self.dp, self.dcfg, max_len=self.ecfg.max_len)
+             if self.dcfg is not None else None)
+        t = ModelRunner(self.tp, self.tcfg, max_len=self.ecfg.max_len)
+        return d, t
+
+    def _tprobs(self, logits: jax.Array) -> jax.Array:
+        return S.probs_from_logits(logits, self.ecfg.temperature)
+
+    def _qprobs(self, logits: jax.Array) -> jax.Array:
+        return S.probs_from_logits(logits, self.ecfg.draft_temperature)
+
+    def _qsignal(self, logits: jax.Array) -> jax.Array:
+        return S.probs_from_logits(logits, self.ecfg.signal_temperature)
+
+    def generate(self, prompt: Sequence[int], n_new: int, key,
+                 embeds=None) -> GenResult:
+        raise NotImplementedError
+
+    # shared target verification ------------------------------------------
+    def _verify(self, target: ModelRunner, drafts: List[int],
+                q_stack: Optional[jax.Array], ctx: _Ctx):
+        """Target-verify ``pending + drafts``; one target call.
+
+        Returns (n_accepted, next_token, all_accepted, bonus_probs).
+        p for drafts[i] is the target distribution after pending+drafts[:i];
+        when pending is empty the distribution preceding drafts[0] is the
+        previous call's last logits (PEARL/SpecBranch steady state).
+        """
+        npend = len(target.pending)
+        g = len(drafts)
+        pre = (self._tprobs(target.last_logits[0]) if npend == 0 else None)
+        logits = target.forward(drafts)
+        ctx.stats.target_calls += 1
+        row = logits[0]
+        if g > 0:
+            if npend == 0:
+                p_stack = jnp.concatenate(
+                    [pre[None], self._tprobs(row[:g - 1])], axis=0)
+            else:
+                p_stack = self._tprobs(row[npend - 1: npend - 1 + g])
+        else:
+            p_stack = jnp.zeros((0, row.shape[-1]), jnp.float32)
+        bonus = self._tprobs(row[npend + g - 1]) if (npend + g) > 0 else pre
+        if g == 0:
+            return 0, -1, True, bonus
+        verdict = S.verify_chain(ctx.split(), p_stack, q_stack[:g],
+                                 jnp.asarray(drafts, jnp.int32),
+                                 bonus_probs=None)
+        return verdict.n_accepted, verdict.next_token, \
+            verdict.all_accepted, bonus
+
+    # lineage reset ---------------------------------------------------------
+    def _reset_lineage(self, runner: ModelRunner, prompt_len: int,
+                       ctx: _Ctx) -> None:
+        """Reset a runner to the committed stream, last token pending."""
+        runner.reset_to(prompt_len + len(ctx.out) - 1)
+        runner.pending = [ctx.out[-1]]
+
+
+# ---------------------------------------------------------------------------
+# 1. Autoregressive (1.00x baseline)
+# ---------------------------------------------------------------------------
+
+class AutoregressiveEngine(Engine):
+    name = "autoregressive"
+
+    def __init__(self, target_params, target_cfg, ecfg: EngineConfig):
+        super().__init__(None, None, target_params, target_cfg, ecfg)
+
+    def generate(self, prompt, n_new, key, embeds=None) -> GenResult:
+        ctx = _Ctx(key)
+        _, target = self._new_runners()
+        if embeds is not None:
+            target.forward_embeds(embeds)
+        target.forward(list(prompt))
+        ctx.stats.target_calls += 1
+        for _ in range(n_new):
+            p = self._tprobs(target.last_logits[0])
+            tok = int(jax.device_get(S.sample(ctx.split(), p)))
+            ctx.out.append(tok)
+            target.forward([tok])
+            ctx.stats.target_calls += 1
+            ctx.timeline.append(("target", 0, 1))
+        ctx.stats.emitted = len(ctx.out)
+        ctx.stats.finish()
+        return GenResult(ctx.out, ctx.stats, ctx.timeline)
+
+
+# ---------------------------------------------------------------------------
+# 2/3. SpS (vanilla SD) and AdaEDL — serial draft-then-verify
+# ---------------------------------------------------------------------------
+
+class SpSEngine(Engine):
+    name = "sps"
+
+    def _stop_rule(self, q: jax.Array) -> bool:
+        return False
+
+    def _draft_round(self, draft: ModelRunner, ctx: _Ctx, gamma: int
+                     ) -> Tuple[List[int], jax.Array, List[float]]:
+        """Draft up to gamma tokens, ingesting all but the last.
+
+        Returns (drafted, q_stack (g, V), confidences).  Exactly g draft
+        forwards per round (the pending ingest doubles as the first one).
+        """
+        if draft.pending:
+            draft.forward([])
+        qs, drafted, confs = [], [], []
+        for i in range(gamma):
+            q = self._qprobs(draft.last_logits[0])
+            q_sig = self._qsignal(draft.last_logits[0])
+            tok = int(jax.device_get(S.sample(ctx.split(), q)))
+            qs.append(q)
+            confs.append(float(jax.device_get(q_sig.max())))
+            drafted.append(tok)
+            ctx.stats.draft_tokens += 1
+            stop = (i == gamma - 1) or self._stop_rule(q_sig)
+            if stop:
+                break
+            draft.forward([tok])
+        return drafted, jnp.stack(qs), confs
+
+    def generate(self, prompt, n_new, key, embeds=None) -> GenResult:
+        ctx = _Ctx(key)
+        draft, target = self._new_runners()
+        if embeds is not None:
+            target.forward_embeds(embeds)
+            draft.forward_embeds(embeds)
+        draft.prefill(prompt)
+        target.prefill(prompt)
+        ctx.stats.target_calls += 1
+        plen = len(prompt) + (embeds.shape[1] if embeds is not None else 0)
+        while len(ctx.out) < n_new:
+            draft.checkpoint(), target.checkpoint()
+            drafted, q_stack, _ = self._draft_round(draft, ctx,
+                                                    self.ecfg.gamma)
+            g = len(drafted)
+            n, nxt, all_acc, bonus = self._verify(target, drafted, q_stack,
+                                                  ctx)
+            ctx.timeline.append(("serial", g, 1))
+            if all_acc:
+                nxt = int(jax.device_get(S.sample(ctx.split(), bonus)))
+                ctx.out.extend(drafted + [nxt])
+                ctx.stats.emitted += g + 1
+                ctx.stats.run_extend(g + 1)   # bonus continues the run
+                target.pending = [nxt]
+                draft.pending = [drafted[-1], nxt]
+            else:
+                ctx.out.extend(drafted[:n] + [nxt])
+                ctx.stats.emitted += n + 1
+                ctx.stats.run_extend(n)
+                ctx.stats.run_break()
+                ctx.stats.rollback_tokens += g - n
+                self._reset_lineage(target, plen, ctx)
+                self._reset_lineage(draft, plen, ctx)
+        ctx.stats.finish()
+        return GenResult(ctx.out[:n_new], ctx.stats, ctx.timeline)
+
+
+class AdaEDLEngine(SpSEngine):
+    name = "adaedl"
+
+    def _stop_rule(self, q: jax.Array) -> bool:
+        bound = float(jax.device_get(
+            S.entropy_bound(q, self.ecfg.adaedl_lambda)))
+        return bound < self.ecfg.epsilon
+
+
+class ConfidenceSDEngine(SpSEngine):
+    """Implicit confidence early-stopping + vanilla SD (Table 4 baseline)."""
+    name = "confidence-sd"
+
+    def _stop_rule(self, q: jax.Array) -> bool:
+        return float(jax.device_get(q.max())) < self.ecfg.epsilon
+
+
+# ---------------------------------------------------------------------------
+# 4. Lookahead-lite (n-gram pool, no draft model)
+# ---------------------------------------------------------------------------
+
+class LookaheadEngine(Engine):
+    name = "lookahead"
+
+    def __init__(self, target_params, target_cfg, ecfg: EngineConfig):
+        super().__init__(None, None, target_params, target_cfg, ecfg)
+
+    def generate(self, prompt, n_new, key, embeds=None) -> GenResult:
+        ctx = _Ctx(key)
+        _, target = self._new_runners()
+        if embeds is not None:
+            target.forward_embeds(embeds)
+        target.prefill(prompt)
+        ctx.stats.target_calls += 1
+        plen = len(prompt) + (embeds.shape[1] if embeds is not None else 0)
+        n = self.ecfg.lookahead_n
+        pool: Dict[tuple, List[int]] = {}
+        hist = list(prompt)
+
+        def update_pool(seq):
+            for i in range(max(0, len(seq) - n)):
+                pool[tuple(seq[i:i + n - 1])] = \
+                    seq[i + n - 1: i + n - 1 + self.ecfg.gamma]
+
+        update_pool(hist)
+        while len(ctx.out) < n_new:
+            target.checkpoint()
+            guess = pool.get(tuple(hist[-(n - 1):]), [])[:self.ecfg.gamma]
+            npend = len(target.pending)
+            logits = target.forward(list(guess))
+            ctx.stats.target_calls += 1
+            ctx.timeline.append(("serial", 0, 1))
+            row = logits[0]
+            n_ok = 0
+            for i, gtok in enumerate(guess):
+                p = self._tprobs(row[npend - 1 + i])
+                if int(jax.device_get(jnp.argmax(p))) == gtok:
+                    n_ok += 1
+                else:
+                    break
+            p_next = self._tprobs(row[npend - 1 + n_ok])
+            nxt = int(jax.device_get(S.sample(ctx.split(), p_next)))
+            emitted = list(guess[:n_ok]) + [nxt]
+            ctx.out.extend(emitted)
+            ctx.stats.emitted += len(emitted)
+            ctx.stats.run_extend(n_ok)
+            ctx.stats.run_break()
+            ctx.stats.rollback_tokens += len(guess) - n_ok
+            self._reset_lineage(target, plen, ctx)
+            hist.extend(emitted)
+            update_pool(hist)
+        ctx.stats.finish()
+        return GenResult(ctx.out[:n_new], ctx.stats, ctx.timeline)
+
+
+# ---------------------------------------------------------------------------
+# 5. PEARL — chunk-level parallel drafting/verification
+# ---------------------------------------------------------------------------
+
+class PEARLEngine(SpSEngine):
+    """Parallel SD with pre/post-verify (PEARL, [25]).
+
+    Warm-up round: draft a chunk while the target pre-verifies its first
+    token.  Steady state: the target verifies the current chunk while the
+    draft generates the next one; a mid-chunk rejection dooms the whole
+    parallel chunk (Fig. 1a) — the rollback cost SpecBranch attacks.
+    """
+    name = "pearl"
+
+    def generate(self, prompt, n_new, key, embeds=None) -> GenResult:
+        ctx = _Ctx(key)
+        draft, target = self._new_runners()
+        if embeds is not None:
+            target.forward_embeds(embeds)
+            draft.forward_embeds(embeds)
+        draft.prefill(prompt)
+        target.prefill(prompt)
+        ctx.stats.target_calls += 1
+        plen = len(prompt) + (embeds.shape[1] if embeds is not None else 0)
+        gamma = self.ecfg.gamma
+        cur: List[int] = []
+        cur_q = None
+        while len(ctx.out) < n_new:
+            draft.checkpoint(), target.checkpoint()
+            if not cur:
+                # ---- warm-up: draft chunk || pre-verify first token ----
+                cur, cur_q, _ = self._draft_round(draft, ctx, gamma)
+                draft.pending = [cur[-1]]
+                n, nxt, ok, _ = self._verify(target, cur[:1], cur_q[:1], ctx)
+                ctx.timeline.append(("parallel", len(cur), 1))
+                if not ok:
+                    ctx.stats.rollback_tokens += len(cur)
+                    ctx.stats.run_break()
+                    ctx.out.append(nxt)
+                    ctx.stats.emitted += 1
+                    self._reset_lineage(target, plen, ctx)
+                    self._reset_lineage(draft, plen, ctx)
+                    cur = []
+                    continue
+                ctx.out.append(cur[0])
+                ctx.stats.emitted += 1
+                ctx.stats.run_extend(1)
+                rest, rest_q = cur[1:], cur_q[1:]
+            else:
+                rest, rest_q = cur, cur_q
+
+            # ---- parallel: verify `rest` || draft next chunk ----
+            nxt_chunk, nxt_q, _ = self._draft_round(draft, ctx, gamma)
+            draft.pending = [nxt_chunk[-1]]
+            n, nxt, all_acc, bonus = self._verify(target, rest, rest_q, ctx)
+            ctx.timeline.append(("parallel", len(nxt_chunk), 1))
+            if all_acc:
+                ctx.out.extend(rest)
+                ctx.stats.emitted += len(rest)
+                ctx.stats.run_extend(len(rest))
+                cur, cur_q = nxt_chunk, nxt_q   # pipeline rolls on
+            else:
+                ctx.out.extend(rest[:n] + [nxt])
+                ctx.stats.emitted += n + 1
+                ctx.stats.run_extend(n)
+                ctx.stats.run_break()
+                # doomed: rest beyond n + the whole speculative next chunk
+                ctx.stats.rollback_tokens += (len(rest) - n) + len(nxt_chunk)
+                self._reset_lineage(target, plen, ctx)
+                self._reset_lineage(draft, plen, ctx)
+                cur = []
+        ctx.stats.finish()
+        return GenResult(ctx.out[:n_new], ctx.stats, ctx.timeline)

@@ -1,0 +1,233 @@
+"""Host-side model runner: owns the decode cache, logical position, pending
+tokens and last logits for one model instance (draft or target).
+
+Rollback model (TPU adaptation, DESIGN.md §3):
+
+* Attention-only models: rollback is *positional*.  Stale cache slots beyond
+  the kept length are masked by the causal mask until the next write
+  overwrites them, so ``reset_to`` is pure bookkeeping (free).
+* Models with SSM layers (mamba / hybrid) carry recurrent state; rollback
+  restores the most recent checkpoint <= the target length and replays the
+  delta — a real extra forward that is logged (``replay_calls``) because it
+  is a genuine cost of speculative decoding on SSM targets.
+
+Branch forks replicate the cache on the batch axis.  The physically-shared
+prefix layout of Eq. (8) is implemented in the Pallas decode kernel and the
+memory model (benchmarks/memory.py); the reference runner trades that memory
+optimisation for simplicity.  Cache leaves are uniformly (stack, batch, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    return any(m == "mamba" for m, _ in cfg.pattern)
+
+
+@dataclasses.dataclass
+class _Checkpoint:
+    pos: int
+    cache: Any
+    last_logits: Optional[jax.Array]
+    last_features: Optional[jax.Array]
+
+
+class ModelRunner:
+    """One model + its decode cache, driven token-by-token from the host.
+
+    Invariants:
+      * ``tokens[:pos]`` are ingested in the cache; ``pending`` are emitted
+        by the engine but not yet ingested.
+      * ``last_logits`` is the (B, V) distribution following ``tokens[pos-1]``.
+    """
+
+    MAX_CHECKPOINTS = 8
+
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.batch = 1
+        self.has_ssm = _has_ssm(cfg)
+        self.cache = M.init_cache(cfg, 1, max_len)
+        self.pos = 0
+        self.pending: List[int] = []
+        self.last_logits: Optional[jax.Array] = None     # (B, V)
+        self.last_features: Optional[jax.Array] = None   # (n_points, B, T, D)
+        self.tokens: List[int] = []
+        self.n_calls = 0
+        self.n_call_tokens = 0
+        self.replay_calls = 0
+        self._ckpts: List[_Checkpoint] = []
+        self._prefork: Optional[Tuple[Any, int]] = None
+
+        @jax.jit
+        def _fwd(params, cache, tokens, pos):
+            positions = pos[:, None] + jnp.arange(
+                tokens.shape[1], dtype=jnp.int32)[None]
+            logits, cache, aux = M.forward(
+                params, cfg, tokens, cache=cache, positions=positions,
+                feature_mode="all")
+            return logits, cache, aux["features"]
+
+        @jax.jit
+        def _fwd_embeds(params, cache, embeds, pos):
+            positions = pos[:, None] + jnp.arange(
+                embeds.shape[1], dtype=jnp.int32)[None]
+            logits, cache, aux = M.forward(
+                params, cfg, None, embeds=embeds, cache=cache,
+                positions=positions, feature_mode="all")
+            return logits, cache, aux["features"]
+
+        self._fwd = _fwd
+        self._fwd_embeds = _fwd_embeds
+
+    # -------------------------------------------------------------- forward
+    def forward(self, tokens: Sequence[int]) -> jax.Array:
+        """Ingest ``pending + tokens`` (batch 1).  Returns logits (1, T, V)."""
+        assert self.batch == 1
+        toks = list(self.pending) + [int(t) for t in tokens]
+        self.pending = []
+        assert toks, "forward of zero tokens"
+        arr = jnp.asarray([toks], dtype=jnp.int32)
+        pos = jnp.full((1,), self.pos, jnp.int32)
+        logits, self.cache, feats = self._fwd(self.params, self.cache, arr,
+                                              pos)
+        self.pos += len(toks)
+        self.tokens.extend(toks)
+        self.n_calls += 1
+        self.n_call_tokens += len(toks)
+        self.last_logits = logits[:, -1]
+        self.last_features = feats
+        return logits
+
+    def forward_embeds(self, embeds: jax.Array) -> jax.Array:
+        """Ingest stub frontend embeddings (B=1, Tp, D) — VLM/audio prefill."""
+        assert self.batch == 1 and not self.pending
+        pos = jnp.full((1,), self.pos, jnp.int32)
+        logits, self.cache, feats = self._fwd_embeds(
+            self.params, self.cache, embeds, pos)
+        n = embeds.shape[1]
+        self.pos += n
+        self.tokens.extend([-1] * n)       # placeholder ids (not replayable)
+        self.n_calls += 1
+        self.n_call_tokens += n
+        self.last_logits = logits[:, -1]
+        self.last_features = feats
+        return logits
+
+    def forward_batched(self, token_rows: np.ndarray) -> jax.Array:
+        """Branch-mode forward: token_rows (k, T), one row per branch."""
+        assert not self.pending and self.batch == token_rows.shape[0]
+        arr = jnp.asarray(token_rows, dtype=jnp.int32)
+        pos = jnp.full((self.batch,), self.pos, jnp.int32)
+        logits, self.cache, feats = self._fwd(self.params, self.cache, arr,
+                                              pos)
+        self.pos += token_rows.shape[1]
+        self.n_calls += 1
+        self.n_call_tokens += int(np.prod(token_rows.shape))
+        self.last_logits = logits[:, -1]
+        self.last_features = feats
+        return logits
+
+    def prefill(self, prompt: Sequence[int]) -> None:
+        """Ingest prompt[:-1]; the final prompt token becomes pending so the
+        first verification round always has >= 1 input token."""
+        prompt = list(prompt)
+        assert len(prompt) >= 2, "need a prompt of >= 2 tokens"
+        self.forward(prompt[:-1])
+        self.pending = [prompt[-1]]
+        self.checkpoint()
+
+    # ----------------------------------------------------------- rollback
+    def checkpoint(self) -> None:
+        """Record a restore point (round start).  Cheap: holds references to
+        immutable jax arrays, no copies."""
+        self._ckpts.append(_Checkpoint(self.pos, self.cache,
+                                       self.last_logits, self.last_features))
+        if len(self._ckpts) > self.MAX_CHECKPOINTS:
+            self._ckpts.pop(0)
+
+    def reset_to(self, abs_len: int) -> None:
+        """Truncate the ingested stream to ``abs_len`` tokens.
+
+        Attention-only: positional (free).  SSM: restore the latest
+        checkpoint <= abs_len and replay the delta (logged).
+        ``last_logits`` is invalidated unless recoverable — engines always
+        refill ``pending`` after a reset, so the next forward regenerates it.
+        """
+        assert abs_len <= self.pos
+        self.pending = []
+        if abs_len == self.pos:
+            return
+        replay = self.tokens[:abs_len]
+        if not self.has_ssm:
+            self.pos = abs_len
+            self.tokens = replay
+            self.last_logits = None
+            self.last_features = None
+            return
+        cks = [c for c in self._ckpts if c.pos <= abs_len]
+        assert cks, "no checkpoint available for SSM rollback"
+        ck = cks[-1]
+        self.cache, self.pos = ck.cache, ck.pos
+        self.last_logits, self.last_features = ck.last_logits, ck.last_features
+        self.tokens = replay
+        delta = replay[ck.pos:]
+        if delta:
+            assert all(t >= 0 for t in delta), "cannot replay embed positions"
+            self.tokens = replay[:ck.pos]
+            self.forward(delta)
+            self.replay_calls += 1
+
+    # ------------------------------------------------------------- branch
+    def fork(self, k: int) -> None:
+        """Replicate the (batch=1) cache into k branch rows."""
+        assert self.batch == 1
+        self._prefork = (self.cache, self.pos)
+        self.cache = jax.tree.map(lambda a: jnp.repeat(a, k, axis=1),
+                                  self.cache)
+        self.batch = k
+
+    def select(self, i: int) -> None:
+        """Keep branch row i, collapse back to batch=1."""
+        self.cache = jax.tree.map(lambda a: a[:, i:i + 1], self.cache)
+        if self.last_logits is not None:
+            self.last_logits = self.last_logits[i:i + 1]
+        if self.last_features is not None:
+            self.last_features = self.last_features[:, i:i + 1]
+        self.batch = 1
+        self._prefork = None
+
+    def unfork(self) -> None:
+        """Abandon all branches: restore the pre-fork cache."""
+        assert self._prefork is not None
+        cache, pos = self._prefork
+        self.cache, self.pos = cache, pos
+        self.tokens = self.tokens[:pos]
+        self.batch = 1
+        self.last_logits = None
+        self.last_features = None
+        self._prefork = None
+
+
+def greedy_reference(params, cfg: ModelConfig, prompt: Sequence[int],
+                     n_new: int, *, max_len: int = 4096) -> List[int]:
+    """Plain autoregressive greedy generation (oracle for lossless tests)."""
+    r = ModelRunner(params, cfg, max_len=max_len)
+    r.forward(list(prompt))
+    out = []
+    for _ in range(n_new):
+        nxt = int(jnp.argmax(r.last_logits[0]))
+        out.append(nxt)
+        r.forward([nxt])
+    return out

@@ -1,0 +1,155 @@
+"""Speculative-sampling primitives (Sec. 3, Appendix D of the paper).
+
+All functions operate on *probability vectors* (float32, already
+temperature-adjusted).  Losslessness invariants covered by
+tests/test_sampling.py:
+
+  * ``verify_chain`` — Leviathan et al. chain verification: the emitted token
+    stream is distributed exactly as the target model.
+  * ``branch_spec_sample`` — Algorithm 2 (branch speculative sampling): with
+    candidates drawn i.i.d. from q, the returned token ~ p exactly.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def probs_from_logits(logits: jax.Array, temperature: float) -> jax.Array:
+    """(..., V) logits -> probabilities.  temperature == 0 -> one-hot argmax."""
+    logits = logits.astype(jnp.float32)
+    if temperature == 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1],
+                              dtype=jnp.float32)
+    return jax.nn.softmax(logits / temperature, axis=-1)
+
+
+def sample(key, probs: jax.Array) -> jax.Array:
+    """Categorical sample from a probability vector (..., V)."""
+    return jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)))
+
+
+def residual(p: jax.Array, q: jax.Array) -> jax.Array:
+    """norm(max(0, p - q)) — the rejection-resampling distribution."""
+    r = jnp.maximum(p - q, 0.0)
+    s = r.sum(-1, keepdims=True)
+    # if p <= q everywhere (can only happen up to fp error), fall back to p
+    return jnp.where(s > 1e-12, r / jnp.maximum(s, 1e-30), p)
+
+
+def top1_confidence(q: jax.Array) -> jax.Array:
+    return q.max(-1)
+
+
+def entropy_bound(q: jax.Array, lam: float = 0.15) -> jax.Array:
+    """AdaEDL's entropy-based acceptance-probability lower bound:
+    1 - sqrt(lambda * H(q))."""
+    h = -jnp.sum(q * jnp.log(jnp.maximum(q, 1e-30)), axis=-1)
+    return 1.0 - jnp.sqrt(jnp.maximum(lam * h, 0.0))
+
+
+class ChainVerdict(NamedTuple):
+    n_accepted: int          # tokens of the draft chain accepted
+    next_token: int          # resampled (on reject) or bonus (on all-accept)
+    all_accepted: bool
+
+
+def _np_categorical(u: float, probs) -> int:
+    import numpy as np
+    cdf = np.cumsum(probs)
+    cdf /= max(cdf[-1], 1e-30)
+    return int(np.searchsorted(cdf, u, side="right").clip(0, len(cdf) - 1))
+
+
+def verify_chain(key, p_probs: jax.Array, q_probs: jax.Array,
+                 draft_tokens: jax.Array,
+                 bonus_probs: Optional[jax.Array] = None) -> ChainVerdict:
+    """Chain speculative verification (Sec. 3).
+
+    p_probs, q_probs: (gamma, V) target/draft distributions at each draft
+    position; draft_tokens: (gamma,) the drafted ids; bonus_probs: (V,) the
+    target distribution after the last draft token (for the all-accept bonus
+    sample).  Host-side (python ints out) — the engine loop is host-driven,
+    so everything is pulled to numpy in one transfer.
+    """
+    import numpy as np
+    gamma = int(draft_tokens.shape[0])
+    us = np.asarray(jax.device_get(
+        jax.random.uniform(key, (gamma + 1,))), np.float64)
+    p_np = np.asarray(jax.device_get(p_probs), np.float64)
+    q_np = np.asarray(jax.device_get(q_probs), np.float64)
+    toks = np.asarray(jax.device_get(draft_tokens))
+    n = gamma
+    for i in range(gamma):
+        t = int(toks[i])
+        ratio = p_np[i, t] / max(q_np[i, t], 1e-30)
+        if us[i] > ratio:
+            n = i
+            break
+    if n == gamma:
+        if bonus_probs is None:
+            return ChainVerdict(n, -1, True)
+        b = np.asarray(jax.device_get(bonus_probs), np.float64)
+        return ChainVerdict(n, _np_categorical(us[-1], b), True)
+    r = np.maximum(p_np[n] - q_np[n], 0.0)
+    z = r.sum()
+    r = r / z if z > 1e-12 else p_np[n]
+    return ChainVerdict(n, _np_categorical(us[-1], r), False)
+
+
+class BranchVerdict(NamedTuple):
+    accepted_branch: int     # index into candidates, or -1 if none accepted
+    token: int               # the emitted branch-point token (~ p exactly)
+
+
+def branch_spec_sample(key, p_b: jax.Array, candidates: jax.Array,
+                       q_b: jax.Array) -> BranchVerdict:
+    """Algorithm 2 — branch speculative sampling.
+
+    p_b:        (V,) target distribution at the branch point.
+    candidates: (k,) candidate branch tokens (i.i.d. samples from q_b).
+    q_b:        (V,) draft distribution the candidates were sampled from.
+
+    Iterates candidates; accepts candidate i with prob min(1, p(x_i)/q(x_i));
+    on rejection updates p <- norm(max(0, p - q)).  If no candidate survives,
+    samples a fresh token from the final residual.  Exactly preserves p.
+    """
+    import numpy as np
+    k = int(candidates.shape[0])
+    us = np.asarray(jax.device_get(jax.random.uniform(key, (k + 1,))),
+                    np.float64)
+    p_cur = np.asarray(jax.device_get(p_b), np.float64)
+    q_np = np.asarray(jax.device_get(q_b), np.float64)
+    cands = np.asarray(jax.device_get(candidates))
+    for i in range(k):
+        t = int(cands[i])
+        ratio = p_cur[t] / max(q_np[t], 1e-30)
+        if us[i] < ratio:
+            return BranchVerdict(i, t)
+        r = np.maximum(p_cur - q_np, 0.0)
+        z = r.sum()
+        p_cur = r / z if z > 1e-12 else p_cur
+    return BranchVerdict(-1, _np_categorical(us[-1], p_cur))
+
+
+def draw_branch_candidates(key, q_b: jax.Array, k: int,
+                           mode: str = "sample") -> jax.Array:
+    """Branch-point candidates (Eq. 7).
+
+    mode="sample": k i.i.d. draws from q (provably lossless with Alg. 2 —
+    the default, matching Appendix D's "x_b^i is sampled from q(x_b^i)").
+    mode="topk":   deterministic Top-K of q (Eq. 7's literal form; used for
+    greedy/temperature-0 serving where both coincide in effect).
+    """
+    if mode == "topk":
+        _, idx = jax.lax.top_k(q_b, k)
+        return idx
+    keys = jax.random.split(key, k)
+    return jnp.stack([sample(kk, q_b) for kk in keys])
+
+
+def adaptive_k(q_conf: float, k_max: int) -> int:
+    """Eq. (7): k = max(1, floor(k_max * (1 - q(x_b))))."""
+    return max(1, int(k_max * (1.0 - q_conf)))

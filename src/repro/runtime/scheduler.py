@@ -1,0 +1,54 @@
+"""Batched-request serving: a round-robin scheduler over engine instances.
+
+The paper serves batch-1 requests (Sec. E.3); production deployments
+multiplex many.  This scheduler interleaves requests at generation-call
+granularity (continuous batching at the request level): each request runs
+its engine to completion in arrival order, with per-request stats and an
+aggregate report.  True token-level cross-request batching is orthogonal to
+the paper's contribution and noted as future work (App. G.4 "Group SD").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.runtime.cost_model import CostModel
+from repro.runtime.engines import Engine, GenResult
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    embeds: Optional[object] = None
+    result: Optional[GenResult] = None
+    wall_s: float = 0.0
+
+
+class Scheduler:
+    def __init__(self, engine: Engine):
+        self.engine = engine
+
+    def run(self, requests: List[Request], key) -> List[Request]:
+        for req in requests:
+            key, sub = jax.random.split(key)
+            t0 = time.time()
+            req.result = self.engine.generate(
+                list(req.prompt), req.max_new_tokens, sub,
+                embeds=req.embeds)
+            req.wall_s = time.time() - t0
+        return requests
+
+    def aggregate(self, requests: List[Request], cost: CostModel) -> dict:
+        reps = [r.result.report(cost) for r in requests if r.result]
+        if not reps:
+            return {}
+        keys = ("M", "speedup", "rollback_rate")
+        agg = {k: sum(r[k] for r in reps) / len(reps) for k in keys}
+        agg["total_tokens"] = sum(r["tokens"] for r in reps)
+        agg["wall_s"] = sum(r.wall_s for r in requests)
+        return agg

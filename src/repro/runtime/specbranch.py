@@ -1,0 +1,257 @@
+"""SpecBranch engine — hybrid drafting + rollback-aware branch parallelism
+(Sec. 5, Algorithm 1, Fig. 4/9).
+
+Stage machine (Fig. 9):
+
+DRAFT stage (serial; target idle):
+  H-RAD predicts s_t a-priori from (f_{t-1}, e_t) — the target features of
+  the *previous* target call plus the embedding of the newest token.
+    s=0 all-reject : branch point is the FIRST token of this round — draft
+                     nothing; spawn branches immediately.
+    s=1 confidence : draft until the draft confidence max q < eps; the
+                     low-confidence position is the branch point.
+    s=2 all-accept : draft gamma tokens; branch point is the first token of
+                     the NEXT round.
+  The drafted prefix becomes the verification chunk X_{1:b-1}.
+
+BRANCH stage (parallel; the paper's core):
+  * spawn k = max(1, floor(k_max * (1 - q(x_b)))) branch candidates from
+    q(x_b) (Eq. 7), fork the draft cache, and draft a gamma_branch-token
+    continuation on every branch (batched) — WHILE the target verifies the
+    chunk in the same wall-clock slot (cost max(draft, verify)).
+  * target result:
+      - mid-chunk rejection  -> rollback (chunk tail + one continuation
+        depth), resample, back to DRAFT.
+      - chunk accepted -> branch-point verification via branch speculative
+        sampling (Alg. 2) against p(x_b):
+          - branch i accepted -> keep branch i; posterior H-RAD (Sec. 5.2)
+            selects the retained continuation prefix and the next branch
+            point; stay in BRANCH.
+          - none accepted -> emit the Alg.-2 residual sample, rollback the
+            continuation depth, back to DRAFT.
+
+Ablations: ``use_hrad=False`` pins s_t = 1 (pure implicit confidence);
+``use_branch=False`` degrades to H-RAD + vanilla SD (single branch, serial
+timeline) — the paper's "w/o branch" variant (Fig. 6, Table 13).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hrad as H
+from repro.runtime import sampling as S
+from repro.runtime.engines import Engine, GenResult, _Ctx
+from repro.runtime.runner import ModelRunner
+
+
+class SpecBranchEngine(Engine):
+    name = "specbranch"
+
+    # ------------------------------------------------------------ helpers
+    def _hrad_signal(self, feats, embed_vec, ctx: _Ctx) -> int:
+        """s_t from the H-RAD MLP; falls back to the soft signal (1)."""
+        if not self.ecfg.use_hrad or self.hrad_params is None or feats is None:
+            return 1
+        z = H.build_feature(feats, embed_vec, self.ecfg.hrad_k_layers)
+        s = int(jax.device_get(H.predict(self.hrad_params, z)[0]))
+        ctx.stats.hrad_signals.append(s)
+        return s
+
+    def _feats_last(self, runner: ModelRunner) -> Optional[jax.Array]:
+        """(n_points, B, T, D) aux features -> (n_points, 1, D) at the last
+        position of batch row 0."""
+        f = runner.last_features
+        if f is None:
+            return None
+        return f[:, 0:1, -1, :]
+
+    def _embed_of(self, token: int) -> jax.Array:
+        return self.tp["embed"][jnp.asarray([token])].astype(jnp.float32)
+
+    def _branch_k(self, q_b: jax.Array) -> int:
+        if not self.ecfg.use_branch:
+            return 1
+        conf = float(jax.device_get(q_b.max()))
+        return min(self.ecfg.k_max,
+                   S.adaptive_k(conf, self.ecfg.k_max))
+
+    # ----------------------------------------------------------- drafting
+    def _serial_draft(self, draft: ModelRunner, ctx: _Ctx, s: int
+                      ) -> Tuple[List[int], List[jax.Array], jax.Array]:
+        """DRAFT-stage drafting per H_t (Eq. 6).
+
+        Returns (chunk, q_list for the chunk, q_b at the branch point).
+        Every drafted chunk token is ingested; q_b is the distribution at
+        the branch point (where candidates are spawned).
+        """
+        gamma = self.ecfg.gamma
+        if draft.pending:
+            draft.forward([])
+        chunk, qs = [], []
+        if s == 0:
+            ctx.stats.draft_tokens += 1      # the branch-point distribution
+            return chunk, qs, self._qsignal(draft.last_logits[0])
+        for i in range(gamma):
+            q = self._qprobs(draft.last_logits[0])
+            q_sig = self._qsignal(draft.last_logits[0])
+            conf = float(jax.device_get(q_sig.max()))
+            if s == 1 and conf < self.ecfg.epsilon:
+                ctx.stats.draft_tokens += 1
+                return chunk, qs, q_sig      # branch point found
+            tok = int(jax.device_get(S.sample(ctx.split(), q)))
+            chunk.append(tok)
+            qs.append(q)
+            ctx.stats.draft_tokens += 1
+            draft.forward([tok])
+        ctx.stats.draft_tokens += 1
+        return chunk, qs, self._qsignal(draft.last_logits[0])
+
+    def _branch_draft(self, draft: ModelRunner, cands: np.ndarray,
+                      ctx: _Ctx) -> Tuple[np.ndarray, List[jax.Array],
+                                          np.ndarray]:
+        """Fork + batched continuation drafting on k branches.
+
+        Returns (conts (k, gb), cont_q sampling dists, cont_sig signal
+        dists — lists of (k, V) per step — and confs (k, gb)).
+        Wall-clock: gb+1 draft steps (batched over k).
+        """
+        k = len(cands)
+        gb = self.ecfg.gamma_branch
+        draft.fork(k)
+        logits = draft.forward_batched(cands[:, None])
+        ctx.stats.draft_tokens += 1
+        conts = np.zeros((k, gb), np.int64)
+        confs = np.zeros((k, gb), np.float64)
+        cont_q: List[jax.Array] = []       # sampling dists (verification)
+        cont_sig: List[jax.Array] = []     # signal dists (branch points)
+        for j in range(gb):
+            q = self._qprobs(draft.last_logits)            # (k, V)
+            q_sig = self._qsignal(draft.last_logits)
+            cont_q.append(q)
+            cont_sig.append(q_sig)
+            toks = jax.device_get(
+                jax.vmap(S.sample)(jax.random.split(ctx.split(), k), q))
+            conts[:, j] = toks
+            confs[:, j] = jax.device_get(q_sig.max(-1))
+            draft.forward_batched(toks[:, None])
+            ctx.stats.draft_tokens += 1
+        return conts, cont_q, cont_sig, confs
+
+    # ----------------------------------------------------------- generate
+    def generate(self, prompt, n_new, key, embeds=None) -> GenResult:
+        ctx = _Ctx(key)
+        draft, target = self._new_runners()
+        if embeds is not None:
+            target.forward_embeds(embeds)
+            draft.forward_embeds(embeds)
+        draft.prefill(prompt)
+        target.prefill(prompt)
+        ctx.stats.target_calls += 1
+        plen = len(prompt) + (embeds.shape[1] if embeds is not None else 0)
+        gb = self.ecfg.gamma_branch
+        parallel = self.ecfg.use_branch
+
+        mode = "draft"
+        # BRANCH-stage carried state:
+        chunk: List[int] = []
+        chunk_q: List[jax.Array] = []
+        q_b: Optional[jax.Array] = None
+
+        while len(ctx.out) < n_new:
+            draft.checkpoint(), target.checkpoint()
+            if mode == "draft":
+                # ---------------- DRAFT stage (serial) ----------------
+                feats = self._feats_last(target)
+                e_t = self._embed_of(draft.pending[0] if draft.pending
+                                     else target.pending[0])
+                s = self._hrad_signal(feats, e_t, ctx)
+                chunk, chunk_q, q_b = self._serial_draft(draft, ctx, s)
+                ctx.timeline.append(("serial", len(chunk) + 1, 0))
+                mode = "branch"
+                continue
+
+            # ---------------- BRANCH stage (parallel) ----------------
+            k = self._branch_k(q_b)
+            cands = np.asarray(jax.device_get(S.draw_branch_candidates(
+                ctx.split(), q_b, k, self.ecfg.branch_mode)))
+            # draft k continuations || target verifies the chunk
+            conts, cont_q, cont_sig, confs = self._branch_draft(
+                draft, cands, ctx)
+            n, nxt, all_acc, p_b = self._verify(
+                target, chunk, jnp.stack(chunk_q) if chunk_q else None, ctx)
+            ctx.timeline.append(
+                ("parallel", gb + 1, 1) if parallel
+                else ("serial", gb + 1, 1))
+
+            if not all_acc:
+                # mid-chunk rejection: branches are doomed (Fig. 1a)
+                ctx.out.extend(chunk[:n] + [nxt])
+                ctx.stats.emitted += n + 1
+                ctx.stats.run_extend(n)
+                ctx.stats.run_break()
+                ctx.stats.rollback_tokens += (len(chunk) - n) + gb
+                draft.unfork()
+                self._reset_lineage(target, plen, ctx)
+                self._reset_lineage(draft, plen, ctx)
+                mode = "draft"
+                continue
+
+            # chunk fully accepted -> branch-point verification (Alg. 2)
+            verdict = S.branch_spec_sample(
+                ctx.split(), p_b, jnp.asarray(cands, jnp.int32), q_b)
+            if verdict.accepted_branch < 0:
+                # no branch survives: emit the residual sample, rollback
+                ctx.out.extend(chunk + [verdict.token])
+                ctx.stats.emitted += len(chunk) + 1
+                ctx.stats.run_extend(len(chunk))
+                ctx.stats.run_break()
+                ctx.stats.rollback_tokens += gb
+                draft.unfork()
+                self._reset_lineage(target, plen, ctx)
+                self._reset_lineage(draft, plen, ctx)
+                mode = "draft"
+                continue
+
+            i = verdict.accepted_branch
+            tok_b = verdict.token
+            ctx.out.extend(chunk + [tok_b])
+            ctx.stats.emitted += len(chunk) + 1
+            ctx.stats.run_extend(len(chunk) + 1)
+            target.pending = [tok_b]
+            draft.select(i)
+
+            # posterior H-RAD (Sec. 5.2): features from THIS verification
+            feats = self._feats_last(target)
+            s = self._hrad_signal(feats, self._embed_of(tok_b), ctx)
+            cont_i = [int(t) for t in conts[i]]
+            q_i = [cq[i] for cq in cont_q]
+            sig_i = [cs[i] for cs in cont_sig]
+            if s == 2:
+                chunk, chunk_q = cont_i, q_i
+                q_b = self._qsignal(draft.last_logits[0])
+                # draft cache already holds the full continuation
+            elif s == 0:
+                # prune the whole continuation; branch at its first token
+                chunk, chunk_q = [], []
+                q_b = sig_i[0]
+                ctx.stats.pruned_tokens += gb
+                draft.reset_to(plen + len(ctx.out))   # lineage incl. tok_b
+            else:
+                j = next((jj for jj in range(gb)
+                          if confs[i, jj] < self.ecfg.epsilon), gb)
+                if j == gb:
+                    chunk, chunk_q = cont_i, q_i
+                    q_b = self._qsignal(draft.last_logits[0])
+                else:
+                    chunk, chunk_q = cont_i[:j], q_i[:j]
+                    q_b = sig_i[j]
+                    ctx.stats.pruned_tokens += gb - j
+                    draft.reset_to(plen + len(ctx.out) + j)
+            mode = "branch"
+
+        ctx.stats.finish()
+        return GenResult(ctx.out[:n_new], ctx.stats, ctx.timeline)

@@ -1,0 +1,56 @@
+"""Minimal npz checkpointing: flatten a params pytree to path-keyed arrays.
+
+Paths encode list indices and dict keys ("blocks.0.mixer.wq"); restoring
+rebuilds into an existing template pytree (shape-checked)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    elif tree is None:
+        pass
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, params: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path, **flat)
+
+
+def load(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (dtypes preserved)."""
+    data = np.load(path)
+    flat = {k: data[k] for k in data.files}
+
+    def rebuild(tree: Any, prefix: str = "") -> Any:
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}.") for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [rebuild(v, f"{prefix}{i}.") for i, v in enumerate(tree)]
+        if isinstance(tree, tuple):
+            return tuple(rebuild(v, f"{prefix}{i}.")
+                         for i, v in enumerate(tree))
+        if tree is None:
+            return None
+        key = prefix[:-1]
+        arr = flat[key]
+        assert arr.shape == tree.shape, (key, arr.shape, tree.shape)
+        return jnp.asarray(arr, dtype=tree.dtype)
+
+    return rebuild(template)

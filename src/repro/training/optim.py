@@ -1,0 +1,67 @@
+"""AdamW with decoupled weight decay, global-norm clipping and cosine decay
+— the substrate optimizer (no external deps)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 20
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    return OptState(m=zeros(), v=zeros(), step=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState
+          ) -> Tuple[Any, OptState]:
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    lr = schedule(cfg, state.step)
+    m = jax.tree.map(lambda a, g: cfg.b1 * a + (1 - cfg.b1) * g,
+                     state.m, grads)
+    v = jax.tree.map(lambda a, g: cfg.b2 * a + (1 - cfg.b2) * g * g,
+                     state.v, grads)
+    bc1 = 1 - cfg.b1 ** step
+    bc2 = 1 - cfg.b2 ** step
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        return (p.astype(jnp.float32)
+                - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                        + cfg.weight_decay * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), OptState(m, v, step)

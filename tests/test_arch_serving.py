@@ -1,0 +1,67 @@
+"""SpecBranch serving across architecture families: one reduced arch per
+family runs the full engine (draft = reduced same-family ``draft()``) and
+must be greedy-lossless.  Exercises SSM state rollback, hybrid mixed caches,
+MoE routing in verification, VLM embed prefixes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.runtime.engines import EngineConfig, SpSEngine
+from repro.runtime.runner import ModelRunner, greedy_reference
+from repro.runtime.specbranch import SpecBranchEngine
+
+FAMILY_ARCHS = [
+    "falcon-mamba-7b",        # ssm
+    "jamba-1.5-large-398b",   # hybrid (mamba + attn + moe)
+    "qwen3-8b",               # dense
+    "granite-moe-3b-a800m",   # moe
+    "internvl2-2b",           # vlm
+]
+
+N_NEW = 12
+
+
+@pytest.fixture(scope="module", params=FAMILY_ARCHS)
+def family_pair(request):
+    arch = request.param
+    tcfg = get_config(arch).reduced()
+    dcfg = tcfg.replace(name=tcfg.name + "-draft",
+                        num_layers=tcfg.period, d_model=128,
+                        num_heads=2, num_kv_heads=1, head_dim=64,
+                        d_ff=min(tcfg.d_ff, 256) if tcfg.d_ff else 0,
+                        moe_d_ff=128 if tcfg.num_experts else 0,
+                        num_experts=min(tcfg.num_experts, 2) or 0,
+                        num_experts_per_tok=min(tcfg.num_experts_per_tok,
+                                                2) or 0)
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    prompt = list(np.random.default_rng(3).integers(0, tcfg.vocab_size,
+                                                    size=6))
+    return arch, dp, dcfg, tp, tcfg, prompt
+
+
+def test_family_specbranch_lossless(family_pair):
+    arch, dp, dcfg, tp, tcfg, prompt = family_pair
+    ref = greedy_reference(tp, tcfg, prompt, N_NEW, max_len=256)
+    ecfg = EngineConfig(gamma=3, c=4.0, temperature=0.0, epsilon=0.4,
+                        signal_temperature=0.5, max_len=256)
+    for cls in (SpSEngine, SpecBranchEngine):
+        eng = cls(dp, dcfg, tp, tcfg, ecfg)
+        r = eng.generate(prompt, N_NEW, jax.random.PRNGKey(7))
+        assert r.tokens == ref, (arch, cls.name)
+
+
+def test_vlm_embeds_prefix():
+    """VLM serving: stub patch embeddings prefix the prompt."""
+    tcfg = get_config("internvl2-2b").reduced()
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    embeds = jax.random.normal(jax.random.PRNGKey(5),
+                               (1, 8, tcfg.d_model), jnp.float32)
+    r = ModelRunner(tp, tcfg, max_len=256)
+    r.forward_embeds(embeds)
+    r.forward([1, 2, 3])
+    assert r.pos == 11
+    assert bool(jnp.isfinite(r.last_logits).all())

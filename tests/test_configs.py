@@ -1,0 +1,76 @@
+"""Config registry and arithmetic."""
+import pytest
+
+from repro.configs import ARCH_IDS, all_assigned, get_config
+
+
+def test_registry_complete():
+    cfgs = all_assigned()
+    assert len(cfgs) == 10
+    for a in ARCH_IDS:
+        assert cfgs[a].name == a
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("falcon-mamba-7b", 6.5e9, 7.8e9),
+    ("jamba-1.5-large-398b", 380e9, 420e9),
+    ("mistral-nemo-12b", 11.5e9, 13e9),
+    ("gemma2-27b", 26e9, 29e9),
+    ("qwen3-8b", 7.5e9, 9e9),
+    ("grok-1-314b", 300e9, 330e9),
+    ("gemma3-4b", 3.3e9, 4.5e9),
+    ("hubert-xlarge", 0.9e9, 1.5e9),
+    ("internvl2-2b", 1.6e9, 2.2e9),
+    ("granite-moe-3b-a800m", 2.8e9, 3.8e9),
+])
+def test_param_counts_match_names(arch, lo, hi):
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_moe():
+    g = get_config("grok-1-314b")
+    assert g.active_param_count() < 0.35 * g.param_count()
+    gr = get_config("granite-moe-3b-a800m")
+    assert 0.6e9 < gr.active_param_count() < 1.2e9   # "a800m"
+
+
+def test_layer_patterns():
+    j = get_config("jamba-1.5-large-398b")
+    kinds = j.layer_kinds()
+    assert sum(1 for m, _ in kinds if m == "attn") == 9        # 1:7 over 72
+    assert sum(1 for _, f in kinds if f == "moe") == 36        # every other
+    g3 = get_config("gemma3-4b")
+    kinds3 = g3.layer_kinds()
+    assert sum(1 for m, _ in kinds3 if m == "attn") == 5       # 34 = 5*6+4
+    assert g3.n_rem == 4
+
+
+def test_reduced_variants_bounded():
+    for a in ARCH_IDS:
+        r = get_config(a).reduced()
+        assert r.num_layers <= 2 * r.period
+        assert r.d_model <= 512
+        assert r.num_experts <= 4
+        assert r.vocab_size <= 512
+
+
+def test_applicability_flags():
+    assert not get_config("hubert-xlarge").supports_decode()
+    assert not get_config("mistral-nemo-12b").supports_long_context()
+    assert not get_config("qwen3-8b").supports_long_context()
+    assert not get_config("grok-1-314b").supports_long_context()
+    assert not get_config("internvl2-2b").supports_long_context()
+    assert get_config("falcon-mamba-7b").supports_long_context()
+    assert get_config("jamba-1.5-large-398b").supports_long_context()
+    assert get_config("gemma2-27b").supports_long_context()
+    assert get_config("gemma3-4b").supports_long_context()
+
+
+def test_draft_variants():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        d = cfg.draft()
+        assert d.family == cfg.family
+        assert d.vocab_size == cfg.vocab_size
+        assert d.param_count() < cfg.param_count()

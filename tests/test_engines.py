@@ -1,0 +1,126 @@
+"""Engine behaviour: greedy losslessness for all six engines, stats sanity,
+rollback accounting, ablation flags, SSM-target support."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_pairs import tiny_pair
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.runtime.cost_model import CostModel
+from repro.runtime.engines import (AdaEDLEngine, AutoregressiveEngine,
+                                   ConfidenceSDEngine, EngineConfig,
+                                   LookaheadEngine, PEARLEngine, SpSEngine)
+from repro.runtime.runner import greedy_reference
+from repro.runtime.specbranch import SpecBranchEngine
+
+N_NEW = 32
+
+
+@pytest.fixture(scope="module")
+def pair():
+    dcfg, tcfg = tiny_pair()
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    tp = M.init_params(jax.random.PRNGKey(2), tcfg)
+    prompt = list(np.random.default_rng(0).integers(0, 199, size=8))
+    ref = greedy_reference(tp, tcfg, prompt, N_NEW)
+    return dp, dcfg, tp, tcfg, prompt, ref
+
+
+ECFG = EngineConfig(gamma=4, c=6.0, temperature=0.0, epsilon=0.3,
+                    max_len=512)
+
+
+def _engines(dp, dcfg, tp, tcfg):
+    return {
+        "ar": AutoregressiveEngine(tp, tcfg, ECFG),
+        "sps": SpSEngine(dp, dcfg, tp, tcfg, ECFG),
+        "adaedl": AdaEDLEngine(dp, dcfg, tp, tcfg, ECFG),
+        "confidence": ConfidenceSDEngine(dp, dcfg, tp, tcfg, ECFG),
+        "lookahead": LookaheadEngine(tp, tcfg, ECFG),
+        "pearl": PEARLEngine(dp, dcfg, tp, tcfg, ECFG),
+        "specbranch": SpecBranchEngine(dp, dcfg, tp, tcfg, ECFG),
+    }
+
+
+def test_all_engines_greedy_lossless(pair):
+    dp, dcfg, tp, tcfg, prompt, ref = pair
+    for name, eng in _engines(dp, dcfg, tp, tcfg).items():
+        r = eng.generate(prompt, N_NEW, jax.random.PRNGKey(42))
+        assert r.tokens == ref, f"{name} diverged from greedy target"
+
+
+def test_stats_consistency(pair):
+    dp, dcfg, tp, tcfg, prompt, ref = pair
+    cost = CostModel(c=6.0)
+    for name, eng in _engines(dp, dcfg, tp, tcfg).items():
+        r = eng.generate(prompt, N_NEW, jax.random.PRNGKey(3))
+        rep = r.report(cost)
+        assert rep["tokens"] == N_NEW
+        assert 0.0 <= rep["rollback_rate"] <= 1.0
+        assert rep["speedup"] > 0
+        if name == "ar":
+            assert rep["speedup"] == pytest.approx(1.0)
+            assert rep["rollback_rate"] == 0.0
+
+
+def test_specbranch_ablations_lossless(pair):
+    dp, dcfg, tp, tcfg, prompt, ref = pair
+    for kw in [dict(use_hrad=False), dict(use_branch=False),
+               dict(use_branch=False, use_hrad=False)]:
+        ecfg = EngineConfig(gamma=4, c=6.0, temperature=0.0, max_len=512,
+                            **kw)
+        eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+        r = eng.generate(prompt, N_NEW, jax.random.PRNGKey(5))
+        assert r.tokens == ref, f"ablation {kw} diverged"
+
+
+def test_specbranch_branch_modes(pair):
+    dp, dcfg, tp, tcfg, prompt, ref = pair
+    for mode in ("sample", "topk"):
+        ecfg = EngineConfig(gamma=4, c=6.0, temperature=0.0, max_len=512,
+                            branch_mode=mode)
+        eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+        r = eng.generate(prompt, N_NEW, jax.random.PRNGKey(6))
+        assert r.tokens == ref
+
+
+def test_ssm_target_engine():
+    """Speculative decoding over a Mamba target (state rollback = replay)."""
+    tcfg = ModelConfig(
+        name="tiny-ssm", family="ssm", num_layers=2, d_model=64,
+        num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=101,
+        pattern=(("mamba", "none"),), dtype="float32")
+    dcfg = ModelConfig(
+        name="tiny-ssm-draft", family="ssm", num_layers=1, d_model=32,
+        num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=101,
+        pattern=(("mamba", "none"),), dtype="float32")
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    prompt = list(np.random.default_rng(1).integers(0, 101, size=6))
+    ref = greedy_reference(tp, tcfg, prompt, 16)
+    ecfg = EngineConfig(gamma=3, c=4.0, temperature=0.0, max_len=256)
+    for eng in (SpSEngine(dp, dcfg, tp, tcfg, ecfg),
+                SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)):
+        r = eng.generate(prompt, 16, jax.random.PRNGKey(2))
+        assert r.tokens == ref, type(eng).__name__
+
+
+def test_pearl_rollback_counts_doomed_chunk(pair):
+    """PEARL must charge the speculative next chunk on mid-chunk rejection
+    (the 'doomed tokens' of Fig. 1a)."""
+    dp, dcfg, tp, tcfg, prompt, _ = pair
+    eng = PEARLEngine(dp, dcfg, tp, tcfg, ECFG)
+    r = eng.generate(prompt, N_NEW, jax.random.PRNGKey(8))
+    # with a random draft there must be rejections, hence doomed chunks
+    assert r.stats.rollback_tokens >= ECFG.gamma
+
+
+def test_temperature_sampling_runs(pair):
+    dp, dcfg, tp, tcfg, prompt, _ = pair
+    ecfg = EngineConfig(gamma=4, c=6.0, temperature=0.8, max_len=512)
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+    r = eng.generate(prompt, 16, jax.random.PRNGKey(11))
+    assert len(r.tokens) == 16
+    assert all(0 <= t < tcfg.vocab_size for t in r.tokens)

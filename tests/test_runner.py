@@ -1,0 +1,99 @@
+"""ModelRunner invariants: pending semantics, positional rollback, SSM
+checkpoint-replay rollback, branch fork/select/unfork."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_pairs import tiny_pair
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.runtime.runner import ModelRunner
+
+_, TCFG = tiny_pair()
+PARAMS = M.init_params(jax.random.PRNGKey(0), TCFG)
+
+SSM_CFG = ModelConfig(name="s", family="ssm", num_layers=1, d_model=32,
+                      num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=53,
+                      pattern=(("mamba", "none"),), dtype="float32")
+SSM_PARAMS = M.init_params(jax.random.PRNGKey(1), SSM_CFG)
+
+
+def _logits_after(params, cfg, toks):
+    r = ModelRunner(params, cfg, max_len=256)
+    r.forward(toks)
+    return np.asarray(r.last_logits)
+
+
+def test_incremental_equals_bulk():
+    toks = [1, 5, 9, 12, 3, 7]
+    bulk = _logits_after(PARAMS, TCFG, toks)
+    r = ModelRunner(PARAMS, TCFG, max_len=256)
+    for t in toks:
+        r.forward([t])
+    np.testing.assert_allclose(np.asarray(r.last_logits), bulk, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_positional_rollback_attention():
+    """Speculative suffix then reset_to: next logits match the clean path."""
+    base = [2, 4, 6, 8]
+    r = ModelRunner(PARAMS, TCFG, max_len=256)
+    r.forward(base)
+    r.checkpoint()
+    r.forward([10, 11, 12])              # speculative
+    r.reset_to(len(base))
+    r.forward([5])                       # real continuation
+    clean = _logits_after(PARAMS, TCFG, base + [5])
+    np.testing.assert_allclose(np.asarray(r.last_logits), clean, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssm_rollback_replays():
+    base = [2, 4, 6, 8]
+    r = ModelRunner(SSM_PARAMS, SSM_CFG, max_len=256)
+    r.forward(base)
+    r.checkpoint()
+    r.forward([10, 11, 12])
+    r.reset_to(len(base) + 1)            # keep one speculative token
+    assert r.replay_calls == 1
+    r.forward([5])
+    clean = _logits_after(SSM_PARAMS, SSM_CFG, base + [10, 5])
+    np.testing.assert_allclose(np.asarray(r.last_logits), clean, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_fork_select_matches_serial():
+    base = [3, 1, 4, 1, 5]
+    r = ModelRunner(PARAMS, TCFG, max_len=256)
+    r.forward(base)
+    r.fork(3)
+    rows = np.asarray([[7], [8], [9]])
+    r.forward_batched(rows)
+    r.select(1)
+    r.forward([2])
+    clean = _logits_after(PARAMS, TCFG, base + [8, 2])
+    np.testing.assert_allclose(np.asarray(r.last_logits), clean, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_unfork_restores():
+    base = [3, 1, 4]
+    r = ModelRunner(PARAMS, TCFG, max_len=256)
+    r.forward(base)
+    pos0 = r.pos
+    r.fork(2)
+    r.forward_batched(np.asarray([[7], [9]]))
+    r.unfork()
+    assert r.pos == pos0 and r.batch == 1
+    r.forward([5])
+    clean = _logits_after(PARAMS, TCFG, base + [5])
+    np.testing.assert_allclose(np.asarray(r.last_logits), clean, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_prefill_pending_invariant():
+    r = ModelRunner(PARAMS, TCFG, max_len=256)
+    r.prefill([1, 2, 3, 4])
+    assert r.pending == [4]
+    assert r.pos == 3

@@ -1,0 +1,144 @@
+"""Losslessness of the sampling primitives — the paper's central claim
+("maintaining an identical sampling distribution", Table 6 / App. D).
+
+Property tests (hypothesis) + chi-square distribution checks:
+  * verify_chain: the first emitted token ~ target distribution p exactly,
+    regardless of the draft distribution q.
+  * branch_spec_sample (Alg. 2): the emitted branch token ~ p exactly when
+    candidates are i.i.d. draws from q — for any k and any q.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime import sampling as S
+
+
+def _rand_dist(rng, V, conc=1.0):
+    p = rng.gamma(conc, size=V)
+    return p / p.sum()
+
+
+def _chi2_ok(counts, probs, n, slack=2.0):
+    expected = probs * n
+    mask = expected > 5
+    chi2 = float(((counts[mask] - expected[mask]) ** 2
+                  / expected[mask]).sum())
+    dof = int(mask.sum()) - 1
+    # crude upper bound: chi2 ~ dof + slack*sqrt(2 dof)
+    return chi2 < dof + slack * 4 * np.sqrt(max(2 * dof, 1)), chi2, dof
+
+
+def test_residual_definition():
+    p = jnp.asarray([0.5, 0.3, 0.2])
+    q = jnp.asarray([0.2, 0.5, 0.3])
+    r = S.residual(p, q)
+    np.testing.assert_allclose(np.asarray(r), [1.0, 0.0, 0.0], atol=1e-6)
+
+
+def test_residual_degenerate_falls_back_to_p():
+    p = jnp.asarray([0.5, 0.5, 0.0])
+    r = S.residual(p, p)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=1e-6)
+
+
+def test_probs_from_logits_greedy():
+    lg = jnp.asarray([[0.1, 2.0, -1.0]])
+    p = S.probs_from_logits(lg, 0.0)
+    np.testing.assert_allclose(np.asarray(p), [[0, 1, 0]], atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_verify_chain_first_token_distribution(seed):
+    """Marginal of the first emitted token == p_1 (chi-square)."""
+    rng = np.random.default_rng(seed)
+    V, gamma, n = 12, 3, 1200
+    p = np.stack([_rand_dist(rng, V) for _ in range(gamma)])
+    q = np.stack([_rand_dist(rng, V) for _ in range(gamma)])
+    pj, qj = jnp.asarray(p, jnp.float32), jnp.asarray(q, jnp.float32)
+    counts = np.zeros(V)
+    key = jax.random.PRNGKey(seed)
+    for i in range(n):
+        key, k1, k2 = jax.random.split(key, 3)
+        drafts = np.array([rng.choice(V, p=q[g]) for g in range(gamma)])
+        verdict = S.verify_chain(k2, pj, qj, jnp.asarray(drafts),
+                                 bonus_probs=None)
+        first = drafts[0] if verdict.n_accepted > 0 else verdict.next_token
+        counts[first] += 1
+    ok, chi2, dof = _chi2_ok(counts, p[0], n)
+    assert ok, f"chi2={chi2:.1f} dof={dof}"
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_branch_spec_sample_preserves_p(k, seed):
+    """Algorithm 2: emitted branch token ~ p for i.i.d. candidates from q."""
+    rng = np.random.default_rng(seed)
+    V, n = 10, 1200
+    p = _rand_dist(rng, V, conc=0.5)
+    q = _rand_dist(rng, V, conc=0.5)
+    pj, qj = jnp.asarray(p, jnp.float32), jnp.asarray(q, jnp.float32)
+    counts = np.zeros(V)
+    key = jax.random.PRNGKey(seed + 17)
+    for i in range(n):
+        key, k1, k2 = jax.random.split(key, 3)
+        cands = rng.choice(V, size=k, p=q)
+        verdict = S.branch_spec_sample(k2, pj, jnp.asarray(cands), qj)
+        counts[verdict.token] += 1
+    ok, chi2, dof = _chi2_ok(counts, p, n)
+    assert ok, f"k={k}: chi2={chi2:.1f} dof={dof}"
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 30))
+@settings(max_examples=30, deadline=None)
+def test_branch_spec_sample_always_valid_token(seed, k, V):
+    """Fuzz: Alg. 2 always returns a token in-range with p-support."""
+    rng = np.random.default_rng(seed)
+    p = _rand_dist(rng, V)
+    q = _rand_dist(rng, V)
+    cands = rng.choice(V, size=k, p=q)
+    verdict = S.branch_spec_sample(
+        jax.random.PRNGKey(seed % 1000), jnp.asarray(p, jnp.float32),
+        jnp.asarray(cands), jnp.asarray(q, jnp.float32))
+    assert 0 <= verdict.token < V
+    assert p[verdict.token] > 0
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_verify_chain_prefix_consistency(seed, gamma):
+    """Fuzz: n_accepted <= gamma; greedy p accepts iff draft == argmax."""
+    rng = np.random.default_rng(seed)
+    V = 9
+    p = np.zeros((gamma, V), np.float32)
+    amax = rng.integers(0, V, gamma)
+    p[np.arange(gamma), amax] = 1.0
+    q = np.stack([_rand_dist(rng, V) for _ in range(gamma)]).astype(np.float32)
+    drafts = np.array([rng.choice(V, p=q[g]) for g in range(gamma)])
+    verdict = S.verify_chain(jax.random.PRNGKey(seed % 997), jnp.asarray(p),
+                             jnp.asarray(q), jnp.asarray(drafts), None)
+    expect = 0
+    for g in range(gamma):
+        if drafts[g] == amax[g]:
+            expect += 1
+        else:
+            break
+    assert verdict.n_accepted == expect
+    if expect < gamma:
+        assert verdict.next_token == amax[expect]
+
+
+def test_adaptive_k():
+    assert S.adaptive_k(0.9, 6) == 1
+    assert S.adaptive_k(0.5, 6) == 3
+    assert S.adaptive_k(0.01, 6) == 5
+    assert S.adaptive_k(0.0, 4) == 4
+
+
+def test_entropy_bound_monotone():
+    V = 50
+    flat = jnp.full((V,), 1.0 / V)
+    peaked = jnp.asarray([0.99] + [0.01 / (V - 1)] * (V - 1))
+    assert float(S.entropy_bound(peaked)) > float(S.entropy_bound(flat))

@@ -1,0 +1,111 @@
+"""Sharding rules: every spec must divide its dimension on the production
+meshes (validated abstractly — no devices needed), plus HLO collective
+parsing unit tests."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import steps
+from repro.sharding import rules
+from repro.sharding.hlo_analysis import collective_bytes
+
+
+class FakeMesh:
+    """Duck-typed mesh: rules only use ``mesh.shape`` membership/sizes."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+
+
+MESHES = [FakeMesh({"data": 16, "model": 16}),
+          FakeMesh({"pod": 2, "data": 16, "model": 16})]
+
+
+def _leaves_with_shapes(spec_tree, shape_tree):
+    import jax
+    specs = jax.tree.flatten(spec_tree,
+                             is_leaf=lambda x: isinstance(x, P))[0]
+    shapes = jax.tree.leaves(shape_tree)
+    assert len(specs) == len(shapes)
+    return zip(specs, shapes)
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(mesh, arch):
+    cfg = get_config(arch)
+    pshape = steps.params_shape(cfg)
+    spec = rules.params_specs(mesh, cfg, pshape)
+    for s, leaf in _leaves_with_shapes(spec, pshape):
+        assert len(s) <= len(leaf.shape)
+        for dim, axes in zip(leaf.shape, tuple(s)):
+            if axes is None:
+                continue
+            size = rules._axis_size(mesh, axes)
+            assert dim % size == 0, (arch, leaf.shape, s)
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("arch", ["gemma2-27b", "jamba-1.5-large-398b",
+                                  "falcon-mamba-7b"])
+@pytest.mark.parametrize("shard_seq", [False, True])
+def test_cache_specs_divisible(mesh, arch, shard_seq):
+    cfg = get_config(arch)
+    cshape = steps.cache_shape(cfg, 128, 32768)
+    spec = rules.cache_specs(mesh, cfg, cshape, shard_seq=shard_seq)
+    for s, leaf in _leaves_with_shapes(spec, cshape):
+        for dim, axes in zip(leaf.shape, tuple(s)):
+            if axes is None:
+                continue
+            assert dim % rules._axis_size(mesh, axes) == 0, (arch, leaf.shape,
+                                                             s)
+
+
+def test_applicability_matrix_counts():
+    """10 + 10 + 9 + 4 = 33 runnable pairs; 7 documented skips."""
+    runnable = skipped = 0
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for shape in steps.SHAPES:
+            ok, _ = steps.applicable(cfg, shape)
+            runnable += ok
+            skipped += not ok
+    assert runnable == 33
+    assert skipped == 7
+
+
+HLO = """
+HloModule test
+
+%cond.1 (p: (s32[], f32[128,64])) -> pred[] {
+  %gte = s32[] get-tuple-element(%p), index=0
+  ROOT %lt = pred[] compare(%gte, s32[] constant(9)), direction=LT
+}
+
+%body.1 (p: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %x = f32[128,64]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[128,1024]{1,0} all-gather(f32[128,64]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={1}
+  ROOT %t = (s32[], f32[128,64]) tuple(%gte2, %x)
+}
+
+ENTRY %main (a: f32[256,256]) -> f32[256,256] {
+  %ar = f32[256,256]{1,0} all-reduce(f32[256,256]{1,0} %a), replica_groups={{0,1,2,3}}
+  %w = (s32[], f32[128,64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[256,256]{1,0} copy(%ar)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = collective_bytes(HLO, default_group=16)
+    # all-reduce: 2 * (3/4) * 256*256*4 bytes
+    assert out["all-reduce"] == pytest.approx(2 * 0.75 * 256 * 256 * 4)
+    # all-gather inside while body: result 128*1024*4, ring 15/16, trips 9
+    assert out["all-gather"] == pytest.approx(9 * (15 / 16) * 128 * 1024 * 4)
+    assert out["total"] > 0
+
+
+def test_collective_bytes_empty():
+    out = collective_bytes("ENTRY %m (a: f32[4]) -> f32[4] { ROOT %c = f32[4] copy(%a) }")
+    assert out["total"] == 0

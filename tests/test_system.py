@@ -1,0 +1,119 @@
+"""End-to-end system behaviour on the trained Zipf-Markov pairs:
+
+  * SpecBranch > PEARL > SpS speedups on the misaligned pair (the paper's
+    headline ordering, Table 2);
+  * SpecBranch cuts PEARL's rollback substantially (Fig. 5);
+  * the H-RAD pipeline (collect -> train -> deploy) improves or preserves
+    speedup and emits hard signals;
+  * scheduler serves batched requests.
+
+Uses cached trained pairs (.cache/pairs); trains them on first run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.data.synthetic import ZipfMarkov
+from repro.core import hrad as H
+from repro.runtime import hrad_data
+from repro.runtime.cost_model import CostModel
+from repro.runtime.engines import (EngineConfig, PEARLEngine, SpSEngine)
+from repro.runtime.runner import greedy_reference
+from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.specbranch import SpecBranchEngine
+from repro.training.pairs import VOCAB, get_pair
+
+N_NEW = 48
+C = 10.0
+
+
+@pytest.fixture(scope="module")
+def mis_pair():
+    return get_pair("misaligned", steps=400)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    zm = ZipfMarkov(vocab=VOCAB, seed=7)
+    return zm.prompts(3, 12, seed=11)
+
+
+def _run(engine, prompts, seed=0):
+    cost = CostModel(c=C)
+    reps = []
+    for i, p in enumerate(prompts):
+        r = engine.generate(p, N_NEW, jax.random.PRNGKey(seed + i))
+        reps.append(r.report(cost))
+    return {k: float(np.mean([r[k] for r in reps])) for k in reps[0]}
+
+
+def test_engine_ordering_misaligned(mis_pair, prompts):
+    dp, dcfg, tp, tcfg = mis_pair
+    ecfg = EngineConfig(gamma=4, c=C, temperature=0.0, draft_temperature=0.0,
+                        signal_temperature=0.3, epsilon=0.5,
+                        branch_mode="topk", gamma_branch_override=4,
+                        max_len=1024)
+    sps = _run(SpSEngine(dp, dcfg, tp, tcfg, ecfg), prompts)
+    pearl = _run(PEARLEngine(dp, dcfg, tp, tcfg, ecfg), prompts)
+    sb = _run(SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg), prompts)
+    # headline claims, directionally (Table 2 / Fig. 5)
+    assert sb["speedup"] > sps["speedup"] * 0.95
+    assert sb["speedup"] > 1.0
+    assert sb["rollback_rate"] < pearl["rollback_rate"]
+
+
+def test_greedy_lossless_on_trained_pair(mis_pair, prompts):
+    dp, dcfg, tp, tcfg = mis_pair
+    ecfg = EngineConfig(gamma=4, c=C, temperature=0.0, draft_temperature=0.0,
+                        signal_temperature=0.3, epsilon=0.5,
+                        branch_mode="topk", gamma_branch_override=4,
+                        max_len=1024)
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+    for p in prompts:
+        ref = greedy_reference(tp, tcfg, p, N_NEW, max_len=1024)
+        r = eng.generate(p, N_NEW, jax.random.PRNGKey(0))
+        assert r.tokens == ref
+
+
+def test_hrad_pipeline_end_to_end(mis_pair, prompts):
+    dp, dcfg, tp, tcfg = mis_pair
+    ecfg = EngineConfig(gamma=4, c=C, temperature=0.0, draft_temperature=0.0,
+                        signal_temperature=0.3, epsilon=0.5,
+                        branch_mode="topk", gamma_branch_override=4,
+                        max_len=1024)
+    zm = ZipfMarkov(vocab=VOCAB, seed=7)
+    z, labels = hrad_data.collect(dp, dcfg, tp, tcfg,
+                                  zm.prompts(8, 12, seed=5), 48, ecfg)
+    assert z.shape[1] == (ecfg.hrad_k_layers + 1) * tcfg.d_model
+    assert set(np.unique(labels)).issubset({0, 1, 2})
+    hcfg = H.HRADConfig(k_layers=ecfg.hrad_k_layers, d_model=tcfg.d_model,
+                        epochs=12, lr=1e-3)
+    hrad_params, metrics = H.train_mlp(z, labels, hcfg)
+    # must beat a third of the majority-class baseline (tiny dataset —
+    # the accuracy bar lives in benchmarks/feature_layers)
+    maj = float(np.bincount(labels, minlength=3).max()) / len(labels)
+    assert metrics["val_acc"] >= min(0.15, maj / 3)
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
+                           hrad_params=hrad_params)
+    rep = _run(eng, prompts)
+    assert rep["speedup"] > 1.0
+    # lossless with H-RAD active
+    ref = greedy_reference(tp, tcfg, prompts[0], N_NEW, max_len=1024)
+    r = eng.generate(prompts[0], N_NEW, jax.random.PRNGKey(1))
+    assert r.tokens == ref
+
+
+def test_scheduler_batched_requests(mis_pair, prompts):
+    dp, dcfg, tp, tcfg = mis_pair
+    ecfg = EngineConfig(gamma=4, c=C, temperature=0.0, draft_temperature=0.0,
+                        signal_temperature=0.3, epsilon=0.5,
+                        branch_mode="topk", gamma_branch_override=4,
+                        max_len=1024)
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=16)
+            for i, p in enumerate(prompts)]
+    sched = Scheduler(eng)
+    done = sched.run(reqs, jax.random.PRNGKey(0))
+    agg = sched.aggregate(done, CostModel(c=C))
+    assert agg["total_tokens"] == 16 * len(prompts)
+    assert agg["speedup"] > 0

@@ -1,0 +1,47 @@
+"""Theorem 1 / Lemma 1 closed forms vs Monte-Carlo simulation (Fig. 2)."""
+import numpy as np
+import pytest
+
+from repro.core import theory as T
+
+
+def test_lemma1_matches_pmf_expectation():
+    for alpha in (0.3, 0.6, 0.9):
+        for gamma in (1, 4, 8):
+            pmf = T.truncated_geometric_pmf(alpha, gamma)
+            np.testing.assert_allclose(pmf.sum(), 1.0, atol=1e-12)
+            ex = (np.arange(gamma + 1) * pmf).sum()
+            np.testing.assert_allclose(
+                T.expected_accepted_len(alpha, gamma), ex, rtol=1e-10)
+
+
+def test_ideal_psd_speedup_limits():
+    # gamma == c, c >> 1: PSD ~2x over SD (Sec. 4.1)
+    c = 16
+    ratio = T.t_sd(c, c) / T.t_psd_ideal(c, c)
+    assert 1.8 < ratio < 2.0
+    # vs autoregressive: c-fold
+    assert T.t_ar(c) / T.t_psd_ideal(c, c) == pytest.approx(c)
+
+
+@pytest.mark.parametrize("alpha", [0.4, 0.7, 0.9])
+@pytest.mark.parametrize("gamma", [2, 6])
+def test_theorem1_matches_simulation(alpha, gamma):
+    c = 8.0
+    closed = T.t_psd_rollback(gamma, c, alpha)
+    sim = T.simulate_psd_rollback(gamma, c, alpha, n_rounds=200_000)
+    assert abs(sim - closed) / closed < 0.05, (closed, sim)
+
+
+def test_tradeoff_minimum_in_gamma_le_c():
+    """Fig. 2: the latency minimum lies in the gamma <= c segment."""
+    c = 10.0
+    for alpha in (0.5, 0.7, 0.9):
+        g_star = T.optimal_gamma(c, alpha, gamma_max=40)
+        assert g_star <= c + 1
+
+
+def test_rollback_penalty_monotone_in_alpha():
+    c, gamma = 10.0, 8
+    lats = [T.t_psd_rollback(gamma, c, a) for a in (0.3, 0.5, 0.7, 0.9)]
+    assert all(a > b for a, b in zip(lats, lats[1:]))
