@@ -1,0 +1,158 @@
+"""Serving throughput sweep: batch size x request-arrival rate, sequential
+vs continuous-batching, JSON report.
+
+For each (max_batch, arrival_interval) cell the same request set runs
+through both paths:
+
+  * sequential — runtime/scheduler.py round-robin (one request at a time;
+    a request arriving mid-generation waits for every earlier request);
+  * batched    — repro.serving continuous batching (token-level batching
+    with the paged KV pool).
+
+Throughput is modeled tokens-per-cost (runtime/cost_model.py, t = 1);
+sequential completion accounts for arrival gaps the same way the batched
+scheduler does (the clock idles until the next arrival).  Run with
+--pair trained for the cached Zipf-Markov pair, or the default random
+tiny pair for a fast smoke sweep.
+
+Usage:
+  PYTHONPATH=src python benchmarks/serving_throughput.py \
+      --out serving_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.data.synthetic import ZipfMarkov  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.config import ModelConfig, dense_pattern  # noqa: E402
+from repro.runtime.cost_model import CostModel  # noqa: E402
+from repro.runtime.engines import EngineConfig  # noqa: E402
+from repro.runtime.scheduler import sequential_arrival_cost  # noqa: E402
+from repro.runtime.specbranch import SpecBranchEngine  # noqa: E402
+from repro.serving import (BatchedSpecBranchEngine,  # noqa: E402
+                           ContinuousBatchScheduler, ServeRequest)
+
+
+def tiny_pair(vocab: int = 64):
+    def cfg(name, layers, d, heads):
+        return ModelConfig(name=name, family="dense", num_layers=layers,
+                           d_model=d, num_heads=heads,
+                           num_kv_heads=max(1, heads // 2), d_ff=4 * d,
+                           vocab_size=vocab, pattern=dense_pattern(0),
+                           dtype="float32")
+    tcfg = cfg("bench-t", 2, 64, 2)
+    dcfg = cfg("bench-d", 1, 32, 2)
+    return (M.init_params(jax.random.PRNGKey(1), dcfg), dcfg,
+            M.init_params(jax.random.PRNGKey(0), tcfg), tcfg)
+
+
+def run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
+                   cost) -> dict:
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+    timelines, total_tokens = [], 0
+    key = jax.random.PRNGKey(0)
+    for p in prompts:
+        key, sub = jax.random.split(key)
+        r = eng.generate(p, n_new, sub)
+        timelines.append(r.timeline)
+        total_tokens += len(r.tokens)
+    clock = sequential_arrival_cost(timelines, cost, interval)
+    return {"total_tokens": total_tokens, "total_cost": clock,
+            "tokens_per_cost": total_tokens / max(clock, 1e-9)}
+
+
+def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
+                max_batch) -> dict:
+    eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
+                                  max_batch=max_batch, page_size=16)
+    sched = ContinuousBatchScheduler(eng)
+    reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=n_new,
+                         arrival=i * interval)
+            for i, p in enumerate(prompts)]
+    sched.run(reqs)
+    rep = sched.report()
+    return {k: rep[k] for k in
+            ("total_tokens", "total_cost", "tokens_per_cost",
+             "ttft_p50", "ttft_p95", "itl_p50", "itl_p95",
+             "pool_occupancy_peak", "preemptions")} | {
+        "reclaimed_speculative_pages":
+            rep["pool"]["reclaimed_speculative_pages"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="random", choices=["random", "trained"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--batch-sizes", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--arrival-intervals", type=float, nargs="+",
+                    default=[0.0, 10.0])
+    ap.add_argument("--gamma", type=int, default=3)
+    ap.add_argument("--c", type=float, default=4.0)
+    ap.add_argument("--out", default="serving_sweep.json")
+    args = ap.parse_args()
+
+    if args.pair == "trained":
+        from repro.training.pairs import VOCAB, get_pair
+        dp, dcfg, tp, tcfg = get_pair("misaligned")
+        vocab = VOCAB
+    else:
+        dp, dcfg, tp, tcfg = tiny_pair()
+        vocab = tcfg.vocab_size
+    ecfg = EngineConfig(gamma=args.gamma, c=args.c, temperature=0.0,
+                        epsilon=0.4, signal_temperature=0.5, max_len=512)
+    cost = CostModel(c=args.c)
+    zm = ZipfMarkov(vocab=vocab, seed=7)
+    prompts = [list(map(int, p))
+               for p in zm.prompts(args.requests, 8, seed=3)]
+
+    grid = []
+    for interval in args.arrival_intervals:
+        t0 = time.time()
+        seq = run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts,
+                             args.new_tokens, interval, cost)
+        seq["wall_s"] = time.time() - t0
+        for mb in args.batch_sizes:
+            t0 = time.time()
+            bat = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
+                              args.new_tokens, interval, mb)
+            bat["wall_s"] = time.time() - t0
+            cell = {
+                "max_batch": mb,
+                "arrival_interval": interval,
+                "sequential": seq,
+                "batched": bat,
+                "throughput_gain": (bat["tokens_per_cost"]
+                                    / max(seq["tokens_per_cost"], 1e-9)),
+            }
+            grid.append(cell)
+            print(f"interval={interval:5.1f} max_batch={mb}: "
+                  f"seq {seq['tokens_per_cost']:.3f} tok/cost -> batched "
+                  f"{bat['tokens_per_cost']:.3f} "
+                  f"({cell['throughput_gain']:.2f}x)")
+
+    report = {
+        "engine": "specbranch",
+        "pair": args.pair,
+        "requests": args.requests,
+        "new_tokens": args.new_tokens,
+        "gamma": args.gamma,
+        "c": args.c,
+        "grid": grid,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, default=float)
+    print(f"wrote {args.out} ({len(grid)} cells)")
+
+
+if __name__ == "__main__":
+    main()

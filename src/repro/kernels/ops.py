@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged as _paged
 from repro.kernels import ssm_scan as _ssm
 from repro.kernels import verify_accept as _va
 
@@ -78,3 +79,10 @@ def verify_accept(p_logits, q_logits, tokens, uniforms, res_uniforms, *,
     it = _default_interpret() if interpret is None else interpret
     return _va.verify_accept(p_logits, q_logits, tokens, uniforms,
                              res_uniforms, interpret=it)
+
+
+def paged_gather(pages, table, *, interpret: Optional[bool] = None):
+    """Gather logical pages through a page table.  See kernels.paged."""
+    it = _default_interpret() if interpret is None else interpret
+    return _paged.paged_gather(jnp.asarray(pages), jnp.asarray(table),
+                               interpret=it)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel for paged KV gather (DESIGN.md §7.1).
+
+The serving pool stores KV token-rows in fixed-size pages scattered across a
+physical buffer (kv_pool.PagedStore); attention and cache-restore paths need
+them contiguous.  A gather through a page table is a pure data-movement
+kernel: the page table rides in SMEM via scalar prefetch, and the BlockSpec
+index_map turns logical page i into physical page ``table[i]`` so each grid
+step DMAs one page HBM->VMEM->HBM with no host round-trip per page.
+
+The XLA alternative — ``buf[table]`` — materialises gather indices per
+element; the Pallas version moves whole (page_size, dim) tiles, which is the
+layout paged-attention kernels consume.  Grid = (n_logical_pages,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(table_ref, pages_ref, out_ref):
+    # pages_ref is already the physical page selected by the index_map;
+    # the body is a straight VMEM copy.
+    del table_ref
+    out_ref[...] = pages_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(pages: jax.Array, table: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """Gather logical pages from a paged buffer.
+
+    pages: (num_physical_pages, page_size, dim) paged storage.
+    table: (n,) int32 physical page id per logical page.
+    Returns (n * page_size, dim) contiguous rows.
+    """
+    P, ps, dim = pages.shape
+    n = table.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, ps, dim), lambda i, t: (t[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, ps, dim), lambda i, t: (i, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, ps, dim), pages.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pages)
+    return out.reshape(n * ps, dim)

@@ -1,17 +1,29 @@
-"""Serving driver: SpecBranch (or any baseline engine) over batched
-requests with the round-robin scheduler.
+"""Serving driver: SpS / SpecBranch over batched requests.
 
-On this CPU container it serves the trained tiny Zipf-Markov pair; on real
-hardware the same engines run with draft/target sharded on disjoint mesh
-sub-axes (DESIGN.md §3).
+Two modes (DESIGN.md §7):
+
+  * ``--mode sequential`` — the original request-level round-robin baseline
+    (runtime/scheduler.py): each request runs its own engine to completion
+    in arrival order.
+  * ``--mode batched``   — the continuous-batching subsystem
+    (repro.serving): token-level batching with a paged KV pool,
+    rollback-aware page reclamation, step-granularity admission/retirement,
+    preemption + paged swap, and per-request streaming.
+
+Speeds are reported on the modeled clock (runtime/cost_model.py — wall
+clock is meaningless on this CPU container); both modes print the same
+``aggregate tokens/s`` metric so they compare directly on an identical
+request set.  On real hardware the same engines run with draft/target
+sharded on disjoint mesh sub-axes (DESIGN.md §3).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --engine specbranch \
-      --requests 4 --new-tokens 48
+      --mode batched --requests 8 --new-tokens 48
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -21,8 +33,11 @@ from repro.runtime.cost_model import CostModel
 from repro.runtime.engines import (AdaEDLEngine, AutoregressiveEngine,
                                    EngineConfig, LookaheadEngine, PEARLEngine,
                                    SpSEngine)
-from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.scheduler import (Request, Scheduler,
+                                     sequential_arrival_cost)
 from repro.runtime.specbranch import SpecBranchEngine
+from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
+                           ContinuousBatchScheduler, ServeRequest)
 from repro.training.pairs import VOCAB, get_pair
 
 ENGINES = {
@@ -32,6 +47,11 @@ ENGINES = {
     "lookahead": LookaheadEngine,
     "pearl": PEARLEngine,
     "specbranch": SpecBranchEngine,
+}
+
+BATCHED_ENGINES = {
+    "sps": BatchedSpSEngine,
+    "specbranch": BatchedSpecBranchEngine,
 }
 
 
@@ -46,9 +66,87 @@ def build_engine(name: str, ecfg: EngineConfig, pair_kind: str = "misaligned",
     return cls(dp, dcfg, tp, tcfg, ecfg)
 
 
+def run_sequential(args, ecfg, prompts) -> dict:
+    engine = build_engine(args.engine, ecfg, args.pair)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens)
+            for i, p in enumerate(prompts)]
+    sched = Scheduler(engine)
+    t0 = time.time()
+    done = sched.run(reqs, key=jax.random.PRNGKey(0))
+    wall = time.time() - t0
+    cost = CostModel(c=args.c)
+    agg = sched.aggregate(done, cost)
+    if args.arrival_interval > 0:
+        clock = sequential_arrival_cost(
+            [r.result.timeline for r in done], cost, args.arrival_interval)
+        agg["total_cost"] = clock
+        agg["tokens_per_cost"] = agg["total_tokens"] / max(clock, 1e-9)
+    print(f"\n== sequential {args.engine} on {args.pair} pair: "
+          f"{len(done)} requests, {wall:.1f}s wall (CPU) ==")
+    for r in done:
+        rep = r.result.report(cost)
+        print(f"req {r.rid}: {rep['tokens']} tok  M={rep['M']:.2f} "
+              f"speedup={rep['speedup']:.2f}x  RB={rep['rollback_rate']:.2f}")
+    print(f"wall per request: p50={agg['wall_p50']:.2f}s "
+          f"p95={agg['wall_p95']:.2f}s")
+    print(f"aggregate tokens/s (modeled, t=1): "
+          f"{agg['tokens_per_cost']:.4f}")
+    return agg
+
+
+def run_batched(args, ecfg, prompts) -> dict:
+    if args.engine not in BATCHED_ENGINES:
+        raise SystemExit(
+            f"--mode batched supports {sorted(BATCHED_ENGINES)}; "
+            f"run --engine {args.engine} with --mode sequential")
+    dp, dcfg, tp, tcfg = get_pair(args.pair)
+    eng = BATCHED_ENGINES[args.engine](
+        dp, dcfg, tp, tcfg, ecfg,
+        max_batch=args.max_batch,
+        page_size=args.page_size,
+        pool_pages=args.pool_pages,
+        swap_pages=args.swap_pages)
+    sched = ContinuousBatchScheduler(eng)
+    reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=args.new_tokens,
+                         arrival=i * args.arrival_interval)
+            for i, p in enumerate(prompts)]
+    t0 = time.time()
+    results = sched.run(reqs)
+    wall = time.time() - t0
+    rep = sched.report()
+    print(f"\n== batched {args.engine} on {args.pair} pair: "
+          f"{len(results)} requests, max_batch={args.max_batch}, "
+          f"{wall:.1f}s wall (CPU) ==")
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"req {rid}: {len(r.tokens)} tok  M={r.stats.mean_accepted:.2f}"
+              f"  RB={r.stats.rollback_rate:.2f}")
+    pool = rep["pool"]
+    print(f"rounds: {rep['rounds']}  preemptions: {rep['preemptions']}")
+    print(f"TTFT p50/p95 (modeled): {rep['ttft_p50']:.1f}/"
+          f"{rep['ttft_p95']:.1f}   ITL p50/p95: {rep['itl_p50']:.1f}/"
+          f"{rep['itl_p95']:.1f}")
+    print(f"pool occupancy: mean={rep['pool_occupancy_mean']:.2f} "
+          f"peak={rep['pool_occupancy_peak']:.2f}  "
+          f"(pages={eng.pool.num_pages} x {eng.pool.page_size} tok)")
+    print(f"reclaimed pages: rollback={pool['reclaimed_rollback_pages']} "
+          f"branch={pool['reclaimed_branch_pages']} "
+          f"prune={pool['reclaimed_prune_pages']} "
+          f"preempt={pool['reclaimed_preempt_pages']} "
+          f"retire={pool['reclaimed_retire_pages']}  "
+          f"(cow_copies={pool['cow_copies']})")
+    print(f"aggregate tokens/s (modeled, t=1): "
+          f"{rep['tokens_per_cost']:.4f}")
+    return rep
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="specbranch", choices=list(ENGINES))
+    ap.add_argument("--mode", default=None,
+                    choices=["sequential", "batched"],
+                    help="default: batched for engines with a batched "
+                    "implementation, sequential otherwise")
     ap.add_argument("--pair", default="misaligned",
                     choices=["misaligned", "aligned"])
     ap.add_argument("--requests", type=int, default=4)
@@ -56,25 +154,45 @@ def main() -> None:
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--c", type=float, default=10.0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="KV pool pages (default: sized for max_batch "
+                    "full-length requests; smaller values exercise "
+                    "preemption)")
+    ap.add_argument("--swap-pages", type=int, default=256,
+                    help="paged swap-store pages for preempted requests")
+    ap.add_argument("--arrival-interval", type=float, default=0.0,
+                    help="modeled time units between request arrivals")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="decode-cache length; 0 = auto-size to the "
+                    "request shape (prompt + new tokens + speculation "
+                    "headroom), min 512")
+    ap.add_argument("--json", default=None,
+                    help="write the aggregate report to this path")
     args = ap.parse_args()
+    if args.mode is None:
+        args.mode = ("batched" if args.engine in BATCHED_ENGINES
+                     else "sequential")
 
-    ecfg = EngineConfig(gamma=args.gamma, c=args.c,
-                        temperature=args.temperature, max_len=2048)
-    engine = build_engine(args.engine, ecfg, args.pair)
     zm = ZipfMarkov(vocab=VOCAB, seed=7)
-    reqs = [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens)
-            for i, p in enumerate(zm.prompts(args.requests, 16, seed=3))]
-    sched = Scheduler(engine)
-    t0 = time.time()
-    done = sched.run(reqs, key=jax.random.PRNGKey(0))
-    wall = time.time() - t0
-    cost = CostModel(c=args.c)
-    print(f"\n== {args.engine} on {args.pair} pair: {len(done)} requests, "
-          f"{wall:.1f}s wall (CPU) ==")
-    for r in done:
-        rep = r.result.report(cost)
-        print(f"req {r.rid}: {rep['tokens']} tok  M={rep['M']:.2f} "
-              f"speedup={rep['speedup']:.2f}x  RB={rep['rollback_rate']:.2f}")
+    prompts = [list(map(int, p))
+               for p in zm.prompts(args.requests, 16, seed=3)]
+    max_len = args.max_len
+    if max_len <= 0:
+        need = (max(len(p) for p in prompts) + args.new_tokens
+                + 4 * (args.gamma + int(args.c)))
+        max_len = max(512, 1 << (need - 1).bit_length())
+    ecfg = EngineConfig(gamma=args.gamma, c=args.c,
+                        temperature=args.temperature, max_len=max_len)
+    if args.mode == "sequential":
+        rep = run_sequential(args, ecfg, prompts)
+    else:
+        rep = run_batched(args, ecfg, prompts)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=2, default=float)
+        print(f"report written to {args.json}")
 
 
 if __name__ == "__main__":

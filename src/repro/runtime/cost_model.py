@@ -14,9 +14,20 @@ Round kinds:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+import math
+from typing import List, Sequence, Tuple
 
 Round = Tuple[str, int, int]
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100], fractional ok); 0.0 on
+    empty input."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    rank = max(1, math.ceil(q * len(ys) / 100.0))
+    return float(ys[min(rank, len(ys)) - 1])
 
 
 @dataclasses.dataclass

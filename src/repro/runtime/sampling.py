@@ -63,6 +63,32 @@ def _np_categorical(u: float, probs) -> int:
     return int(np.searchsorted(cdf, u, side="right").clip(0, len(cdf) - 1))
 
 
+def verify_chain_np(us, p_np, q_np, toks,
+                    bonus_np=None) -> ChainVerdict:
+    """Numpy core of chain verification: uniforms supplied by the caller.
+
+    us: (gamma + 1,) uniforms — us[i] decides draft position i, us[-1] draws
+    the residual/bonus sample.  All distributions float64 numpy.
+    """
+    import numpy as np
+    gamma = len(toks)
+    n = gamma
+    for i in range(gamma):
+        t = int(toks[i])
+        ratio = p_np[i, t] / max(q_np[i, t], 1e-30)
+        if us[i] > ratio:
+            n = i
+            break
+    if n == gamma:
+        if bonus_np is None:
+            return ChainVerdict(n, -1, True)
+        return ChainVerdict(n, _np_categorical(us[-1], bonus_np), True)
+    r = np.maximum(p_np[n] - q_np[n], 0.0)
+    z = r.sum()
+    r = r / z if z > 1e-12 else p_np[n]
+    return ChainVerdict(n, _np_categorical(us[-1], r), False)
+
+
 def verify_chain(key, p_probs: jax.Array, q_probs: jax.Array,
                  draft_tokens: jax.Array,
                  bonus_probs: Optional[jax.Array] = None) -> ChainVerdict:
@@ -81,27 +107,33 @@ def verify_chain(key, p_probs: jax.Array, q_probs: jax.Array,
     p_np = np.asarray(jax.device_get(p_probs), np.float64)
     q_np = np.asarray(jax.device_get(q_probs), np.float64)
     toks = np.asarray(jax.device_get(draft_tokens))
-    n = gamma
-    for i in range(gamma):
-        t = int(toks[i])
-        ratio = p_np[i, t] / max(q_np[i, t], 1e-30)
-        if us[i] > ratio:
-            n = i
-            break
-    if n == gamma:
-        if bonus_probs is None:
-            return ChainVerdict(n, -1, True)
-        b = np.asarray(jax.device_get(bonus_probs), np.float64)
-        return ChainVerdict(n, _np_categorical(us[-1], b), True)
-    r = np.maximum(p_np[n] - q_np[n], 0.0)
-    z = r.sum()
-    r = r / z if z > 1e-12 else p_np[n]
-    return ChainVerdict(n, _np_categorical(us[-1], r), False)
+    bonus_np = (None if bonus_probs is None
+                else np.asarray(jax.device_get(bonus_probs), np.float64))
+    return verify_chain_np(us, p_np, q_np, toks, bonus_np)
 
 
 class BranchVerdict(NamedTuple):
     accepted_branch: int     # index into candidates, or -1 if none accepted
     token: int               # the emitted branch-point token (~ p exactly)
+
+
+def branch_spec_sample_np(us, p_np, cands, q_np) -> BranchVerdict:
+    """Numpy core of Algorithm 2: uniforms supplied by the caller.
+
+    us: (k + 1,) uniforms — us[i] decides candidate i, us[-1] draws the
+    final residual sample.  Distributions float64 numpy.
+    """
+    import numpy as np
+    p_cur = p_np
+    for i in range(len(cands)):
+        t = int(cands[i])
+        ratio = p_cur[t] / max(q_np[t], 1e-30)
+        if us[i] < ratio:
+            return BranchVerdict(i, t)
+        r = np.maximum(p_cur - q_np, 0.0)
+        z = r.sum()
+        p_cur = r / z if z > 1e-12 else p_cur
+    return BranchVerdict(-1, _np_categorical(us[-1], p_cur))
 
 
 def branch_spec_sample(key, p_b: jax.Array, candidates: jax.Array,
@@ -123,15 +155,7 @@ def branch_spec_sample(key, p_b: jax.Array, candidates: jax.Array,
     p_cur = np.asarray(jax.device_get(p_b), np.float64)
     q_np = np.asarray(jax.device_get(q_b), np.float64)
     cands = np.asarray(jax.device_get(candidates))
-    for i in range(k):
-        t = int(cands[i])
-        ratio = p_cur[t] / max(q_np[t], 1e-30)
-        if us[i] < ratio:
-            return BranchVerdict(i, t)
-        r = np.maximum(p_cur - q_np, 0.0)
-        z = r.sum()
-        p_cur = r / z if z > 1e-12 else p_cur
-    return BranchVerdict(-1, _np_categorical(us[-1], p_cur))
+    return branch_spec_sample_np(us, p_cur, cands, q_np)
 
 
 def draw_branch_candidates(key, q_b: jax.Array, k: int,

@@ -1,11 +1,12 @@
-"""Batched-request serving: a round-robin scheduler over engine instances.
+"""Sequential-request serving: a round-robin scheduler over engine
+instances — the ``--mode sequential`` baseline of launch/serve.py.
 
-The paper serves batch-1 requests (Sec. E.3); production deployments
-multiplex many.  This scheduler interleaves requests at generation-call
-granularity (continuous batching at the request level): each request runs
-its engine to completion in arrival order, with per-request stats and an
-aggregate report.  True token-level cross-request batching is orthogonal to
-the paper's contribution and noted as future work (App. G.4 "Group SD").
+The paper serves batch-1 requests (Sec. E.3); each request runs its engine
+to completion in arrival order, with per-request stats and an aggregate
+report.  Token-level cross-request batching (App. G.4 "Group SD") lives in
+the continuous-batching subsystem (repro.serving, DESIGN.md §7), which
+shares this module's aggregate metric definitions so the two modes compare
+directly.
 """
 from __future__ import annotations
 
@@ -15,7 +16,7 @@ from typing import List, Optional, Sequence
 
 import jax
 
-from repro.runtime.cost_model import CostModel
+from repro.runtime.cost_model import CostModel, percentile
 from repro.runtime.engines import Engine, GenResult
 
 
@@ -27,6 +28,19 @@ class Request:
     embeds: Optional[object] = None
     result: Optional[GenResult] = None
     wall_s: float = 0.0
+
+
+def sequential_arrival_cost(timelines, cost: CostModel,
+                            arrival_interval: float) -> float:
+    """Modeled completion time of back-to-back sequential serving with
+    staggered arrivals: the clock idles until request i arrives at
+    ``i * arrival_interval`` — the same arrival model the batched
+    scheduler uses, so both modes' tokens_per_cost compare directly."""
+    clock = 0.0
+    for i, tl in enumerate(timelines):
+        clock = max(clock, i * arrival_interval)
+        clock += cost.total(tl)
+    return clock
 
 
 class Scheduler:
@@ -44,11 +58,21 @@ class Scheduler:
         return requests
 
     def aggregate(self, requests: List[Request], cost: CostModel) -> dict:
-        reps = [r.result.report(cost) for r in requests if r.result]
+        done = [r for r in requests if r.result]
+        reps = [r.result.report(cost) for r in done]
         if not reps:
             return {}
         keys = ("M", "speedup", "rollback_rate")
         agg = {k: sum(r[k] for r in reps) / len(reps) for k in keys}
         agg["total_tokens"] = sum(r["tokens"] for r in reps)
         agg["wall_s"] = sum(r.wall_s for r in requests)
+        walls = [r.wall_s for r in done]
+        agg["wall_p50"] = percentile(walls, 50)
+        agg["wall_p95"] = percentile(walls, 95)
+        # modeled aggregate throughput: requests run back-to-back, so the
+        # total cost is the sum of per-request timeline costs (comparable
+        # to the batched scheduler's shared-clock tokens_per_cost)
+        total_cost = sum(cost.total(r.result.timeline) for r in done)
+        agg["total_cost"] = total_cost
+        agg["tokens_per_cost"] = agg["total_tokens"] / max(total_cost, 1e-9)
         return agg

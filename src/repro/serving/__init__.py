@@ -1,0 +1,30 @@
+"""Continuous-batching serving subsystem (DESIGN.md §7).
+
+Layers:
+
+  * kv_pool          — paged KV-cache pool: fixed-size pages, free-list
+                       allocator, copy-on-write branch forks, rollback-aware
+                       reclamation; plus a paged backing store (swap space)
+                       read back through the Pallas paged-gather kernel.
+  * batched_engine   — multi-row decoder + batched SpS / SpecBranch engines
+                       (draft steps and the target verify call batched over
+                       requests; per-request rollback via page reclamation).
+  * batch_scheduler  — continuous batching: step-granularity admission and
+                       retirement, FIFO fairness, pool-pressure preemption,
+                       per-request streaming callbacks.
+  * metrics          — throughput / TTFT / inter-token-latency percentiles,
+                       pool occupancy and reclamation accounting.
+"""
+from repro.serving.batch_scheduler import (ContinuousBatchScheduler,
+                                           ServeRequest)
+from repro.serving.batched_engine import (BatchedDecoder, BatchedSpSEngine,
+                                          BatchedSpecBranchEngine)
+from repro.serving.kv_pool import PagedKVPool, PagedStore, PoolExhausted
+from repro.serving.metrics import ServingMetrics, percentile
+
+__all__ = [
+    "ContinuousBatchScheduler", "ServeRequest",
+    "BatchedDecoder", "BatchedSpSEngine", "BatchedSpecBranchEngine",
+    "PagedKVPool", "PagedStore", "PoolExhausted",
+    "ServingMetrics", "percentile",
+]

@@ -1,0 +1,931 @@
+"""Batched serving engines: SpS and SpecBranch draft/verify rounds run
+across a whole batch of requests (DESIGN.md §7.2).
+
+``BatchedDecoder`` is the substrate: one model with an N-row decode cache
+and *per-row* positions, so requests at different sequence lengths share
+every forward call.  Rows are independent under attention (the causal mask
+is position-driven and the cache is written at per-row slots), which gives
+three properties the serving layer builds on:
+
+  * multi-token rows of different lengths batch by padding — pad writes land
+    beyond a row's logical length and are causally masked until overwritten
+    (the runner's positional-rollback model, DESIGN.md §3);
+  * per-request rollback is positional: shrink the row's logical length and
+    reclaim the pages of the rejected tokens (kv_pool) — no cache copies;
+  * SpecBranch branch forks are extra draft rows plus copy-on-write page
+    sharing in the pool, not batch-axis cache replication.
+
+Engine contract: per-request token streams are distributed exactly as the
+sequential engines (lossless; token-for-token identical under a greedy
+target).  Per-request verification/sampling runs host-side in float64 numpy
+(the repo's convention, runtime/sampling.py) with a per-request RNG, so a
+request's output is independent of which batch it rode in.
+
+Cost accounting (Group SD, App. G.4): a round's draft steps are batched
+over rows and its target verify is ONE batched call, priced the same as a
+single-request call because decode-time target forwards are memory-bound.
+A SpS round is serial like its sequential counterpart
+(``draft_steps * t + c * t``); a SpecBranch round with branch-stage
+requests overlaps drafting with verification
+(``max(draft_steps * t, c * t)``).  The batching win is amortization:
+one target-call price per round covers every request in the batch.  SSM
+models carry recurrent state that padding would corrupt, so the batched
+path is attention-only; ``--mode sequential`` serves the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hrad as H
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.runtime import sampling as S
+from repro.runtime.cost_model import CostModel
+from repro.runtime.engines import EngineConfig, GenResult, GenStats
+from repro.serving.kv_pool import PagedKVPool, PagedStore, PoolExhausted
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    return any(m == "mamba" for m, _ in cfg.pattern)
+
+
+# ---------------------------------------------------------------------------
+# multi-row decoder
+# ---------------------------------------------------------------------------
+
+class BatchedDecoder:
+    """One model + an N-row decode cache with per-row positions.
+
+    The engine owns per-row logical lengths; the decoder is a thin compute
+    wrapper: ``step`` runs one batched forward at caller-supplied per-row
+    start positions, ``prefill_row`` ingests a prompt into a fresh row via a
+    batch-1 forward scattered into the batched cache (no full-batch compute
+    at admission), ``copy_row`` implements branch forks.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_rows: int,
+                 max_len: int):
+        assert not _has_ssm(cfg), \
+            "batched decoding is attention-only (SSM state cannot be padded)"
+        self.params, self.cfg = params, cfg
+        self.n_rows, self.max_len = n_rows, max_len
+        self.cache = M.init_cache(cfg, n_rows, max_len)
+        self.free_rows: List[int] = list(range(n_rows - 1, -1, -1))
+        # per-row write head: idle rows in a batched call park HERE, so
+        # their pad writes land exactly where the row's next real write
+        # lands (causally masked until overwritten) — parking anywhere
+        # else would clobber live slots (pos 0 = the first prompt token!)
+        self.row_pos = np.zeros(n_rows, np.int64)
+        self.n_calls = 0
+        self.n_call_tokens = 0
+
+        @jax.jit
+        def _fwd(params, cache, tokens, pos):
+            positions = pos[:, None] + jnp.arange(
+                tokens.shape[1], dtype=jnp.int32)[None]
+            logits, cache, aux = M.forward(
+                params, cfg, tokens, cache=cache, positions=positions,
+                feature_mode="all")
+            return logits, cache, aux["features"]
+
+        @jax.jit
+        def _set_row(cache, sub, row):
+            def put(a, b):
+                start = (0, row) + (0,) * (a.ndim - 2)
+                return jax.lax.dynamic_update_slice(a, b.astype(a.dtype),
+                                                    start)
+            return jax.tree.map(put, cache, sub)
+
+        @jax.jit
+        def _copy_row(cache, src, dst):
+            def cp(a):
+                r = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(a, r, dst, axis=1)
+            return jax.tree.map(cp, cache)
+
+        self._fwd, self._set_row, self._copy_row = _fwd, _set_row, _copy_row
+
+        # swap-space layout: flatten one row's cache to (L, swap_dim) token
+        # rows.  Only exact when every leaf keeps the full sequence axis
+        # (global attention); sliding-window rings would fold positions.
+        shapes = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_len))
+        self._leaf_shapes = [tuple(s.shape) for s in jax.tree.leaves(shapes)]
+        self._leaf_dtypes = [s.dtype for s in jax.tree.leaves(shapes)]
+        self._treedef = jax.tree.structure(shapes)
+        self.swappable = all(s[2] == max_len for s in self._leaf_shapes)
+        self.swap_dim = sum(s[0] * int(np.prod(s[3:], dtype=np.int64))
+                            for s in self._leaf_shapes)
+
+    # -------------------------------------------------------------- compute
+    def step(self, tokens: np.ndarray, pos: np.ndarray
+             ) -> Tuple[jax.Array, jax.Array]:
+        """Batched forward: tokens (n_rows, T), pos (n_rows,) start
+        positions.  Returns (logits (n_rows, T, V), feats)."""
+        assert tokens.shape[0] == self.n_rows
+        logits, self.cache, feats = self._fwd(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32))
+        self.n_calls += 1
+        self.n_call_tokens += int(tokens.size)
+        return logits, feats
+
+    def prefill_row(self, row: int, tokens: Sequence[int]
+                    ) -> Tuple[jax.Array, jax.Array]:
+        """Ingest ``tokens`` into a fresh row.  Returns (logits, feats) of
+        the batch-1 prefill call."""
+        assert len(tokens) >= 1
+        tmp = M.init_cache(self.cfg, 1, self.max_len)
+        logits, tmp, feats = self._fwd(
+            self.params, tmp, jnp.asarray([list(tokens)], jnp.int32),
+            jnp.zeros((1,), jnp.int32))
+        self.cache = self._set_row(self.cache, tmp, jnp.int32(row))
+        self.row_pos[row] = len(tokens)
+        self.n_calls += 1
+        self.n_call_tokens += len(tokens)
+        return logits, feats
+
+    def copy_row(self, src: int, dst: int) -> None:
+        self.cache = self._copy_row(self.cache, jnp.int32(src),
+                                    jnp.int32(dst))
+        self.row_pos[dst] = self.row_pos[src]
+
+    # ----------------------------------------------------------- swap space
+    def pack_row(self, row: int, length: int) -> np.ndarray:
+        """Flatten the first ``length`` KV slots of a row to (L, swap_dim)
+        float32 token-rows (pos leaves are exact in f32 for max_len < 2^24).
+        """
+        assert self.swappable
+        sub = jax.device_get(jax.tree.map(lambda a: a[:, row], self.cache))
+        parts = [np.moveaxis(np.asarray(lf)[:, :length], 1, 0)
+                 .reshape(length, -1).astype(np.float32)
+                 for lf in jax.tree.leaves(sub)]
+        return np.concatenate(parts, axis=1)
+
+    def unpack_row(self, row: int, rows: np.ndarray) -> None:
+        """Restore a row from packed token-rows (inverse of pack_row);
+        slots beyond len(rows) are reset to empty (pos = -1)."""
+        assert self.swappable
+        L = rows.shape[0]
+        leaves, off = [], 0
+        for shape, dtype in zip(self._leaf_shapes, self._leaf_dtypes):
+            stack, tail = shape[0], shape[3:]
+            width = stack * int(np.prod(tail, dtype=np.int64))
+            seg = rows[:, off:off + width].reshape((L, stack) + tail)
+            off += width
+            fill = -1 if np.issubdtype(dtype, np.integer) else 0
+            full = np.full((stack, self.max_len) + tail, fill,
+                           dtype=dtype)
+            full[:, :L] = np.moveaxis(seg, 0, 1)
+            leaves.append(jnp.asarray(full)[:, None])    # add batch axis
+        sub = jax.tree.unflatten(self._treedef, leaves)
+        self.cache = self._set_row(self.cache, sub, jnp.int32(row))
+        self.row_pos[row] = L
+
+
+# ---------------------------------------------------------------------------
+# per-request state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Stream:
+    """One model-side token stream living in a decoder row."""
+    row: int
+    ing: int = 0                     # KV slots written (row positions 0..)
+    pending: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Seq:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    on_token: Optional[Callable[[int, int, float], None]]
+    rng: np.random.Generator
+    tgt: _Stream = None
+    dft: _Stream = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    stats: GenStats = dataclasses.field(default_factory=GenStats)
+    streamed: int = 0                # tokens already delivered via callback
+    admit_order: int = -1
+    done: bool = False
+    feats_last: Optional[jax.Array] = None   # (n_points, 1, D)
+    # SpecBranch carried state
+    mode: str = "draft"
+    chunk: List[int] = dataclasses.field(default_factory=list)
+    chunk_q: List[np.ndarray] = dataclasses.field(default_factory=list)
+    q_b: Optional[np.ndarray] = None
+
+    @property
+    def committed(self) -> int:
+        """Committed stream length = prompt + generated."""
+        return len(self.prompt) + len(self.out)
+
+
+# ---------------------------------------------------------------------------
+# engine base
+# ---------------------------------------------------------------------------
+
+class BatchedEngineBase:
+    name = "batched-base"
+    draft_rows_per_seq = 1
+
+    def __init__(self, draft_params, draft_cfg: ModelConfig,
+                 target_params, target_cfg: ModelConfig,
+                 ecfg: EngineConfig, *,
+                 max_batch: int = 8,
+                 page_size: int = 16,
+                 pool_pages: Optional[int] = None,
+                 swap_pages: int = 0,
+                 hrad_params=None,
+                 debug_check: bool = False):
+        self.dp, self.dcfg = draft_params, draft_cfg
+        self.tp, self.tcfg = target_params, target_cfg
+        self.ecfg = ecfg
+        self.hrad_params = hrad_params
+        self.max_batch = max_batch
+        self.debug_check = debug_check
+        self.tgt_dec = BatchedDecoder(target_params, target_cfg,
+                                      n_rows=max_batch, max_len=ecfg.max_len)
+        self.dft_dec = BatchedDecoder(draft_params, draft_cfg,
+                                      n_rows=max_batch
+                                      * self.draft_rows_per_seq,
+                                      max_len=ecfg.max_len)
+        if pool_pages is None:
+            # room for every stream at full length plus branch slack
+            per_seq = 2 + (self.draft_rows_per_seq - 1)
+            pool_pages = -(-max_batch * per_seq * ecfg.max_len // page_size)
+        self.pool = PagedKVPool(pool_pages, page_size)
+        self.swap: Optional[PagedStore] = None
+        if swap_pages > 0 and self.tgt_dec.swappable:
+            self.swap = PagedStore(swap_pages, page_size,
+                                   self.tgt_dec.swap_dim)
+        self._swapped: Dict[int, dict] = {}      # rid -> swap metadata
+        self.cost = CostModel(c=ecfg.c)
+        self.clock = 0.0
+        self.timeline: List[Tuple[str, int, int]] = []
+        self.active: List[_Seq] = []
+        self._admit_counter = 0
+        self._seed = ecfg.seed
+
+    # --------------------------------------------------------- prob helpers
+    def _np_probs(self, logits_row: np.ndarray, temp: float) -> np.ndarray:
+        z = logits_row.astype(np.float64)
+        if temp == 0.0:
+            p = np.zeros_like(z)
+            p[int(z.argmax())] = 1.0
+            return p
+        z = z / temp
+        z -= z.max()
+        e = np.exp(z)
+        return e / e.sum()
+
+    def _tprobs(self, row): return self._np_probs(row, self.ecfg.temperature)
+
+    def _qprobs(self, row):
+        return self._np_probs(row, self.ecfg.draft_temperature)
+
+    def _qsig(self, row):
+        return self._np_probs(row, self.ecfg.signal_temperature)
+
+    @staticmethod
+    def _sample(rng: np.random.Generator, probs: np.ndarray) -> int:
+        return S._np_categorical(rng.random(), probs)
+
+    # ------------------------------------------------------------ H-RAD
+    def _embed_of(self, token: int) -> jax.Array:
+        return self.tp["embed"][jnp.asarray([token])].astype(jnp.float32)
+
+    def _hrad_signal(self, seq: _Seq, token: int) -> int:
+        if (not self.ecfg.use_hrad or self.hrad_params is None
+                or seq.feats_last is None):
+            return 1
+        z = H.build_feature(seq.feats_last, self._embed_of(token),
+                            self.ecfg.hrad_k_layers)
+        s = int(jax.device_get(H.predict(self.hrad_params, z)[0]))
+        seq.stats.hrad_signals.append(s)
+        return s
+
+    # ---------------------------------------------------------- batched fwd
+    def _batched(self, dec: BatchedDecoder,
+                 parts: List[Tuple[int, List[int], int]]
+                 ) -> Tuple[np.ndarray, jax.Array]:
+        """One batched forward.  parts: (row, real_tokens, start_pos).
+        Rows not listed tick in place at their own write head: their pad
+        writes land on the slot their next real write will overwrite, and
+        stay causally masked until then.  Returns (logits as float numpy
+        (B, T, V), feats)."""
+        T = max(len(t) for _, t, _ in parts)
+        toks = np.zeros((dec.n_rows, T), np.int32)
+        pos = np.minimum(dec.row_pos, dec.max_len - T).astype(np.int32)
+        # ^ free rows only: live rows are guaranteed max_len headroom at
+        #   admission (can_admit), so the clamp never moves a live head
+        for row, t, p0 in parts:
+            if p0 + T > dec.max_len:
+                raise RuntimeError(
+                    f"row {row} overflows max_len={dec.max_len}")
+            toks[row, :len(t)] = t
+            if len(t) < T:
+                toks[row, len(t):] = t[-1]
+            pos[row] = p0
+        logits, feats = dec.step(toks, pos)
+        for row, t, p0 in parts:
+            dec.row_pos[row] = p0 + len(t)
+        return np.asarray(jax.device_get(logits)), feats
+
+    def _ingest(self, dec: BatchedDecoder,
+                triples: List[Tuple[_Stream, Any, List[int]]]
+                ) -> Tuple[np.ndarray, jax.Array]:
+        """Batched ingest of per-stream token lists + pool accounting."""
+        for st, pool_key, toks in triples:
+            self.pool.extend(pool_key, len(toks))
+        parts = [(st.row, toks, st.ing) for st, _, toks in triples]
+        out = self._batched(dec, parts)
+        for st, _, toks in triples:
+            st.ing += len(toks)
+        return out
+
+    # ----------------------------------------------------------- admission
+    def _pool_keys(self, rid: int) -> Tuple[Any, Any]:
+        return ("t", rid), ("d", rid)
+
+    def admit_cost_pages(self, prompt_len: int) -> int:
+        return 2 * self.pool.pages_for(prompt_len - 1)
+
+    def _max_len_headroom(self) -> int:
+        """Worst-case tokens a live row can hold beyond prompt + max_new:
+        one round of overshoot (chunk/bonus) plus a branch continuation
+        plus pad margin — rows must never come within a batched call's
+        padding of max_len (see _batched)."""
+        return 2 * (self.ecfg.gamma + self.ecfg.gamma_branch + 4)
+
+    def can_admit(self, prompt_len: int, max_new: int = 0) -> bool:
+        if not self.tgt_dec.free_rows or len(self.active) >= self.max_batch:
+            return False
+        if len(self.dft_dec.free_rows) < self.draft_rows_per_seq:
+            return False
+        if (prompt_len + max_new + self._max_len_headroom()
+                > self.ecfg.max_len):
+            return False
+        slack = self._round_slack_pages()
+        return (self.admit_cost_pages(prompt_len) + slack
+                <= self.pool.free_pages)
+
+    def _round_slack_pages(self) -> int:
+        """Pages one request may need for one worst-case round — kept free
+        at admission so a fresh admit cannot immediately force preemption."""
+        g, gb = self.ecfg.gamma, self.ecfg.gamma_branch
+        worst = (2 + g) + (g + 1)
+        if self.draft_rows_per_seq > 1:
+            worst += (self.draft_rows_per_seq - 1) * (1 + gb)
+        return self.pool.pages_for(worst) + self.draft_rows_per_seq
+
+    def resume_out_len(self, rid: int) -> int:
+        """Tokens already generated by a parked (preempted) request — they
+        re-enter the prompt at re-admission."""
+        meta = self._swapped.get(rid)
+        return len(meta["seq"].out) if meta is not None else 0
+
+    def admit(self, rid: int, prompt: Sequence[int], max_new: int,
+              on_token=None) -> _Seq:
+        """Admit (or re-admit after preemption) one request."""
+        meta = self._swapped.pop(rid, None)
+        if meta is not None:
+            seq = meta["seq"]
+        else:
+            seq = _Seq(rid=rid, prompt=list(prompt), max_new=max_new,
+                       on_token=on_token,
+                       rng=np.random.default_rng(
+                           (self._seed * 1_000_003 + rid) & 0x7FFFFFFF))
+        toks = seq.prompt + seq.out
+        assert len(toks) >= 2, "need a prompt of >= 2 tokens"
+        L = len(toks) - 1
+        tk, dk = self._pool_keys(rid)
+        self.pool.open(tk)
+        self.pool.open(dk)
+        try:
+            self.pool.extend(tk, L)
+            self.pool.extend(dk, L)
+        except PoolExhausted:
+            self.pool.close(tk, "preempt")
+            self.pool.close(dk, "preempt")
+            if meta is not None:
+                self._swapped[rid] = meta
+            raise
+        t_row = self.tgt_dec.free_rows.pop()
+        d_row = self.dft_dec.free_rows.pop()
+        if meta is not None and meta.get("swap_key") is not None:
+            rows = self.swap.get(meta["swap_key"])
+            self.tgt_dec.unpack_row(t_row, rows)
+            self.swap.drop(meta["swap_key"])
+            seq.feats_last = meta["feats_last"]
+        else:
+            _, feats = self.tgt_dec.prefill_row(t_row, toks[:-1])
+            seq.feats_last = feats[:, 0:1, -1, :]
+            seq.stats.target_calls += 1      # swap restore runs no prefill
+        self.dft_dec.prefill_row(d_row, toks[:-1])
+        seq.tgt = _Stream(row=t_row, ing=L, pending=[toks[-1]])
+        seq.dft = _Stream(row=d_row, ing=L, pending=[toks[-1]])
+        seq.mode, seq.chunk, seq.chunk_q, seq.q_b = "draft", [], [], None
+        seq.admit_order = self._admit_counter
+        self._admit_counter += 1
+        self.active.append(seq)
+        if self.debug_check:
+            self.pool.check()
+        return seq
+
+    # ----------------------------------------------------------- preemption
+    def preempt_youngest(self) -> _Seq:
+        """Evict the most recently admitted request (FIFO-preserving) and
+        release its rows and pages.  Target KV is parked in the paged swap
+        store when possible; otherwise the prefix is recomputed at
+        re-admission."""
+        victim = max(self.active, key=lambda s: s.admit_order)
+        self.active.remove(victim)
+        meta = {"seq": victim, "swap_key": None,
+                "feats_last": victim.feats_last}
+        if self.swap is not None and victim.tgt.ing > 0:
+            key = ("swap", victim.rid, victim.admit_order)
+            try:
+                self.swap.put(key, self.tgt_dec.pack_row(victim.tgt.row,
+                                                         victim.tgt.ing))
+                meta["swap_key"] = key
+            except PoolExhausted:
+                pass
+        tk, dk = self._pool_keys(victim.rid)
+        self.pool.close(tk, "preempt")
+        self.pool.close(dk, "preempt")
+        self.tgt_dec.free_rows.append(victim.tgt.row)
+        self.dft_dec.free_rows.append(victim.dft.row)
+        victim.tgt = victim.dft = None
+        victim.mode, victim.chunk, victim.chunk_q = "draft", [], []
+        victim.q_b = None
+        self._swapped[victim.rid] = meta
+        return victim
+
+    def _make_room(self, seqs: List[_Seq],
+                   fits: Callable[[List[_Seq]], bool]) -> List[_Seq]:
+        """Preempt youngest-first until this round's worst case fits."""
+        preempted = []
+        while not fits(seqs):
+            if len(seqs) <= 1:
+                raise RuntimeError(
+                    "KV pool too small to run a single request round "
+                    f"({self.pool.num_pages} pages x {self.pool.page_size})")
+            victim = self.preempt_youngest()
+            seqs.remove(victim)
+            preempted.append(victim)
+        return preempted
+
+    # ------------------------------------------------------------- commits
+    def _commit(self, seq: _Seq, tokens: List[int], now: float) -> None:
+        seq.out.extend(tokens)
+        seq.stats.emitted += len(tokens)
+        if seq.on_token is not None:
+            while seq.streamed < min(len(seq.out), seq.max_new):
+                seq.on_token(seq.rid, seq.out[seq.streamed], now)
+                seq.streamed += 1
+        if len(seq.out) >= seq.max_new:
+            seq.done = True
+
+    def _rollback_streams(self, seq: _Seq) -> None:
+        """Reset both streams to the committed prefix, newest token pending
+        (the engines' uniform lineage reset), reclaiming rejected pages."""
+        keep = seq.committed - 1
+        tk, dk = self._pool_keys(seq.rid)
+        for st, key in ((seq.tgt, tk), (seq.dft, dk)):
+            if st.ing > keep:
+                self.pool.truncate(key, keep, "rollback")
+            st.ing = min(st.ing, keep)
+            # a positional reset never needs replay for attention caches
+            st.pending = [seq.out[-1]]
+
+    # -------------------------------------------------------------- retire
+    def retire_done(self) -> List[Tuple[_Seq, GenResult]]:
+        out = []
+        for seq in [s for s in self.active if s.done]:
+            self.active.remove(seq)
+            tk, dk = self._pool_keys(seq.rid)
+            self.pool.close(tk, "retire")
+            self.pool.close(dk, "retire")
+            self.tgt_dec.free_rows.append(seq.tgt.row)
+            self.dft_dec.free_rows.append(seq.dft.row)
+            seq.stats.finish()
+            out.append((seq, GenResult(seq.out[:seq.max_new], seq.stats,
+                                       [])))
+        if self.debug_check:
+            self.pool.check()
+        return out
+
+    # --------------------------------------------------------------- round
+    def step_round(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def _finish_round(self, kind: str, draft_steps: int,
+                      target_calls: int) -> float:
+        rnd = (kind, draft_steps, target_calls)
+        self.timeline.append(rnd)
+        self.clock += self.cost.round_cost(rnd)
+        if self.debug_check:
+            self.pool.check()
+        return self.clock
+
+
+# ---------------------------------------------------------------------------
+# batched SpS
+# ---------------------------------------------------------------------------
+
+class BatchedSpSEngine(BatchedEngineBase):
+    """Vanilla speculative decoding, continuous-batched: gamma batched
+    draft steps then one batched target verification per round."""
+    name = "batched-sps"
+
+    def step_round(self) -> Dict[str, Any]:
+        seqs = [s for s in self.active if not s.done]
+        if not seqs:
+            return {"committed": {}, "preempted": []}
+        g = self.ecfg.gamma
+
+        def fits(ss):
+            return self.pool.has_room(
+                [(("d", s.rid), len(s.dft.pending) + g - 1) for s in ss]
+                + [(("t", s.rid), len(s.tgt.pending) + g) for s in ss])
+
+        preempted = self._make_room(seqs, fits)
+        if not seqs:
+            return {"committed": {}, "preempted": preempted}
+
+        # ---- draft stage: batched pending ingest + gamma sampling steps
+        lg, _ = self._ingest(
+            self.dft_dec,
+            [(s.dft, ("d", s.rid), list(s.dft.pending)) for s in seqs])
+        # pending lengths differ (1 after a reject, 2 after an all-accept):
+        # read each row's logits at its REAL last token, not the pad
+        last = {s.rid: len(s.dft.pending) - 1 for s in seqs}
+        for s in seqs:
+            s.dft.pending = []
+        drafted: Dict[int, List[int]] = {s.rid: [] for s in seqs}
+        qstk: Dict[int, List[np.ndarray]] = {s.rid: [] for s in seqs}
+        for i in range(g):
+            for s in seqs:
+                q = self._qprobs(lg[s.dft.row, last[s.rid]])
+                tok = self._sample(s.rng, q)
+                drafted[s.rid].append(tok)
+                qstk[s.rid].append(q)
+                s.stats.draft_tokens += 1
+            if i < g - 1:
+                lg, _ = self._ingest(
+                    self.dft_dec,
+                    [(s.dft, ("d", s.rid), [drafted[s.rid][-1]])
+                     for s in seqs])
+                last = {s.rid: 0 for s in seqs}
+
+        # ---- verify stage: ONE batched target call for the whole batch
+        pends = {s.rid: list(s.tgt.pending) for s in seqs}
+        tlg, feats = self._ingest(
+            self.tgt_dec,
+            [(s.tgt, ("t", s.rid), s.tgt.pending + drafted[s.rid])
+             for s in seqs])
+        now = self.clock + self.cost.round_cost(("serial", g, 1))
+        committed: Dict[int, int] = {}
+        for s in seqs:
+            npend = len(pends[s.rid])
+            row = tlg[s.tgt.row]
+            dr = drafted[s.rid]
+            before = min(len(s.out), s.max_new)
+            p_stack = np.stack([self._tprobs(row[npend - 1 + j])
+                                for j in range(g)])
+            bonus = self._tprobs(row[npend + g - 1])
+            s.stats.target_calls += 1
+            s.feats_last = feats[:, s.tgt.row:s.tgt.row + 1,
+                                 npend + g - 1, :]
+            v = S.verify_chain_np(s.rng.random(g + 1), p_stack,
+                                  np.stack(qstk[s.rid]), dr, bonus)
+            s.tgt.pending = []
+            if v.all_accepted:
+                self._commit(s, dr + [v.next_token], now)
+                s.stats.run_extend(g + 1)
+                s.tgt.pending = [v.next_token]
+                s.dft.pending = [dr[-1], v.next_token]
+            else:
+                n = v.n_accepted
+                self._commit(s, dr[:n] + [v.next_token], now)
+                s.stats.run_extend(n)
+                s.stats.run_break()
+                s.stats.rollback_tokens += g - n
+                self._rollback_streams(s)
+            committed[s.rid] = min(len(s.out), s.max_new) - before
+        self._finish_round("serial", g, 1)
+        return {"committed": committed, "preempted": preempted}
+
+
+# ---------------------------------------------------------------------------
+# batched SpecBranch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _BranchSet:
+    """Per-request branch-stage working set, alive within one round."""
+    cands: np.ndarray                        # (k,)
+    streams: List[_Stream] = dataclasses.field(default_factory=list)
+    conts: List[List[int]] = dataclasses.field(default_factory=list)
+    cont_q: List[List[np.ndarray]] = dataclasses.field(default_factory=list)
+    cont_sig: List[List[np.ndarray]] = dataclasses.field(default_factory=list)
+    confs: List[List[float]] = dataclasses.field(default_factory=list)
+    final_sig: List[Optional[np.ndarray]] = dataclasses.field(
+        default_factory=list)
+
+
+class BatchedSpecBranchEngine(BatchedEngineBase):
+    """SpecBranch (hybrid drafting + branch parallelism), continuous-batched.
+
+    Per global round every request advances one stage of the sequential
+    engine's state machine (runtime/specbranch.py): DRAFT-mode requests
+    serial-draft their chunk, BRANCH-mode requests fork k branch rows and
+    draft continuations — all draft work rides the same batched single-token
+    steps — and one batched target call verifies every BRANCH-mode chunk.
+    Requests in DRAFT mode simply skip the verify (their draft work is
+    hidden under the other requests' verification, the Group-SD overlap).
+
+    Branch forks are row copies in the reference decoder, but page-table
+    COW shares in the pool: the fork itself allocates zero pages and each
+    branch pays only for its diverging continuation (Eq. 8).  Losing
+    branches, doomed continuations and H-RAD-pruned suffixes all return
+    their pages through ``truncate``/``close`` with a reason tag.
+    """
+    name = "batched-specbranch"
+
+    def __init__(self, *args, **kw):
+        ecfg = args[4] if len(args) > 4 else kw["ecfg"]
+        self.draft_rows_per_seq = 1 + max(1, ecfg.k_max)
+        super().__init__(*args, **kw)
+
+    # ------------------------------------------------------------- helpers
+    def _branch_k(self, q_b: np.ndarray) -> int:
+        if not self.ecfg.use_branch:
+            return 1
+        return min(self.ecfg.k_max,
+                   S.adaptive_k(float(q_b.max()), self.ecfg.k_max))
+
+    def _draw_cands(self, seq: _Seq, k: int) -> np.ndarray:
+        if self.ecfg.branch_mode == "topk":
+            return np.argsort(seq.q_b)[::-1][:k].astype(np.int64)
+        return np.asarray([self._sample(seq.rng, seq.q_b)
+                           for _ in range(k)], np.int64)
+
+    def _bkey(self, rid: int, i: int):
+        return ("b", rid, i)
+
+    def _free_branches(self, seq: _Seq, bset: _BranchSet,
+                       reason: str, keep: Optional[int] = None) -> None:
+        for i, st in enumerate(bset.streams):
+            if i == keep:
+                continue
+            self.pool.close(self._bkey(seq.rid, i), reason)
+            self.dft_dec.free_rows.append(st.row)
+
+    # --------------------------------------------------------------- round
+    def step_round(self) -> Dict[str, Any]:
+        seqs = [s for s in self.active if not s.done]
+        if not seqs:
+            return {"committed": {}, "preempted": []}
+        g, gb = self.ecfg.gamma, self.ecfg.gamma_branch
+
+        # has_room can't price not-yet-forked branch streams; count their
+        # worst case (suffix pages + one COW tail copy each) by hand.
+        def fits(ss):
+            ups, extra = [], 0
+            for s in ss:
+                if s.mode == "draft":
+                    ups.append((("d", s.rid), len(s.dft.pending) + g))
+                else:
+                    k = self._branch_k(s.q_b)
+                    dlen = self.pool.length(("d", s.rid))
+                    per = (self.pool.pages_for(dlen + 1 + gb)
+                           - self.pool.pages_for(dlen) + 1)
+                    extra += k * per
+                    ups.append((("t", s.rid),
+                                len(s.tgt.pending) + len(s.chunk)))
+            return self.pool.would_need(ups) + extra <= self.pool.free_pages
+
+        preempted = self._make_room(seqs, fits)
+
+        serial = [s for s in seqs if s.mode == "draft"]
+        branchers = [s for s in seqs if s.mode == "branch"]
+
+        # ---- PHASE A: all draft-model work, interleaved batched steps ----
+        # H-RAD prior signal decides each DRAFT-mode request's stop rule.
+        sig: Dict[int, int] = {}
+        for s in serial:
+            e_tok = s.dft.pending[0] if s.dft.pending else s.tgt.pending[0]
+            sig[s.rid] = (self._hrad_signal(s, e_tok)
+                          if self.ecfg.use_hrad else 1)
+            s.chunk, s.chunk_q = [], []
+
+        bsets: Dict[int, _BranchSet] = {}
+        for s in branchers:
+            k = self._branch_k(s.q_b)
+            bset = _BranchSet(cands=self._draw_cands(s, k))
+            for i in range(k):
+                row = self.dft_dec.free_rows.pop()
+                self.dft_dec.copy_row(s.dft.row, row)
+                self.pool.fork(("d", s.rid), self._bkey(s.rid, i))
+                bset.streams.append(_Stream(row=row, ing=s.dft.ing))
+                bset.conts.append([])
+                bset.cont_q.append([])
+                bset.cont_sig.append([])
+                bset.confs.append([])
+                bset.final_sig.append(None)
+            bsets[s.rid] = bset
+
+        # tick 0: serial rows ingest pending; branch rows ingest candidates
+        triples = []
+        for s in serial:
+            triples.append((s.dft, ("d", s.rid), list(s.dft.pending)))
+            s.dft.pending = []
+        for s in branchers:
+            bset = bsets[s.rid]
+            for i, st in enumerate(bset.streams):
+                triples.append((st, self._bkey(s.rid, i),
+                                [int(bset.cands[i])]))
+            s.stats.draft_tokens += 1      # batched candidate ingest step
+        lg, _ = self._ingest(self.dft_dec, triples)
+        ticks = 1
+
+        serial_live = {s.rid: True for s in serial}
+        branch_j = {s.rid: 0 for s in branchers}
+        while True:
+            triples = []
+            # serial chunks: read -> stop? -> sample -> ingest
+            for s in serial:
+                if not serial_live[s.rid]:
+                    continue
+                row = lg[s.dft.row, -1]
+                q = self._qprobs(row)
+                q_s = self._qsig(row)
+                stop = False
+                if sig[s.rid] == 0:
+                    stop = True
+                elif sig[s.rid] == 1 and q_s.max() < self.ecfg.epsilon:
+                    stop = True
+                elif len(s.chunk) >= g:
+                    stop = True
+                if stop:
+                    s.q_b = q_s
+                    s.stats.draft_tokens += len(s.chunk) + 1
+                    serial_live[s.rid] = False
+                    continue
+                tok = self._sample(s.rng, q)
+                s.chunk.append(tok)
+                s.chunk_q.append(q)
+                triples.append((s.dft, ("d", s.rid), [tok]))
+            # branch continuations: read -> record -> sample -> ingest
+            for s in branchers:
+                j = branch_j[s.rid]
+                if j >= gb + 1:
+                    continue
+                bset = bsets[s.rid]
+                if j == gb:
+                    for i, st in enumerate(bset.streams):
+                        bset.final_sig[i] = self._qsig(lg[st.row, -1])
+                    branch_j[s.rid] = gb + 1
+                    continue
+                for i, st in enumerate(bset.streams):
+                    row = lg[st.row, -1]
+                    q = self._qprobs(row)
+                    q_s = self._qsig(row)
+                    tok = self._sample(s.rng, q)
+                    bset.conts[i].append(tok)
+                    bset.cont_q[i].append(q)
+                    bset.cont_sig[i].append(q_s)
+                    bset.confs[i].append(float(q_s.max()))
+                    triples.append((st, self._bkey(s.rid, i), [tok]))
+                s.stats.draft_tokens += 1
+                branch_j[s.rid] = j + 1
+            if not triples:
+                break
+            lg, _ = self._ingest(self.dft_dec, triples)
+            ticks += 1
+        for s in serial:
+            if serial_live[s.rid]:       # ended exactly on the last ingest
+                s.q_b = self._qsig(lg[s.dft.row, -1])
+                s.stats.draft_tokens += len(s.chunk) + 1
+                serial_live[s.rid] = False
+
+        # ---- PHASE B: one batched target call verifies all chunks ----
+        committed: Dict[int, int] = {}
+        n_target = 1 if branchers else 0
+        kind = "parallel" if (branchers and self.ecfg.use_branch) \
+            else "serial"
+        now = self.clock + self.cost.round_cost((kind, ticks, n_target))
+        if branchers:
+            pends = {s.rid: list(s.tgt.pending) for s in branchers}
+            tlg, feats = self._ingest(
+                self.tgt_dec,
+                [(s.tgt, ("t", s.rid), s.tgt.pending + s.chunk)
+                 for s in branchers])
+            for s in branchers:
+                s.tgt.pending = []
+                before = min(len(s.out), s.max_new)
+                self._branch_verdict(s, bsets[s.rid], tlg, feats,
+                                     len(pends[s.rid]), now)
+                committed[s.rid] = min(len(s.out), s.max_new) - before
+        for s in serial:
+            s.mode = "branch"
+        self._finish_round(kind, ticks, n_target)
+        return {"committed": committed, "preempted": preempted}
+
+    # ----------------------------------------------------- verdict (host)
+    def _branch_verdict(self, s: _Seq, bset: _BranchSet, tlg, feats,
+                        npend: int, now: float) -> None:
+        gb = self.ecfg.gamma_branch
+        gchunk = len(s.chunk)
+        row = tlg[s.tgt.row]
+        s.stats.target_calls += 1
+        p_stack = (np.stack([self._tprobs(row[npend - 1 + j])
+                             for j in range(gchunk)])
+                   if gchunk else np.zeros((0, row.shape[-1])))
+        p_b = self._tprobs(row[npend + gchunk - 1])
+        s.feats_last = feats[:, s.tgt.row:s.tgt.row + 1,
+                             npend + gchunk - 1, :]
+        q_stack = (np.stack(s.chunk_q) if s.chunk_q
+                   else np.zeros((0, row.shape[-1])))
+        v = S.verify_chain_np(s.rng.random(gchunk + 1), p_stack, q_stack,
+                              s.chunk, None)
+
+        if not v.all_accepted:
+            # mid-chunk rejection: every branch is doomed (Fig. 1a)
+            n = v.n_accepted
+            self._commit(s, s.chunk[:n] + [v.next_token], now)
+            s.stats.run_extend(n)
+            s.stats.run_break()
+            s.stats.rollback_tokens += (gchunk - n) + gb
+            self._free_branches(s, bset, "rollback")
+            self._rollback_streams(s)
+            s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
+            return
+
+        bv = S.branch_spec_sample_np(s.rng.random(len(bset.cands) + 1),
+                                     p_b, bset.cands, s.q_b)
+        if bv.accepted_branch < 0:
+            # no branch survives: emit the residual, drop continuations
+            self._commit(s, s.chunk + [bv.token], now)
+            s.stats.run_extend(gchunk)
+            s.stats.run_break()
+            s.stats.rollback_tokens += gb
+            self._free_branches(s, bset, "branch")
+            self._rollback_streams(s)
+            s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
+            return
+
+        i = bv.accepted_branch
+        tok_b = bv.token
+        self._commit(s, s.chunk + [tok_b], now)
+        s.stats.run_extend(gchunk + 1)
+        s.tgt.pending = [tok_b]
+        # adopt the winning branch: its row becomes the draft row, its page
+        # table replaces the parent's (shared prefix transfers refcounts)
+        win = bset.streams[i]
+        self.dft_dec.copy_row(win.row, s.dft.row)
+        s.dft.ing = win.ing
+        s.dft.pending = []
+        self.pool.adopt(("d", s.rid), self._bkey(s.rid, i))
+        self._free_branches(s, bset, "branch", keep=i)
+        self.dft_dec.free_rows.append(win.row)
+
+        # posterior H-RAD on THIS verification's features (Sec. 5.2)
+        sgn = (self._hrad_signal(s, tok_b) if self.ecfg.use_hrad else 1)
+        cont, q_i = bset.conts[i], bset.cont_q[i]
+        sig_i, confs = bset.cont_sig[i], bset.confs[i]
+        if sgn == 2:
+            s.chunk, s.chunk_q = list(cont), list(q_i)
+            s.q_b = bset.final_sig[i]
+        elif sgn == 0:
+            # prune the whole continuation; branch at its first token
+            s.chunk, s.chunk_q = [], []
+            s.q_b = sig_i[0]
+            s.stats.pruned_tokens += gb
+            self._prune_draft(s, s.committed)
+        else:
+            j = next((jj for jj in range(gb)
+                      if confs[jj] < self.ecfg.epsilon), gb)
+            if j == gb:
+                s.chunk, s.chunk_q = list(cont), list(q_i)
+                s.q_b = bset.final_sig[i]
+            else:
+                s.chunk, s.chunk_q = list(cont[:j]), list(q_i[:j])
+                s.q_b = sig_i[j]
+                s.stats.pruned_tokens += gb - j
+                self._prune_draft(s, s.committed + j)
+        s.mode = "branch"
+
+    def _prune_draft(self, s: _Seq, keep: int) -> None:
+        """H-RAD pre-verify pruning: positional reset of the draft stream."""
+        if s.dft.ing > keep:
+            self.pool.truncate(("d", s.rid), keep, "prune")
+            s.dft.ing = keep
+        s.dft.pending = []

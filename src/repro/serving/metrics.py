@@ -1,0 +1,113 @@
+"""Serving metrics (DESIGN.md §7.4).
+
+Two clocks run side by side:
+
+  * the *modeled* clock — CostModel time units accumulated per engine round
+    (the repo's canonical speed metric; wall-clock on this CPU container is
+    not meaningful across engines, see runtime/cost_model.py);
+  * the *wall* clock — real seconds, reported for reference.
+
+A batched round that serves B requests with one target call advances the
+modeled clock once (the Group-SD premise, App. G.4: decode-time target calls
+are memory-bound, so verification batches over requests at ~constant call
+cost).  TTFT / inter-token latency are measured per request against the
+modeled clock; tokens committed by the same verify call share a timestamp,
+so ITL percentiles reflect the bursty commit pattern of speculative
+decoding rather than a smoothed rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.runtime.cost_model import percentile
+
+__all__ = ["ServingMetrics", "RequestTrace", "percentile"]
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    rid: int
+    arrival: float                   # modeled time the request arrived
+    admitted: Optional[float] = None
+    finished: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    wall_admitted: Optional[float] = None
+    wall_finished: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if not self.token_times:
+            return None
+        return self.token_times[0] - self.arrival
+
+    @property
+    def itls(self) -> List[float]:
+        tt = self.token_times
+        return [b - a for a, b in zip(tt, tt[1:])]
+
+
+class ServingMetrics:
+    """Aggregates per-request traces + pool occupancy over a serving run."""
+
+    def __init__(self):
+        self.traces: Dict[int, RequestTrace] = {}
+        self.occupancy_samples: List[float] = []   # pool fill at round ends
+        self.rounds = 0
+        self.preemptions = 0
+        self._wall0 = time.time()
+
+    # ------------------------------------------------------------- events
+    def on_arrival(self, rid: int, t: float) -> None:
+        self.traces[rid] = RequestTrace(rid=rid, arrival=t)
+
+    def on_admit(self, rid: int, t: float) -> None:
+        tr = self.traces[rid]
+        if tr.admitted is None:            # re-admission after preemption
+            tr.admitted = t
+        tr.wall_admitted = tr.wall_admitted or time.time()
+
+    def on_tokens(self, rid: int, n: int, t: float) -> None:
+        self.traces[rid].token_times.extend([t] * n)
+
+    def on_finish(self, rid: int, t: float) -> None:
+        self.traces[rid].finished = t
+        self.traces[rid].wall_finished = time.time()
+
+    def on_preempt(self, rid: int) -> None:
+        self.traces[rid].preemptions += 1
+        self.preemptions += 1
+
+    def on_round(self, occupancy: float) -> None:
+        self.rounds += 1
+        self.occupancy_samples.append(occupancy)
+
+    # ------------------------------------------------------------ summary
+    def summary(self, total_cost: float, pool_stats: Optional[dict] = None
+                ) -> dict:
+        toks = sum(len(t.token_times) for t in self.traces.values())
+        ttfts = [t.ttft for t in self.traces.values() if t.ttft is not None]
+        itls = [d for t in self.traces.values() for d in t.itls]
+        wall = time.time() - self._wall0
+        out = {
+            "requests": len(self.traces),
+            "total_tokens": toks,
+            "total_cost": total_cost,
+            "tokens_per_cost": toks / max(total_cost, 1e-9),
+            "wall_s": wall,
+            "tokens_per_sec_wall": toks / max(wall, 1e-9),
+            "rounds": self.rounds,
+            "preemptions": self.preemptions,
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p95": percentile(ttfts, 95),
+            "itl_p50": percentile(itls, 50),
+            "itl_p95": percentile(itls, 95),
+            "pool_occupancy_mean": (sum(self.occupancy_samples)
+                                    / max(len(self.occupancy_samples), 1)),
+            "pool_occupancy_peak": max(self.occupancy_samples, default=0.0),
+        }
+        if pool_stats is not None:
+            out["pool"] = dict(pool_stats)
+        return out

@@ -1,0 +1,102 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing API used by this
+repo's tests, activated by conftest.py only when the real package is absent
+(this container does not ship it and installs are not possible).
+
+It implements exactly the surface tests/test_sampling.py consumes:
+
+  * ``strategies.integers(min_value, max_value)``
+  * ``settings(max_examples=..., deadline=...)`` (decorator, stores settings)
+  * ``given(*strategies)`` (decorator, runs the test body over
+    ``max_examples`` deterministic pseudo-random draws)
+
+Draws are seeded deterministically so failures reproduce across runs.  The
+real package, when installed, takes precedence (see conftest.py).
+"""
+from __future__ import annotations
+
+import random
+import types
+import zlib
+
+__version__ = "0.0-repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A value generator: ``draw(rng) -> value``."""
+
+    def __init__(self, draw, label=""):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"_Strategy({self.label})"
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    if min_value > max_value:
+        raise ValueError("integers(): min_value > max_value")
+
+    def draw(rng: random.Random) -> int:
+        # Bias toward the boundaries like real hypothesis shrinks toward
+        # simple values: 1-in-5 draws picks an endpoint.
+        r = rng.random()
+        if r < 0.1:
+            return min_value
+        if r < 0.2:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(draw, f"integers({min_value}, {max_value})")
+
+
+strategies = types.SimpleNamespace(integers=_integers)
+st = strategies  # common alias
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording run settings on the test function."""
+
+    def deco(fn):
+        fn._shim_max_examples = int(max_examples)
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Decorator: call the test with ``max_examples`` drawn value tuples."""
+
+    def deco(fn):
+        def wrapper():
+            # resolved at call time so @settings works on either side of
+            # @given (the real package accepts both orders)
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            # crc32, not hash(): str hashing is salted per process and
+            # would make failing examples unreproducible across runs
+            rng = random.Random(
+                0xC0FFEE ^ zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                vals = [s.draw(rng) for s in strats]
+                try:
+                    fn(*vals)
+                except Exception as e:  # annotate the failing example
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: "
+                        f"args={tuple(vals)}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco

@@ -140,3 +140,24 @@ def test_verify_accept_residual_is_distribution():
     sup = (pp - qq > 0)
     idx = np.arange(R)
     assert bool(sup[idx, np.asarray(res)].all())
+
+
+@pytest.mark.parametrize("n,ps,dim", [(1, 4, 8), (5, 8, 16), (3, 16, 24)])
+def test_paged_gather_matches_numpy(n, ps, dim):
+    """Paged gather through a scalar-prefetched page table == buf[table]."""
+    rng = np.random.default_rng(7)
+    P = 11
+    buf = rng.normal(size=(P, ps, dim)).astype(np.float32)
+    table = rng.choice(P, size=n, replace=False).astype(np.int32)
+    got = np.asarray(ops.paged_gather(buf, table))
+    np.testing.assert_array_equal(got, buf[table].reshape(n * ps, dim))
+
+
+def test_paged_gather_repeated_pages():
+    """Shared (COW) pages may appear in several tables — and in one table
+    twice; the gather must not assume uniqueness."""
+    rng = np.random.default_rng(8)
+    buf = rng.normal(size=(6, 4, 8)).astype(np.float32)
+    table = np.asarray([2, 2, 5, 2], np.int32)
+    got = np.asarray(ops.paged_gather(buf, table))
+    np.testing.assert_array_equal(got, buf[table].reshape(16, 8))

@@ -1,0 +1,71 @@
+"""Scheduler.aggregate percentile stats + serving metrics helpers."""
+import dataclasses
+
+import pytest
+
+from repro.runtime.cost_model import CostModel
+from repro.runtime.engines import GenResult, GenStats
+from repro.runtime.scheduler import Request, Scheduler
+from repro.serving.metrics import ServingMetrics, percentile
+
+
+def _req(rid, wall, n_tokens, rounds):
+    stats = GenStats(emitted=n_tokens)
+    stats.accept_runs = [2]
+    timeline = [("serial", 4, 1)] * rounds
+    r = Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=n_tokens)
+    r.result = GenResult(list(range(n_tokens)), stats, timeline)
+    r.wall_s = wall
+    return r
+
+
+def test_percentile_nearest_rank():
+    xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]
+    assert percentile(xs, 50) == 5.0
+    assert percentile(xs, 95) == 10.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([], 95) == 0.0
+
+
+def test_aggregate_reports_wall_percentiles():
+    reqs = [_req(i, wall=float(i + 1), n_tokens=10, rounds=2)
+            for i in range(10)]
+    agg = Scheduler(engine=None).aggregate(reqs, CostModel(c=10.0))
+    assert agg["wall_p50"] == pytest.approx(5.0)
+    assert agg["wall_p95"] == pytest.approx(10.0)
+    assert agg["wall_s"] == pytest.approx(sum(range(1, 11)))
+    assert agg["total_tokens"] == 100
+    # 2 rounds x (4*t + c*t) = 28 cost units per request
+    assert agg["total_cost"] == pytest.approx(280.0)
+    assert agg["tokens_per_cost"] == pytest.approx(100 / 280.0)
+
+
+def test_aggregate_empty():
+    assert Scheduler(engine=None).aggregate([], CostModel()) == {}
+
+
+def test_serving_metrics_ttft_and_itl():
+    m = ServingMetrics()
+    m.on_arrival(0, 0.0)
+    m.on_admit(0, 1.0)
+    m.on_tokens(0, 2, 11.0)      # burst of 2 at t=11
+    m.on_tokens(0, 1, 21.0)
+    m.on_finish(0, 21.0)
+    m.on_round(0.5)
+    s = m.summary(total_cost=21.0)
+    assert s["total_tokens"] == 3
+    assert s["ttft_p50"] == pytest.approx(11.0)
+    assert s["itl_p50"] == pytest.approx(0.0)     # same-burst tokens
+    assert s["itl_p95"] == pytest.approx(10.0)
+    assert s["tokens_per_cost"] == pytest.approx(3 / 21.0)
+    assert s["pool_occupancy_peak"] == pytest.approx(0.5)
+
+
+def test_request_trace_preemption_counter():
+    m = ServingMetrics()
+    m.on_arrival(7, 0.0)
+    m.on_admit(7, 0.0)
+    m.on_preempt(7)
+    m.on_admit(7, 5.0)            # re-admission keeps the first admit time
+    assert m.preemptions == 1
+    assert m.traces[7].admitted == 0.0

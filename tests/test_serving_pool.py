@@ -1,0 +1,128 @@
+"""Paged KV pool: alloc/free invariants, COW fork semantics, rollback-aware
+reclamation, and the paged store + Pallas gather roundtrip."""
+import numpy as np
+import pytest
+
+from repro.serving.kv_pool import PagedKVPool, PagedStore, PoolExhausted
+
+
+def test_alloc_free_roundtrip():
+    pool = PagedKVPool(num_pages=8, page_size=4)
+    pool.open("a")
+    pool.extend("a", 10)                    # 3 pages
+    assert pool.pages_in_use == 3
+    assert pool.length("a") == 10
+    pool.check()
+    pool.close("a")
+    assert pool.pages_in_use == 0
+    assert pool.free_pages == 8
+    assert pool.stats.reclaimed_retire_pages == 3
+    pool.check()
+
+
+def test_extend_is_atomic_on_exhaustion():
+    pool = PagedKVPool(num_pages=2, page_size=4)
+    pool.open("a")
+    pool.extend("a", 8)
+    with pytest.raises(PoolExhausted):
+        pool.extend("a", 1)
+    # failed extend must not have mutated anything
+    assert pool.length("a") == 8
+    assert len(pool.table("a")) == 2
+    pool.check()
+
+
+def test_cow_fork_shares_then_copies():
+    pool = PagedKVPool(num_pages=8, page_size=4)
+    pool.open("parent")
+    pool.extend("parent", 6)                # 2 pages, tail half-full
+    pool.fork("parent", "child")
+    assert pool.pages_in_use == 2           # fork allocates nothing
+    assert pool.table("child") == pool.table("parent")
+    pool.check()
+    # child appends -> its shared tail page must be copied first
+    pool.extend("child", 1)
+    assert pool.stats.cow_copies == 1
+    assert pool.table("child")[0] == pool.table("parent")[0]   # prefix shared
+    assert pool.table("child")[1] != pool.table("parent")[1]
+    pool.check()
+    # dropping the child frees only its private pages
+    pool.close("child", "branch")
+    assert pool.stats.reclaimed_branch_pages == 1
+    assert pool.length("parent") == 6
+    pool.check()
+
+
+def test_fork_then_truncate_keeps_shared_pages():
+    pool = PagedKVPool(num_pages=8, page_size=2)
+    pool.open("p")
+    pool.extend("p", 6)                     # 3 pages
+    pool.fork("p", "b0")
+    pool.extend("b0", 3)                    # COW tail? len 6 = page boundary
+    assert pool.stats.cow_copies == 0       # boundary append needs no COW
+    pool.truncate("b0", 6, "rollback")
+    # b0's private pages freed; shared pages still owned by p
+    assert pool.length("p") == 6 and len(pool.table("p")) == 3
+    pool.check()
+    pool.close("b0", "branch")
+    assert pool.pages_in_use == 3
+    pool.check()
+
+
+def test_rollback_reclaims_only_rejected_pages():
+    pool = PagedKVPool(num_pages=16, page_size=4)
+    pool.open("t")
+    pool.extend("t", 15)                    # prompt
+    pool.extend("t", 5)                     # speculative tokens -> 20 (5 pgs)
+    before = pool.pages_in_use
+    freed = pool.truncate("t", 16, "rollback")   # reject 4 of them
+    assert freed == 1 and pool.pages_in_use == before - 1
+    assert pool.stats.reclaimed_rollback_pages == 1
+    assert pool.length("t") == 16
+    pool.check()
+
+
+def test_adopt_transfers_winner_table():
+    pool = PagedKVPool(num_pages=16, page_size=2)
+    pool.open("d")
+    pool.extend("d", 4)
+    for i in range(3):
+        pool.fork("d", ("b", i))
+        pool.extend(("b", i), 2)
+    use = pool.pages_in_use
+    pool.adopt("d", ("b", 1))
+    pool.close(("b", 0), "branch")
+    pool.close(("b", 2), "branch")
+    pool.check()
+    assert pool.length("d") == 6
+    assert pool.pages_in_use == 3           # shared prefix + winner suffix
+    assert pool.pages_in_use < use
+
+
+def test_would_need_accounts_cow_tail():
+    pool = PagedKVPool(num_pages=8, page_size=4)
+    pool.open("p")
+    pool.extend("p", 6)
+    pool.fork("p", "c")
+    # c's append needs 1 new page (7 -> 2 pages) is wrong: it needs a COW
+    # copy of the shared half-full tail, no growth page
+    assert pool.would_need([("c", 1)]) == 1
+    assert pool.would_need([("c", 3)]) == 2     # COW + one growth page
+
+
+def test_paged_store_roundtrip():
+    rng = np.random.default_rng(0)
+    store = PagedStore(num_pages=12, page_size=4, dim=16)
+    a = rng.normal(size=(10, 16)).astype(np.float32)
+    b = rng.normal(size=(7, 16)).astype(np.float32)
+    store.put("a", a)
+    store.put("b", b)
+    np.testing.assert_array_equal(store.get("a"), a)
+    np.testing.assert_array_equal(store.get("b"), b)
+    store.drop("a")
+    store.pool.check()
+    np.testing.assert_array_equal(store.get("b"), b)
+    with pytest.raises(PoolExhausted):
+        store.put("huge", rng.normal(size=(100, 16)).astype(np.float32))
+    # a failed put must not leave a stream behind
+    assert not store.pool.is_open("huge")
