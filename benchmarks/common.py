@@ -68,7 +68,6 @@ def hrad_for_pair(kind: str, ecfg: Optional[EngineConfig] = None,
     path = os.path.join(CACHE_DIR, f"hrad-{kind}-K{k_layers}.npz")
     dp, dcfg, tp, tcfg = get_pair(kind)
     ecfg = ecfg or default_ecfg(kind, hrad_k_layers=k_layers)
-    d_in = (k_layers + 1) * tcfg.d_model
     if os.path.exists(path):
         data = np.load(path)
         return {k: data[k] for k in data.files}

@@ -15,7 +15,7 @@ import numpy as np
 from benchmarks.common import csv_line, default_ecfg
 from repro.core import hrad as H
 from repro.data.synthetic import ZipfMarkov
-from repro.runtime.engines import EngineConfig, SpSEngine, _Ctx
+from repro.runtime.engines import SpSEngine, _Ctx
 from repro.training.pairs import VOCAB, get_pair
 
 KIND = "misaligned"

@@ -22,7 +22,6 @@ def main(print_csv: bool = True) -> list:
     lines = []
     dp, dcfg, tp, tcfg = get_pair(KIND)
     zm = ZipfMarkov(vocab=VOCAB, seed=7)
-    base_ecfg = default_ecfg(KIND)
     # one dataset at max K: slice features for smaller K
     ecfg_collect = default_ecfg(KIND, hrad_k_layers=max(KS))
     z_full, labels = hrad_data.collect(

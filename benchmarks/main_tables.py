@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import (build_engines, csv_line, default_ecfg,
-                               run_engine)
+from benchmarks.common import build_engines, csv_line, run_engine
 
 ENGINES = ["autoregressive", "sps", "adaedl", "lookahead", "pearl",
            "specbranch"]

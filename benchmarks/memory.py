@@ -15,7 +15,6 @@ import jax
 
 from benchmarks.common import csv_line
 from repro.configs.paper_pairs import LLAMA31_8B, LLAMA31_70B
-from repro.models import model as M
 
 
 def kv_bytes_per_token(cfg) -> int:
@@ -40,7 +39,8 @@ def main(print_csv: bool = True) -> list:
         replicated = k * (S_prefix + gb) * kv_bytes_per_token(draft)
         tree_nodes = (k ** gamma - 1) // max(k - 1, 1)
         tree = tree_nodes * kv_bytes_per_token(draft)
-        pct = lambda x: 100 * x / base
+        def pct(x):
+            return 100 * x / base
         print(f"{k:3d} {pct(shared):13.3f}% {pct(replicated):10.2f}% "
               f"{pct(tree):10.2f}%")
         lines.append(csv_line(

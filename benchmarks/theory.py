@@ -2,7 +2,6 @@
 minima, and closed-form vs Monte-Carlo agreement."""
 from __future__ import annotations
 
-import sys
 
 from benchmarks.common import csv_line
 from repro.core import theory as T
@@ -11,7 +10,6 @@ from repro.core import theory as T
 def main(print_csv: bool = True) -> list:
     c = 10.0
     alphas = (0.4, 0.6, 0.8, 0.95)
-    gammas = list(range(1, 25))
     lines = []
     print("# Fig.2 — T_PSD_r(gamma) per alpha (c=10, t=1)")
     print("alpha, " + ", ".join(f"g={g}" for g in (1, 2, 4, 8, 12, 16, 24)))

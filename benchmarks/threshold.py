@@ -6,9 +6,8 @@ far flatter in epsilon than the implicit methods'.
 """
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import (PAIR_AR_TPS, csv_line, default_ecfg,
+from benchmarks.common import (csv_line, default_ecfg,
                                hrad_for_pair, run_engine)
 from repro.runtime.engines import AdaEDLEngine, ConfidenceSDEngine
 from repro.runtime.specbranch import SpecBranchEngine

@@ -9,7 +9,7 @@ import numpy as np
 
 from benchmarks.common import csv_line, default_ecfg, prompts
 from repro.core import theory as T
-from repro.runtime.engines import SpSEngine, _Ctx
+from repro.runtime.engines import SpSEngine
 from repro.training.pairs import get_pair
 
 GAMMA = 4
@@ -50,7 +50,7 @@ def main(print_csv: bool = True) -> list:
               f"(gamma={GAMMA})")
         print("k:        " + " ".join(f"{k:6d}" for k in range(GAMMA + 1)))
         print("empirical " + " ".join(f"{x:6.3f}" for x in emp))
-        print(f"trunc-geo " + " ".join(f"{x:6.3f}" for x in fit)
+        print("trunc-geo " + " ".join(f"{x:6.3f}" for x in fit)
               + f"   (alpha_hat={alpha:.2f}, TV={tv:.3f})")
         lines.append(csv_line(f"tokendist_{kind}", 0.0,
                               f"alpha={alpha:.3f};tv={tv:.3f}"))

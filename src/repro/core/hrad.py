@@ -18,7 +18,7 @@ re-weighting + SMOTE-style minority oversampling, dropout 0.4.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

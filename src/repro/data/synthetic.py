@@ -10,7 +10,7 @@ aligned vs misaligned pairs the paper's Tables 2-3 contrast (alpha ~0.45 vs
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Tuple
+from typing import Iterator
 
 import numpy as np
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged as _paged
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssm_scan as _ssm
 from repro.kernels import verify_accept as _va
 
@@ -57,8 +58,6 @@ def branch_decode_attention(q, prefix_k, prefix_v, prefix_pos,
     w2 = l2 * jnp.exp(m2 - m)
     denom = jnp.maximum(w1 + w2, 1e-20)
     kb, Tq, H, hd = q.shape
-    KV = prefix_k.shape[2]
-    G = H // KV
 
     def expand(w):  # (B, KV, G, T) -> (B, T, H, 1)
         return w.transpose(0, 3, 1, 2).reshape(kb, Tq, H)[..., None]
@@ -81,8 +80,20 @@ def verify_accept(p_logits, q_logits, tokens, uniforms, res_uniforms, *,
                              res_uniforms, interpret=it)
 
 
-def paged_gather(pages, table, *, interpret: Optional[bool] = None):
+def paged_gather(pages, table, valid_len=None, *,
+                 interpret: Optional[bool] = None):
     """Gather logical pages through a page table.  See kernels.paged."""
     it = _default_interpret() if interpret is None else interpret
     return _paged.paged_gather(jnp.asarray(pages), jnp.asarray(table),
-                               interpret=it)
+                               valid_len, interpret=it)
+
+
+def paged_attention(q, k_pages, v_pages, table, lens, q_start, *,
+                    window: int = 0, cap: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    """Decode attention straight over paged KV through a page table.
+    See kernels.paged_attention."""
+    it = _default_interpret() if interpret is None else interpret
+    return _pa.paged_decode_attention(
+        q, k_pages, v_pages, jnp.asarray(table), jnp.asarray(lens),
+        jnp.asarray(q_start), window=window, cap=cap, interpret=it)

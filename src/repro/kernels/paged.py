@@ -10,10 +10,17 @@ step DMAs one page HBM->VMEM->HBM with no host round-trip per page.
 The XLA alternative — ``buf[table]`` — materialises gather indices per
 element; the Pallas version moves whole (page_size, dim) tiles, which is the
 layout paged-attention kernels consume.  Grid = (n_logical_pages,).
+
+``valid_len`` masks the tail of a partially-filled last page to zero inside
+the kernel: the free list recycles pages without scrubbing them, so a
+reallocated page can still hold rows of its previous owner.  Cache-restore
+after preemption reads exactly ``valid_len`` rows, and anything beyond must
+be inert zeros, not a resurrected stale stream.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,34 +28,43 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gather_kernel(table_ref, pages_ref, out_ref):
+def _gather_kernel(table_ref, vlen_ref, pages_ref, out_ref, *, ps: int):
     # pages_ref is already the physical page selected by the index_map;
-    # the body is a straight VMEM copy.
+    # the body is a copy with the stale tail (rows >= valid_len) zeroed.
     del table_ref
-    out_ref[...] = pages_ref[...]
+    i = pl.program_id(0)
+    dim = out_ref.shape[-1]
+    row = i * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps, dim), 1)
+    out_ref[...] = jnp.where(row < vlen_ref[0], pages_ref[...], 0)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_gather(pages: jax.Array, table: jax.Array, *,
+def paged_gather(pages: jax.Array, table: jax.Array,
+                 valid_len: Optional[jax.Array] = None, *,
                  interpret: bool = True) -> jax.Array:
     """Gather logical pages from a paged buffer.
 
     pages: (num_physical_pages, page_size, dim) paged storage.
     table: (n,) int32 physical page id per logical page.
+    valid_len: optional scalar — rows at positions >= valid_len are zeroed
+        (stale remnants of a page's previous owner).  Default: keep all.
     Returns (n * page_size, dim) contiguous rows.
     """
     P, ps, dim = pages.shape
     n = table.shape[0]
+    if valid_len is None:
+        valid_len = n * ps
+    vlen = jnp.asarray(valid_len, jnp.int32).reshape(1)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(n,),
-        in_specs=[pl.BlockSpec((1, ps, dim), lambda i, t: (t[i], 0, 0))],
-        out_specs=pl.BlockSpec((1, ps, dim), lambda i, t: (i, 0, 0)),
+        in_specs=[pl.BlockSpec((1, ps, dim), lambda i, t, vl: (t[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, ps, dim), lambda i, t, vl: (i, 0, 0)),
     )
     out = pl.pallas_call(
-        _gather_kernel,
+        functools.partial(_gather_kernel, ps=ps),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, ps, dim), pages.dtype),
         interpret=interpret,
-    )(table.astype(jnp.int32), pages)
+    )(table.astype(jnp.int32), vlen, pages)
     return out.reshape(n * ps, dim)

@@ -56,6 +56,23 @@ def branch_decode_ref(q, prefix_k, prefix_v, prefix_pos,
     return attention_ref(q, k, v, q_pos, kp, causal=True, cap=cap)
 
 
+def paged_attention_ref(q, k_pages, v_pages, table, lens, q_start, *,
+                        window=0, cap: Optional[float] = None):
+    """Oracle for the paged decode kernel: gather every row's pages to a
+    dense (S, KV, hd) cache, mark slots beyond the row's length invalid
+    (-1), and run naive attention.  Shapes as kernels.paged_attention."""
+    B, T, _, _ = q.shape
+    _, ps, _, _ = k_pages.shape
+    S = table.shape[1] * ps
+    k = k_pages[table].reshape(B, S, *k_pages.shape[2:])
+    v = v_pages[table].reshape(B, S, *v_pages.shape[2:])
+    kpos = jnp.arange(S, dtype=jnp.int32)[None]
+    kpos = jnp.where(kpos < lens[:, None], kpos, -1)
+    qpos = q_start[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    return attention_ref(q, k, v, qpos, kpos, causal=True, window=window,
+                         cap=cap)
+
+
 def ssm_scan_ref(x, dt, Bm, Cm, A, D, h0) -> Tuple[jax.Array, jax.Array]:
     """Sequential selective scan (matches models.layers.mamba math)."""
     xf = x.astype(jnp.float32)

@@ -31,7 +31,6 @@ def _kernel(p_ref, q_ref, tok_ref, u_ref, w_ref,
             acc_ref, res_ref, ptok_ref, qtok_ref):
     pl_ = p_ref[0].astype(jnp.float32)          # (V,)
     ql_ = q_ref[0].astype(jnp.float32)
-    V = pl_.shape[0]
     p = jax.nn.softmax(pl_)
     q = jax.nn.softmax(ql_)
     t = tok_ref[0]

@@ -105,7 +105,8 @@ def run_batched(args, ecfg, prompts) -> dict:
         max_batch=args.max_batch,
         page_size=args.page_size,
         pool_pages=args.pool_pages,
-        swap_pages=args.swap_pages)
+        swap_pages=args.swap_pages,
+        attn_backend=args.attn_backend)
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=args.new_tokens,
                          arrival=i * args.arrival_interval)
@@ -162,6 +163,11 @@ def main() -> None:
                     "preemption)")
     ap.add_argument("--swap-pages", type=int, default=256,
                     help="paged swap-store pages for preempted requests")
+    ap.add_argument("--attn-backend", default="dense",
+                    choices=["dense", "paged"],
+                    help="batched-mode KV storage: dense per-row caches, "
+                    "or physically paged KV attended in place through the "
+                    "pool page tables (Pallas paged-attention kernel)")
     ap.add_argument("--arrival-interval", type=float, default=0.0,
                     help="modeled time units between request arrivals")
     ap.add_argument("--max-len", type=int, default=0,

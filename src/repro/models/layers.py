@@ -9,7 +9,6 @@ program that actually fits on a TPU v5e; the Pallas kernels in
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -169,7 +168,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               cache: Optional[Params] = None,
               window: int = 0,
               kv_chunk: int = 2048,
-              cache_mode: str = "append"
+              cache_mode: str = "append",
+              paged: Optional[Tuple[jax.Array, jax.Array]] = None
               ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention block (pre-norm, residual outside).
 
@@ -186,6 +186,16 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         evict, so they use the cheaper post-write path.)
       "fresh"  — single-shot prefill into an empty cache: attend over the
         chunk itself, then write the tail (avoids attending Sc dead slots).
+
+    Paged decode path (DESIGN.md §7.5): a cache holding "k_pages"/"v_pages"
+    (model.init_paged_cache) stores KV physically scattered across
+    fixed-size pages; ``paged`` must then carry the per-call page-table view
+    ``(table (B, n_max) int32, lens (B,) int32)``.  New KV is scattered at
+    page ``table[b, pos // ps]`` slot ``pos % ps``; writes at positions >=
+    lens (batch padding / idle rows) are routed to the trash page (the last
+    physical page) so they can never clobber a live or COW-shared slot.
+    Attention runs in-place over the pages via the Pallas paged kernel —
+    no gather, no dense copy (causal only: decode never runs bidirectional).
     """
     B, T, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
@@ -199,6 +209,27 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     sin, cos = rope_sin_cos(positions, hd, cfg.rope_theta)
     q = apply_rope(q, sin, cos)
     k = apply_rope(k, sin, cos)
+
+    if cache is not None and "k_pages" in cache:
+        from repro.kernels import ops as _ops
+        assert paged is not None, \
+            "a paged cache needs the (table, lens) view for this call"
+        table, lens = paged
+        table = table.astype(jnp.int32)
+        ps = cache["k_pages"].shape[1]
+        trash = cache["k_pages"].shape[0] - 1
+        lp = jnp.minimum(positions // ps, table.shape[1] - 1)
+        page = jnp.take_along_axis(table, lp, axis=1)           # (B, T)
+        page = jnp.where(positions < lens[:, None], page, trash)
+        off = positions % ps
+        ck = cache["k_pages"].at[page, off].set(
+            k.astype(cache["k_pages"].dtype))
+        cv = cache["v_pages"].at[page, off].set(
+            v.astype(cache["v_pages"].dtype))
+        out = _ops.paged_attention(q, ck, cv, table, lens, positions[:, 0],
+                                   window=window, cap=cfg.attn_softcap)
+        return (out.reshape(B, T, H * hd) @ p["wo"],
+                {"k_pages": ck, "v_pages": cv})
 
     new_cache = None
     if cache is not None:
@@ -246,6 +277,20 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, window: int
         "k": jnp.zeros((batch, Sc, KV, hd), dt),
         "v": jnp.zeros((batch, Sc, KV, hd), dt),
         "pos": jnp.full((batch, Sc), -1, jnp.int32),
+    }
+
+
+def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int
+                          ) -> Params:
+    """Physically paged KV storage for one attention slot: page id ->
+    (page_size, KV, hd) tile.  One extra trash page (index ``num_pages``)
+    absorbs masked pad writes.  No batch axis — rows are page-table views,
+    validity is positional (pos < lens), so no "pos" leaf either."""
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    dt = cfg.jdtype
+    return {
+        "k_pages": jnp.zeros((num_pages + 1, page_size, KV, hd), dt),
+        "v_pages": jnp.zeros((num_pages + 1, page_size, KV, hd), dt),
     }
 
 

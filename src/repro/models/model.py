@@ -108,6 +108,34 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return {"blocks": blocks, "rem": rem}
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int
+                     ) -> Params:
+    """Physically paged decode cache (DESIGN.md §7.5): every attention slot
+    stores KV scattered across ``num_pages`` fixed-size pages (+ one trash
+    page) addressed per call through a kv_pool page table.  Attention-only:
+    SSM state is recurrent, not positional, so it cannot be paged this way
+    (the batched serving path already excludes it).
+
+    Leaves keep the same leading stack axis as ``init_cache`` so the scan
+    over periods carries them identically — but there is no batch axis:
+    batch rows exist only as page-table views passed alongside the forward.
+    """
+    for mixer, _ in cfg.pattern:
+        if mixer == "mamba":
+            raise ValueError("paged decode cache is attention-only")
+    P, nper, nrem = cfg.period, cfg.n_periods, cfg.n_rem
+    blocks = []
+    for _ in range(P):
+        one = L.init_paged_attn_cache(cfg, num_pages, page_size)
+        blocks.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (nper,) + a.shape).copy()
+            if nper > 1 else a[None], one))
+    rem = [jax.tree.map(lambda a: a[None],
+                        L.init_paged_attn_cache(cfg, num_pages, page_size))
+           for _ in range(nrem)]
+    return {"blocks": blocks, "rem": rem}
+
+
 def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
     cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
@@ -119,7 +147,8 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
 
 def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
                 positions: jax.Array, cache: Optional[Params],
-                kv_chunk: int, moe_specs=None, cache_mode: str = "append"
+                kv_chunk: int, moe_specs=None, cache_mode: str = "append",
+                paged=None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     mixer, ffn_kind = slot
     aux_loss = jnp.zeros((), jnp.float32)
@@ -127,7 +156,7 @@ def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
         mx, new_cache = L.attention(
             p["mixer"], x, cfg, positions=positions, cache=cache,
             window=_slot_window(cfg, mixer), kv_chunk=kv_chunk,
-            cache_mode=cache_mode)
+            cache_mode=cache_mode, paged=paged)
     else:
         mx, new_cache = L.mamba(p["mixer"], x, cfg, cache=cache)
     x = x + mx
@@ -151,14 +180,18 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
             logits_spec=None,
             moe_specs=None,
             cache_mode: str = "append",
-            onehot_embed: bool = False
+            onehot_embed: bool = False,
+            paged=None
             ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
     """Run the model.
 
     tokens:  (B, T) int32 token ids, or None (pure-embedding input).
     embeds:  (B, Tp, d_model) stub frontend embeddings (audio frames / vision
              patches), prepended to the token embeddings when both given.
-    cache:   decode cache from ``init_cache`` (or None for cache-less runs).
+    cache:   decode cache from ``init_cache`` (or None for cache-less runs);
+             a cache from ``init_paged_cache`` additionally needs ``paged``.
+    paged:   (table (B, n_max) int32, lens (B,) int32) page-table view for
+             a physically paged cache — see layers.attention.
     positions: (B, T_total) absolute positions; default arange.
 
     feature_mode: "last" -> aux["features"] is (n_points, B, d_model) (hidden
@@ -200,7 +233,7 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
                 slot_params[s], x, cfg, cfg.pattern[s],
                 positions=positions, cache=slot_caches[s],
                 kv_chunk=kv_chunk, moe_specs=moe_specs,
-                cache_mode=cache_mode)
+                cache_mode=cache_mode, paged=paged)
             new_caches.append(nc)
             aux = aux + al
         feat = x[:, -1, :] if feature_mode == "last" else x
@@ -230,7 +263,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
         def apply_r(p_, x_, pos_, _slot=slot_r, _rc=rc):
             return _apply_slot(p_, x_, cfg, _slot, positions=pos_,
                                cache=_rc, kv_chunk=kv_chunk,
-                               moe_specs=moe_specs, cache_mode=cache_mode)
+                               moe_specs=moe_specs, cache_mode=cache_mode,
+                               paged=paged)
 
         if remat:
             apply_r = jax.checkpoint(

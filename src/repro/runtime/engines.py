@@ -27,7 +27,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hrad as H
 from repro.models.config import ModelConfig
 from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel, Round

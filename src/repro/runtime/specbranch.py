@@ -122,7 +122,7 @@ class SpecBranchEngine(Engine):
         k = len(cands)
         gb = self.ecfg.gamma_branch
         draft.fork(k)
-        logits = draft.forward_batched(cands[:, None])
+        draft.forward_batched(cands[:, None])  # advances branch rows
         ctx.stats.draft_tokens += 1
         conts = np.zeros((k, gb), np.int64)
         confs = np.zeros((k, gb), np.float64)

@@ -31,10 +31,17 @@ requests overlaps drafting with verification
 one target-call price per round covers every request in the batch.  SSM
 models carry recurrent state that padding would corrupt, so the batched
 path is attention-only; ``--mode sequential`` serves the rest.
+
+Storage backends: ``attn_backend="dense"`` keeps the N-row reference
+caches; ``"paged"`` stores KV physically scattered across the pool's pages
+and attends in place through the page tables (Pallas paged-attention
+kernel, DESIGN.md §7.5) — same token streams, no gather, zero-copy branch
+forks and rollback.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -66,23 +73,74 @@ class BatchedDecoder:
     start positions, ``prefill_row`` ingests a prompt into a fresh row via a
     batch-1 forward scattered into the batched cache (no full-batch compute
     at admission), ``copy_row`` implements branch forks.
+
+    Two storage backends (DESIGN.md §7.5):
+
+      * dense (default) — an N-row cache from ``model.init_cache``; branch
+        forks copy whole rows, preemption swap packs/unpacks rows;
+      * paged (``paged=pool``) — KV lives physically scattered across the
+        pool's pages (``model.init_paged_cache``); every forward receives
+        the page-table view of its rows (``bind_row`` keeps row -> stream
+        key) and attends in place via the Pallas paged-attention kernel.
+        A branch fork copies NOTHING (the pool's COW fork shares pages); a
+        COW split is mirrored physically through ``copy_page`` (the pool's
+        cow_listeners); rollback frees pages with zero data movement.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_rows: int,
-                 max_len: int):
+                 max_len: int, paged: Optional[PagedKVPool] = None):
         assert not _has_ssm(cfg), \
             "batched decoding is attention-only (SSM state cannot be padded)"
         self.params, self.cfg = params, cfg
         self.n_rows, self.max_len = n_rows, max_len
-        self.cache = M.init_cache(cfg, n_rows, max_len)
+        self.paged = paged
         self.free_rows: List[int] = list(range(n_rows - 1, -1, -1))
         # per-row write head: idle rows in a batched call park HERE, so
         # their pad writes land exactly where the row's next real write
         # lands (causally masked until overwritten) — parking anywhere
         # else would clobber live slots (pos 0 = the first prompt token!)
+        # (In paged mode any write at a position >= the row's pool length
+        # is routed to the trash page instead, same masking guarantee.)
         self.row_pos = np.zeros(n_rows, np.int64)
         self.n_calls = 0
         self.n_call_tokens = 0
+
+        if paged is not None:
+            self.cache = M.init_paged_cache(cfg, paged.num_pages,
+                                            paged.page_size)
+            self.n_table = paged.pages_for(max_len)
+            self.trash = paged.num_pages
+            self.row_key: Dict[int, Any] = {}
+
+            # the paged buffers are pool-sized; donate them so a step (or
+            # a single-page COW copy) updates in place instead of
+            # materializing a full pool copy per call — self.cache is
+            # rebound to the result immediately, so donation is safe
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def _fwd_paged(params, cache, tokens, pos, table, lens):
+                positions = pos[:, None] + jnp.arange(
+                    tokens.shape[1], dtype=jnp.int32)[None]
+                logits, cache, aux = M.forward(
+                    params, cfg, tokens, cache=cache, positions=positions,
+                    feature_mode="all", paged=(table, lens))
+                return logits, cache, aux["features"]
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def _copy_page(cache, src, dst):
+                def cp(a):     # page axis = 1 (after the layer-stack axis)
+                    r = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=1)
+                    return jax.lax.dynamic_update_slice_in_dim(a, r, dst,
+                                                               axis=1)
+                return jax.tree.map(cp, cache)
+
+            self._fwd, self._copy_page = _fwd_paged, _copy_page
+            # pack_row flattens positions, which pages scatter — the paged
+            # backend recomputes the prefix at re-admission instead.
+            self.swappable = False
+            self.swap_dim = 0
+            return
+
+        self.cache = M.init_cache(cfg, n_rows, max_len)
 
         @jax.jit
         def _fwd(params, cache, tokens, pos):
@@ -121,15 +179,58 @@ class BatchedDecoder:
         self.swap_dim = sum(s[0] * int(np.prod(s[3:], dtype=np.int64))
                             for s in self._leaf_shapes)
 
+    # ------------------------------------------------------ paged plumbing
+    def bind_row(self, row: int, key: Any) -> None:
+        """Attach a pool stream to a decoder row (paged backend only):
+        every forward reads the row's page table and length live from the
+        pool, so pool truncate/adopt are visible with no decoder call."""
+        if self.paged is not None:
+            self.row_key[row] = key
+
+    def unbind_row(self, row: int) -> None:
+        if self.paged is not None:
+            self.row_key.pop(row, None)
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Physical COW mirror: duplicate one page in every layer's paged
+        buffer (hooked into the pool's cow_listeners by the engine)."""
+        self.cache = self._copy_page(self.cache, jnp.int32(src),
+                                     jnp.int32(dst))
+
+    def _table_view(self, rows: Optional[Sequence[int]] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(table, lens) for a batched call: bound rows expose their pool
+        stream's pages; unbound rows are empty (lens 0 — every write they
+        make lands in the trash page, every read is masked)."""
+        n = self.n_rows if rows is None else len(rows)
+        tab = np.full((n, self.n_table), self.trash, np.int32)
+        lens = np.zeros(n, np.int32)
+        it = range(self.n_rows) if rows is None else rows
+        for i, row in enumerate(it):
+            key = self.row_key.get(row)
+            if key is None or not self.paged.is_open(key):
+                continue
+            t = self.paged.table(key)
+            tab[i, :len(t)] = t
+            lens[i] = self.paged.length(key)
+        return tab, lens
+
     # -------------------------------------------------------------- compute
     def step(self, tokens: np.ndarray, pos: np.ndarray
              ) -> Tuple[jax.Array, jax.Array]:
         """Batched forward: tokens (n_rows, T), pos (n_rows,) start
         positions.  Returns (logits (n_rows, T, V), feats)."""
         assert tokens.shape[0] == self.n_rows
-        logits, self.cache, feats = self._fwd(
-            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(pos, jnp.int32))
+        if self.paged is not None:
+            tab, lens = self._table_view()
+            logits, self.cache, feats = self._fwd(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(tab),
+                jnp.asarray(lens))
+        else:
+            logits, self.cache, feats = self._fwd(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(pos, jnp.int32))
         self.n_calls += 1
         self.n_call_tokens += int(tokens.size)
         return logits, feats
@@ -139,19 +240,32 @@ class BatchedDecoder:
         """Ingest ``tokens`` into a fresh row.  Returns (logits, feats) of
         the batch-1 prefill call."""
         assert len(tokens) >= 1
-        tmp = M.init_cache(self.cfg, 1, self.max_len)
-        logits, tmp, feats = self._fwd(
-            self.params, tmp, jnp.asarray([list(tokens)], jnp.int32),
-            jnp.zeros((1,), jnp.int32))
-        self.cache = self._set_row(self.cache, tmp, jnp.int32(row))
+        if self.paged is not None:
+            # batch-1 forward writing straight into the shared paged
+            # buffers (the pool was extended by the caller already)
+            tab, lens = self._table_view([row])
+            logits, self.cache, feats = self._fwd(
+                self.params, self.cache,
+                jnp.asarray([list(tokens)], jnp.int32),
+                jnp.zeros((1,), jnp.int32), jnp.asarray(tab),
+                jnp.asarray(lens))
+        else:
+            tmp = M.init_cache(self.cfg, 1, self.max_len)
+            logits, tmp, feats = self._fwd(
+                self.params, tmp, jnp.asarray([list(tokens)], jnp.int32),
+                jnp.zeros((1,), jnp.int32))
+            self.cache = self._set_row(self.cache, tmp, jnp.int32(row))
         self.row_pos[row] = len(tokens)
         self.n_calls += 1
         self.n_call_tokens += len(tokens)
         return logits, feats
 
     def copy_row(self, src: int, dst: int) -> None:
-        self.cache = self._copy_row(self.cache, jnp.int32(src),
-                                    jnp.int32(dst))
+        if self.paged is None:
+            self.cache = self._copy_row(self.cache, jnp.int32(src),
+                                        jnp.int32(dst))
+        # paged: nothing to copy — the fork is page-table sharing in the
+        # pool (the caller binds dst to the forked stream key)
         self.row_pos[dst] = self.row_pos[src]
 
     # ----------------------------------------------------------- swap space
@@ -242,24 +356,32 @@ class BatchedEngineBase:
                  pool_pages: Optional[int] = None,
                  swap_pages: int = 0,
                  hrad_params=None,
+                 attn_backend: str = "dense",
                  debug_check: bool = False):
+        assert attn_backend in ("dense", "paged"), attn_backend
         self.dp, self.dcfg = draft_params, draft_cfg
         self.tp, self.tcfg = target_params, target_cfg
         self.ecfg = ecfg
         self.hrad_params = hrad_params
         self.max_batch = max_batch
+        self.attn_backend = attn_backend
         self.debug_check = debug_check
-        self.tgt_dec = BatchedDecoder(target_params, target_cfg,
-                                      n_rows=max_batch, max_len=ecfg.max_len)
-        self.dft_dec = BatchedDecoder(draft_params, draft_cfg,
-                                      n_rows=max_batch
-                                      * self.draft_rows_per_seq,
-                                      max_len=ecfg.max_len)
         if pool_pages is None:
             # room for every stream at full length plus branch slack
             per_seq = 2 + (self.draft_rows_per_seq - 1)
             pool_pages = -(-max_batch * per_seq * ecfg.max_len // page_size)
         self.pool = PagedKVPool(pool_pages, page_size)
+        paged = self.pool if attn_backend == "paged" else None
+        self.tgt_dec = BatchedDecoder(target_params, target_cfg,
+                                      n_rows=max_batch, max_len=ecfg.max_len,
+                                      paged=paged)
+        self.dft_dec = BatchedDecoder(draft_params, draft_cfg,
+                                      n_rows=max_batch
+                                      * self.draft_rows_per_seq,
+                                      max_len=ecfg.max_len, paged=paged)
+        if paged is not None:
+            # accounting COW (pool) -> physical COW (both paged buffers)
+            self.pool.cow_listeners.append(self._mirror_cow)
         self.swap: Optional[PagedStore] = None
         if swap_pages > 0 and self.tgt_dec.swappable:
             self.swap = PagedStore(swap_pages, page_size,
@@ -271,6 +393,14 @@ class BatchedEngineBase:
         self.active: List[_Seq] = []
         self._admit_counter = 0
         self._seed = ecfg.seed
+
+    def _mirror_cow(self, old: int, new: int) -> None:
+        """A pool COW split copies page data in every paged buffer.  Page
+        ids are stream-agnostic, so the split's owner is unknown here; the
+        off-owner decoder copies a page of inert data (never referenced by
+        any of its tables) — harmless, and it keeps the hook stream-free."""
+        self.tgt_dec.copy_page(old, new)
+        self.dft_dec.copy_page(old, new)
 
     # --------------------------------------------------------- prob helpers
     def _np_probs(self, logits_row: np.ndarray, temp: float) -> np.ndarray:
@@ -418,6 +548,8 @@ class BatchedEngineBase:
             raise
         t_row = self.tgt_dec.free_rows.pop()
         d_row = self.dft_dec.free_rows.pop()
+        self.tgt_dec.bind_row(t_row, tk)
+        self.dft_dec.bind_row(d_row, dk)
         if meta is not None and meta.get("swap_key") is not None:
             rows = self.swap.get(meta["swap_key"])
             self.tgt_dec.unpack_row(t_row, rows)
@@ -459,6 +591,8 @@ class BatchedEngineBase:
         tk, dk = self._pool_keys(victim.rid)
         self.pool.close(tk, "preempt")
         self.pool.close(dk, "preempt")
+        self.tgt_dec.unbind_row(victim.tgt.row)
+        self.dft_dec.unbind_row(victim.dft.row)
         self.tgt_dec.free_rows.append(victim.tgt.row)
         self.dft_dec.free_rows.append(victim.dft.row)
         victim.tgt = victim.dft = None
@@ -512,6 +646,8 @@ class BatchedEngineBase:
             tk, dk = self._pool_keys(seq.rid)
             self.pool.close(tk, "retire")
             self.pool.close(dk, "retire")
+            self.tgt_dec.unbind_row(seq.tgt.row)
+            self.dft_dec.unbind_row(seq.dft.row)
             self.tgt_dec.free_rows.append(seq.tgt.row)
             self.dft_dec.free_rows.append(seq.dft.row)
             seq.stats.finish()
@@ -686,6 +822,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             if i == keep:
                 continue
             self.pool.close(self._bkey(seq.rid, i), reason)
+            self.dft_dec.unbind_row(st.row)
             self.dft_dec.free_rows.append(st.row)
 
     # --------------------------------------------------------------- round
@@ -734,6 +871,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 row = self.dft_dec.free_rows.pop()
                 self.dft_dec.copy_row(s.dft.row, row)
                 self.pool.fork(("d", s.rid), self._bkey(s.rid, i))
+                self.dft_dec.bind_row(row, self._bkey(s.rid, i))
                 bset.streams.append(_Stream(row=row, ing=s.dft.ing))
                 bset.conts.append([])
                 bset.cont_q.append([])
@@ -895,6 +1033,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         s.dft.pending = []
         self.pool.adopt(("d", s.rid), self._bkey(s.rid, i))
         self._free_branches(s, bset, "branch", keep=i)
+        self.dft_dec.unbind_row(win.row)
         self.dft_dec.free_rows.append(win.row)
 
         # posterior H-RAD on THIS verification's features (Sec. 5.2)

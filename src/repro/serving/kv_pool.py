@@ -30,7 +30,7 @@ preemption swap space) read back through the Pallas paged-gather kernel
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -93,6 +93,10 @@ class PagedKVPool:
         self._tables: Dict[SeqId, List[int]] = {}
         self._lens: Dict[SeqId, int] = {}
         self.stats = PoolStats()
+        # physically paged consumers (the paged-attention decoders) register
+        # here: a COW is a *data* copy for them, not just accounting, and
+        # the copy must land before the next forward reads the new page.
+        self.cow_listeners: List[Callable[[int, int], None]] = []
 
     # ------------------------------------------------------------- queries
     def pages_for(self, n_tokens: int) -> int:
@@ -201,6 +205,8 @@ class PagedKVPool:
         self._ref[old] -= 1
         table[logical_page] = new
         self.stats.cow_copies += 1
+        for fn in self.cow_listeners:
+            fn(old, new)
 
     def truncate(self, seq: SeqId, new_len: int,
                  reason: str = "rollback") -> int:
@@ -286,7 +292,9 @@ class PagedStore:
         L = self.pool.length(seq)
         if L == 0:
             return np.zeros((0, self.dim), self.buf.dtype)
-        out = ops.paged_gather(self.buf, table, interpret=interpret)
+        # valid_len zeroes the stale tail of a partially-filled last page
+        # (recycled pages are not scrubbed) before the host-side trim.
+        out = ops.paged_gather(self.buf, table, L, interpret=interpret)
         return np.asarray(out)[:L]
 
     def drop(self, seq: SeqId, reason: str = "retire") -> None:

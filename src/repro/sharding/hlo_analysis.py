@@ -23,7 +23,6 @@ else the worst-case axis size).
 """
 from __future__ import annotations
 
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

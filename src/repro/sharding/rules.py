@@ -16,7 +16,7 @@ params / cache / input pytrees.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np
@@ -68,8 +68,11 @@ def _leaf_spec(mesh: Mesh, path: Tuple[str, ...], shape: Tuple[int, ...],
     """
     name = path[-1]
     fa = () if tp_only else fsdp_axes(mesh)
-    d0 = lambda dim: _fit(mesh, dim, fa, None if tp_only else "data")
-    dm = lambda dim: _fit(mesh, dim, "model")
+    def d0(dim):
+        return _fit(mesh, dim, fa, None if tp_only else "data")
+
+    def dm(dim):
+        return _fit(mesh, dim, "model")
 
     if name in ("ln", "final_norm", "conv_b", "dt_b", "Dskip", "q_norm",
                 "k_norm"):

@@ -29,7 +29,8 @@ class OptState(NamedTuple):
 
 
 def init(params) -> OptState:
-    zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+    def zeros():
+        return jax.tree.map(jnp.zeros_like, params)
     return OptState(m=zeros(), v=zeros(), step=jnp.zeros((), jnp.int32))
 
 

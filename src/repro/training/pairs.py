@@ -16,7 +16,6 @@ import os
 from typing import Tuple
 
 import jax
-import numpy as np
 
 from repro.data.synthetic import ZipfMarkov
 from repro.models import model as M

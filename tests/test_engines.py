@@ -1,7 +1,6 @@
 """Engine behaviour: greedy losslessness for all six engines, stats sanity,
 rollback accounting, ablation flags, SSM-target support."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

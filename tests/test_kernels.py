@@ -153,6 +153,24 @@ def test_paged_gather_matches_numpy(n, ps, dim):
     np.testing.assert_array_equal(got, buf[table].reshape(n * ps, dim))
 
 
+def test_paged_gather_valid_len_zeroes_stale_tail():
+    """Regression: the free list recycles pages without scrubbing, so a
+    partially-filled last page still holds its previous owner's rows.
+    A gather with valid_len must return zeros there — cache-restore after
+    preemption must not resurrect a stale stream's KV."""
+    rng = np.random.default_rng(11)
+    buf = rng.normal(size=(8, 4, 8)).astype(np.float32)   # all pages dirty
+    table = np.asarray([6, 3, 0], np.int32)
+    L = 9                                  # last page only 1/4 filled
+    got = np.asarray(ops.paged_gather(buf, table, L))
+    want = buf[table].reshape(12, 8)
+    np.testing.assert_array_equal(got[:L], want[:L])
+    assert (got[L:] == 0).all(), "stale rows leaked past valid_len"
+    # default (no valid_len) keeps the historical full-page behaviour
+    np.testing.assert_array_equal(np.asarray(ops.paged_gather(buf, table)),
+                                  want)
+
+
 def test_paged_gather_repeated_pages():
     """Shared (COW) pages may appear in several tables — and in one table
     twice; the gather must not assume uniqueness."""

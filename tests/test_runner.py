@@ -1,9 +1,7 @@
 """ModelRunner invariants: pending semantics, positional rollback, SSM
 checkpoint-replay rollback, branch fork/select/unfork."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.paper_pairs import tiny_pair
 from repro.models import model as M

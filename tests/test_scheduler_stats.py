@@ -1,5 +1,4 @@
 """Scheduler.aggregate percentile stats + serving metrics helpers."""
-import dataclasses
 
 import pytest
 

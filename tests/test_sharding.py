@@ -1,7 +1,6 @@
 """Sharding rules: every spec must divide its dimension on the production
 meshes (validated abstractly — no devices needed), plus HLO collective
 parsing unit tests."""
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
