@@ -91,6 +91,10 @@ def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", default="random", choices=["random", "trained"])
+    ap.add_argument("--hybrid", action="store_true",
+                    help="sweep an SSM-bearing (jamba-shaped) pair instead: "
+                    "batched decode runs on the checkpoint-ring SSM cache "
+                    "(DESIGN.md §7.6) — the hybrid-serving bench smoke")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--batch-sizes", type=int, nargs="+", default=[1, 2, 4])
@@ -101,7 +105,14 @@ def main() -> None:
     ap.add_argument("--out", default="serving_sweep.json")
     args = ap.parse_args()
 
-    if args.pair == "trained":
+    if args.hybrid and args.pair != "random":
+        ap.error("--hybrid selects its own (jamba-shaped) pair; "
+                 "drop --pair " + args.pair)
+    if args.hybrid:
+        from repro.training.pairs import hybrid_pair
+        dp, dcfg, tp, tcfg = hybrid_pair("jamba-shaped")
+        vocab = tcfg.vocab_size
+    elif args.pair == "trained":
         from repro.training.pairs import VOCAB, get_pair
         dp, dcfg, tp, tcfg = get_pair("misaligned")
         vocab = VOCAB
@@ -142,7 +153,9 @@ def main() -> None:
 
     report = {
         "engine": "specbranch",
-        "pair": args.pair,
+        "pair": "jamba-shaped" if args.hybrid else args.pair,
+        "hybrid": bool(args.hybrid),
+        "target_pattern": [list(s) for s in tcfg.pattern],
         "requests": args.requests,
         "new_tokens": args.new_tokens,
         "gamma": args.gamma,

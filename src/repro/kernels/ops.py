@@ -68,9 +68,13 @@ def branch_decode_attention(q, prefix_k, prefix_v, prefix_pos,
 
 
 def ssm_scan(x, dt, Bm, Cm, A, D, h0, *, bT=128, bE=256,
-             interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+             return_states: bool = False,
+             interpret: Optional[bool] = None) -> Tuple[jax.Array, ...]:
+    """Selective scan; ``return_states`` adds the per-step carries hs
+    (B, T, E, N) — the SSM rollback checkpoints.  See kernels.ssm_scan."""
     it = _default_interpret() if interpret is None else interpret
-    return _ssm.ssm_scan(x, dt, Bm, Cm, A, D, h0, bT=bT, bE=bE, interpret=it)
+    return _ssm.ssm_scan(x, dt, Bm, Cm, A, D, h0, bT=bT, bE=bE,
+                         return_states=return_states, interpret=it)
 
 
 def verify_accept(p_logits, q_logits, tokens, uniforms, res_uniforms, *,

@@ -73,8 +73,12 @@ def paged_attention_ref(q, k_pages, v_pages, table, lens, q_start, *,
                          cap=cap)
 
 
-def ssm_scan_ref(x, dt, Bm, Cm, A, D, h0) -> Tuple[jax.Array, jax.Array]:
-    """Sequential selective scan (matches models.layers.mamba math)."""
+def ssm_scan_ref(x, dt, Bm, Cm, A, D, h0, *, return_states: bool = False
+                 ) -> Tuple[jax.Array, ...]:
+    """Sequential selective scan (matches models.layers.mamba math).
+
+    With ``return_states`` additionally returns hs (B, T, E, N): the
+    post-step carry after every position (rollback-checkpoint oracle)."""
     xf = x.astype(jnp.float32)
     dtf = dt.astype(jnp.float32)
     decay = jnp.exp(dtf[..., None] * A.astype(jnp.float32))   # (B,T,E,N)
@@ -91,6 +95,8 @@ def ssm_scan_ref(x, dt, Bm, Cm, A, D, h0) -> Tuple[jax.Array, jax.Array]:
     hs = hs.transpose(1, 0, 2, 3)
     y = jnp.einsum("bten,btn->bte", hs, Cm.astype(jnp.float32)) \
         + D.astype(jnp.float32) * xf
+    if return_states:
+        return y, hT, hs
     return y, hT
 
 

@@ -24,7 +24,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
-            y_ref, hT_ref, h_scr, *, bT: int, nT: int, T: int):
+            y_ref, hT_ref, *rest, bT: int, nT: int, T: int,
+            with_states: bool):
+    if with_states:
+        hs_ref, h_scr = rest
+    else:
+        (h_scr,) = rest
     it = pl.program_id(2)
 
     @pl.when(it == 0)
@@ -39,21 +44,30 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
     D = d_ref[...].astype(jnp.float32)      # (bE,)
 
     def step(t, carry):
-        h, ys = carry
+        h, ys, hs = carry
         d_t = dt[t]                          # (bE,)
         decay = jnp.exp(d_t[:, None] * A)    # (bE, N)
         drive = (d_t * x[t])[:, None] * Bm[t][None, :]
         h = decay * h + drive
         y_t = (h * Cm[t][None, :]).sum(-1) + D * x[t]   # (bE,)
         ys = jax.lax.dynamic_update_index_in_dim(ys, y_t, t, 0)
-        return h, ys
+        if with_states:
+            hs = jax.lax.dynamic_update_index_in_dim(hs, h, t, 0)
+        return h, ys, hs
 
     ys0 = jnp.zeros((bT,) + h_scr.shape[:1], jnp.float32)
+    # per-step carries: the rollback checkpoints of DESIGN.md §7.6 — one
+    # post-step h_t per drafted position (zero-size when not requested, so
+    # the fast path carries nothing extra through the loop)
+    hs0 = jnp.zeros(((bT,) + h_scr.shape) if with_states else (0,),
+                    jnp.float32)
     # only iterate over valid timesteps in the (padded) last chunk
     valid = jnp.minimum(bT, T - it * bT)
-    h, ys = jax.lax.fori_loop(0, valid, step, (h_scr[...], ys0))
+    h, ys, hs = jax.lax.fori_loop(0, valid, step, (h_scr[...], ys0, hs0))
     h_scr[...] = h
     y_ref[0] = ys.astype(y_ref.dtype)
+    if with_states:
+        hs_ref[0] = hs
 
     @pl.when(it == nT - 1)
     def _finish():
@@ -61,15 +75,21 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bT", "bE", "interpret"))
+                   static_argnames=("bT", "bE", "interpret",
+                                    "return_states"))
 def ssm_scan(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
              A: jax.Array, D: jax.Array, h0: jax.Array, *,
-             bT: int = 128, bE: int = 256, interpret: bool = True
-             ) -> Tuple[jax.Array, jax.Array]:
+             bT: int = 128, bE: int = 256, interpret: bool = True,
+             return_states: bool = False
+             ) -> Tuple[jax.Array, ...]:
     """Selective scan.
 
     x, dt: (B, T, E); Bm, Cm: (B, T, N); A: (E, N); D: (E,); h0: (B, E, N).
-    Returns (y (B, T, E) float32, hT (B, E, N) float32).
+    Returns (y (B, T, E) float32, hT (B, E, N) float32); with
+    ``return_states`` additionally the post-step recurrent carry at EVERY
+    position, hs (B, T, E, N) float32 — the per-drafted-token rollback
+    checkpoints consumed by the serving layer's SSM checkpoint ring
+    (DESIGN.md §7.6).
     """
     B, T, E = x.shape
     N = A.shape[1]
@@ -95,8 +115,21 @@ def ssm_scan(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
     Tp, Ep = T + padT, E + padE
     nT, nE = Tp // bT_, Ep // bE_
 
-    kernel = functools.partial(_kernel, bT=bT_, nT=nT, T=T)
-    y, hT = pl.pallas_call(
+    kernel = functools.partial(_kernel, bT=bT_, nT=nT, T=T,
+                               with_states=return_states)
+    out_specs = [
+        pl.BlockSpec((1, bT_, bE_), lambda b, ie, it: (b, it, ie)),
+        pl.BlockSpec((1, bE_, N), lambda b, ie, it: (b, ie, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Tp, Ep), jnp.float32),
+        jax.ShapeDtypeStruct((B, Ep, N), jnp.float32),
+    ]
+    if return_states:
+        out_specs.append(
+            pl.BlockSpec((1, bT_, bE_, N), lambda b, ie, it: (b, it, ie, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, Tp, Ep, N), jnp.float32))
+    outs = pl.pallas_call(
         kernel,
         grid=(B, nE, nT),
         in_specs=[
@@ -108,15 +141,13 @@ def ssm_scan(x: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
             pl.BlockSpec((bE_,), lambda b, ie, it: (ie,)),               # D
             pl.BlockSpec((1, bE_, N), lambda b, ie, it: (b, ie, 0)),     # h0
         ],
-        out_specs=[
-            pl.BlockSpec((1, bT_, bE_), lambda b, ie, it: (b, it, ie)),
-            pl.BlockSpec((1, bE_, N), lambda b, ie, it: (b, ie, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, Tp, Ep), jnp.float32),
-            jax.ShapeDtypeStruct((B, Ep, N), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bE_, N), jnp.float32)],
         interpret=interpret,
     )(xp, dtp, Bp, Cp, Ap, Dp, h0p)
+    if return_states:
+        y, hT, hs = outs
+        return y[:, :T, :E], hT[:, :E], hs[:, :T, :E]
+    y, hT = outs
     return y[:, :T, :E], hT[:, :E]

@@ -6,9 +6,12 @@ Two modes (DESIGN.md §7):
     (runtime/scheduler.py): each request runs its own engine to completion
     in arrival order.
   * ``--mode batched``   — the continuous-batching subsystem
-    (repro.serving): token-level batching with a paged KV pool,
+    (repro.serving): token-level batching with per-decoder paged KV pools,
     rollback-aware page reclamation, step-granularity admission/retirement,
-    preemption + paged swap, and per-request streaming.
+    preemption + paged swap, and per-request streaming.  SSM/hybrid pairs
+    (``--pair falcon-shaped|jamba-shaped``) batch too: mamba state rides
+    the per-row checkpoint ring (DESIGN.md §7.6), so rollback stays O(1)
+    and there is no sequential fallback for recurrent models.
 
 Speeds are reported on the modeled clock (runtime/cost_model.py — wall
 clock is meaningless on this CPU container); both modes print the same
@@ -38,7 +41,7 @@ from repro.runtime.scheduler import (Request, Scheduler,
 from repro.runtime.specbranch import SpecBranchEngine
 from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
                            ContinuousBatchScheduler, ServeRequest)
-from repro.training.pairs import VOCAB, get_pair
+from repro.training.pairs import HYBRID_KINDS, VOCAB, get_pair, hybrid_pair
 
 ENGINES = {
     "autoregressive": AutoregressiveEngine,
@@ -55,9 +58,17 @@ BATCHED_ENGINES = {
 }
 
 
+def load_pair(kind: str):
+    """Trained Zipf-Markov pairs, or random-init SSM-bearing pairs for the
+    hybrid serving path (falcon-shaped / jamba-shaped)."""
+    if kind in HYBRID_KINDS:
+        return hybrid_pair(kind)
+    return get_pair(kind)
+
+
 def build_engine(name: str, ecfg: EngineConfig, pair_kind: str = "misaligned",
                  hrad_params=None):
-    dp, dcfg, tp, tcfg = get_pair(pair_kind)
+    dp, dcfg, tp, tcfg = load_pair(pair_kind)
     cls = ENGINES[name]
     if name in ("autoregressive", "lookahead"):
         return cls(tp, tcfg, ecfg)
@@ -99,7 +110,7 @@ def run_batched(args, ecfg, prompts) -> dict:
         raise SystemExit(
             f"--mode batched supports {sorted(BATCHED_ENGINES)}; "
             f"run --engine {args.engine} with --mode sequential")
-    dp, dcfg, tp, tcfg = get_pair(args.pair)
+    dp, dcfg, tp, tcfg = load_pair(args.pair)
     eng = BATCHED_ENGINES[args.engine](
         dp, dcfg, tp, tcfg, ecfg,
         max_batch=args.max_batch,
@@ -149,7 +160,11 @@ def main() -> None:
                     help="default: batched for engines with a batched "
                     "implementation, sequential otherwise")
     ap.add_argument("--pair", default="misaligned",
-                    choices=["misaligned", "aligned"])
+                    choices=["misaligned", "aligned", *HYBRID_KINDS],
+                    help="misaligned/aligned: trained attention pairs; "
+                    "falcon-shaped/jamba-shaped: random-init SSM/hybrid "
+                    "pairs — batched mode serves them via the checkpoint-"
+                    "ring SSM cache, no sequential fallback")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=48)
     ap.add_argument("--gamma", type=int, default=4)

@@ -268,9 +268,17 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     return out.reshape(B, T, H * hd) @ p["wo"], new_cache
 
 
-def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, window: int
-                    ) -> Params:
-    Sc = min(window, max_len) if window > 0 else max_len
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                    ring_slack: int = 0) -> Params:
+    """ring_slack pads a sliding-window ring beyond ``window`` slots.
+    Sequential decode never needs it (writes advance monotonically), but
+    batched speculative decode writes pads/drafts up to a round's span
+    AHEAD of a row's logical length: with Sc == window such a write evicts
+    the key at ``pos - window``, which is still inside the window of the
+    row's post-rollback queries.  With Sc >= window + slack (slack >= max
+    overshoot + rollback span) every evicted key is provably outside all
+    future windows."""
+    Sc = min(window + ring_slack, max_len) if window > 0 else max_len
     KV, hd = cfg.num_kv_heads, cfg.hd
     dt = cfg.jdtype
     return {
@@ -434,8 +442,33 @@ def init_mamba(key, cfg: ModelConfig) -> Params:
     }
 
 
-def init_mamba_cache(cfg: ModelConfig, batch: int) -> Params:
+# Experiment knob: ring-mode decode scan implementation — "jnp" (pure-jnp
+# per-step scan) or "pallas" (kernels.ssm_scan with return_states).  Module
+# level like ATTN_Q_SPEC so the serving tests can flip it without re-plumbing.
+SSM_SCAN_IMPL = "jnp"
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, ring: int = 0) -> Params:
+    """Recurrent decode state for one mamba slot.
+
+    ring == 0 (sequential decode / training): the carried state only —
+    rollback needs checkpoint+replay (runtime/runner.py).
+
+    ring > 0 (batched serving, DESIGN.md §7.6): a position-indexed
+    checkpoint ring.  Slot ``k % ring`` holds the post-step state (SSM
+    carry h + causal-conv tail) after the row's k-th token; slot 0 is the
+    zero state so a fresh row is readable at position 0.  A forward
+    starting at position p0 *loads* its state from slot ``p0 % ring``,
+    which makes SSM rollback purely positional — shrink the logical length
+    and the next forward resumes from the accept-point checkpoint, O(1)
+    per row, no replay — exactly symmetric to the attention cache's
+    causally-masked stale slots."""
     E, N, Cv = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    if ring > 0:
+        return {
+            "h_ring": jnp.zeros((batch, ring, E, N), jnp.float32),
+            "conv_ring": jnp.zeros((batch, ring, Cv - 1, E), cfg.jdtype),
+        }
     return {
         "conv": jnp.zeros((batch, Cv - 1, E), cfg.jdtype),
         "ssm": jnp.zeros((batch, E, N), jnp.float32),
@@ -456,15 +489,40 @@ def _causal_conv(xp: jax.Array, w: jax.Array, b: jax.Array,
 
 def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
           cache: Optional[Params] = None,
-          scan_impl: str = "jnp") -> Tuple[jax.Array, Optional[Params]]:
-    """Mamba-1 mixer.  x: (B, T, D) -> (B, T, D)."""
+          positions: Optional[jax.Array] = None,
+          scan_impl: Optional[str] = None
+          ) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba-1 mixer.  x: (B, T, D) -> (B, T, D).
+
+    A ring cache (init_mamba_cache with ring > 0) additionally needs
+    ``positions`` (B, T): the initial state is loaded from the checkpoint
+    slot of each row's start position (position 0 = zero state) and a
+    post-step checkpoint is written for every emitted position — the
+    serving layer's rollback/snapshot substrate (DESIGN.md §7.6)."""
     B, T, D = x.shape
     E, N, R = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    Cv = cfg.ssm_conv
     h = rms_norm(x, p["ln"], cfg.norm_eps)
     xz = h @ p["in_proj"]
     xp, z = jnp.split(xz, 2, axis=-1)                            # (B,T,E) each
 
-    prev = cache["conv"] if cache is not None else None
+    ring = cache is not None and "h_ring" in cache
+    if ring:
+        assert positions is not None, "ring SSM cache needs positions"
+        Rg = cache["h_ring"].shape[1]
+        p0 = positions[:, 0].astype(jnp.int32)                   # (B,)
+        bidx = jnp.arange(B)
+        slot0 = p0 % Rg
+        fresh = (p0 == 0)                    # new row: zero state, not slot 0
+        h0 = jnp.where(fresh[:, None, None], 0.0,
+                       cache["h_ring"][bidx, slot0])
+        prev = jnp.where(fresh[:, None, None],
+                         jnp.zeros((), cache["conv_ring"].dtype),
+                         cache["conv_ring"][bidx, slot0])
+    else:
+        prev = cache["conv"] if cache is not None else None
+        h0 = (cache["ssm"] if cache is not None
+              else jnp.zeros((B, E, N), jnp.float32))
     xc, new_conv = _causal_conv(xp, p["conv_w"], p["conv_b"], prev)
     xc = silu(xc)
 
@@ -477,15 +535,6 @@ def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
     A = -jnp.exp(p["A_log"])                                      # (E,N)
     xf = xc.astype(jnp.float32)
 
-    h0 = (cache["ssm"] if cache is not None
-          else jnp.zeros((B, E, N), jnp.float32))
-
-    # the (B,T,E,N) decay/drive tensors are NEVER materialized: each scan
-    # step builds its own (B,E,N) slice from delta_t / B_t / C_t — this is
-    # the memory shape the Pallas ssm_scan kernel implements on TPU.
-    # Two-level scan: the outer chunk scan saves only h at chunk boundaries
-    # for the backward pass (checkpointed body); per-step carries exist only
-    # transiently within one chunk — O(T/chunk + chunk) memory, not O(T).
     def step(hprev, xs):
         d_t, x_t, b_t, c_t = xs            # (B,E), (B,E), (B,N), (B,N)
         decay_t = jnp.exp(d_t[..., None] * A)
@@ -493,29 +542,78 @@ def mamba(p: Params, x: jax.Array, cfg: ModelConfig, *,
         y_t = jnp.einsum("ben,bn->be", h_t, c_t)
         return h_t, y_t
 
-    chunk = min(128, T)
-    pad = (-T) % chunk
-    nchunks = (T + pad) // chunk
+    hs = None
+    if ring:
+        # decode path: keep every post-step carry — the (B, T, E, N)
+        # checkpoint tensor IS the product here, T is a draft span, not a
+        # training sequence, so materializing it is the point, not a leak.
+        impl = scan_impl or SSM_SCAN_IMPL
+        if impl == "pallas":
+            from repro.kernels import ops as _ops
+            y, hT, hs = _ops.ssm_scan(xc, delta, Bmat, Cmat, A, p["Dskip"],
+                                      h0, return_states=True)
+        else:
+            def step_full(hprev, xs):
+                h_t, y_t = step(hprev, xs)
+                return h_t, (y_t, h_t)
+            hT, (ys, hs) = jax.lax.scan(
+                step_full, h0,
+                (delta.transpose(1, 0, 2), xf.transpose(1, 0, 2),
+                 Bmat.transpose(1, 0, 2), Cmat.transpose(1, 0, 2)))
+            y = ys.transpose(1, 0, 2) + p["Dskip"] * xf            # (B,T,E)
+            hs = hs.transpose(1, 0, 2, 3)                          # (B,T,E,N)
+    else:
+        # the (B,T,E,N) decay/drive tensors are NEVER materialized: each
+        # scan step builds its own (B,E,N) slice from delta_t / B_t / C_t —
+        # this is the memory shape the Pallas ssm_scan kernel implements on
+        # TPU.  Two-level scan: the outer chunk scan saves only h at chunk
+        # boundaries for the backward pass (checkpointed body); per-step
+        # carries exist only transiently within one chunk —
+        # O(T/chunk + chunk) memory, not O(T).
+        chunk = min(128, T)
+        pad = (-T) % chunk
+        nchunks = (T + pad) // chunk
 
-    def padt(a):
-        return jnp.pad(a, ((0, 0), (0, pad), (0, 0))) if pad else a
+        def padt(a):
+            return jnp.pad(a, ((0, 0), (0, pad), (0, 0))) if pad else a
 
-    def to_chunks(a):  # (B, T, X) -> (nchunks, chunk, B, X)
-        return padt(a).reshape(B, nchunks, chunk, -1).transpose(1, 2, 0, 3)
+        def to_chunks(a):  # (B, T, X) -> (nchunks, chunk, B, X)
+            return padt(a).reshape(B, nchunks, chunk, -1).transpose(1, 2, 0, 3)
 
-    seq = (to_chunks(delta), to_chunks(xf), to_chunks(Bmat), to_chunks(Cmat))
+        seq = (to_chunks(delta), to_chunks(xf), to_chunks(Bmat),
+               to_chunks(Cmat))
 
-    @jax.checkpoint
-    def chunk_body(h, xs):
-        return jax.lax.scan(step, h, xs)
+        @jax.checkpoint
+        def chunk_body(h, xs):
+            return jax.lax.scan(step, h, xs)
 
-    hT, ys = jax.lax.scan(chunk_body, h0, seq)
-    y = ys.reshape(nchunks * chunk, B, E).transpose(1, 0, 2)[:, :T]
-    y = y + p["Dskip"] * xf                                        # (B,T,E)
+        hT, ys = jax.lax.scan(chunk_body, h0, seq)
+        y = ys.reshape(nchunks * chunk, B, E).transpose(1, 0, 2)[:, :T]
+        y = y + p["Dskip"] * xf                                    # (B,T,E)
     y = y.astype(x.dtype) * silu(z)
     out = y @ p["out_proj"]
 
     new_cache = None
-    if cache is not None:
+    if ring:
+        # write one checkpoint per emitted position: the state after the
+        # row's k-th token lands in slot k % Rg.  Pad steps of a batched
+        # call write *future* slots (length > the row's logical length) and
+        # are overwritten by real writes before any load can see them —
+        # the same masked-until-overwritten discipline as pad KV writes.
+        # Only the trailing min(T, Rg) steps are scattered: a longer span
+        # (prefill) laps the ring and the survivors are exactly the last
+        # Rg checkpoints — slicing first keeps every scatter index unique
+        # (duplicate scatter writes have unspecified order).
+        Tr = min(T, Rg)
+        t_idx = jnp.arange(T - Tr, T, dtype=jnp.int32)             # (Tr,)
+        slots = (p0[:, None] + t_idx[None] + 1) % Rg               # (B, Tr)
+        h_ring = cache["h_ring"].at[bidx[:, None], slots].set(hs[:, T - Tr:])
+        full = jnp.concatenate([prev.astype(xp.dtype), xp], axis=1)
+        widx = t_idx[:, None] + 1 + jnp.arange(Cv - 1)[None]       # (Tr,Cv-1)
+        tails = full[:, widx]                                  # (B,Tr,Cv-1,E)
+        conv_ring = cache["conv_ring"].at[bidx[:, None], slots].set(
+            tails.astype(cache["conv_ring"].dtype))
+        new_cache = {"h_ring": h_ring, "conv_ring": conv_ring}
+    elif cache is not None:
         new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": hT}
     return out, new_cache

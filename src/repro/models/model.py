@@ -80,30 +80,42 @@ def _slot_window(cfg: ModelConfig, mixer: str) -> int:
     return cfg.sliding_window if mixer == "local" else 0
 
 
-def _init_slot_cache(cfg: ModelConfig, slot, batch: int, max_len: int
-                     ) -> Params:
+def _init_slot_cache(cfg: ModelConfig, slot, batch: int, max_len: int,
+                     ssm_ring: int = 0) -> Params:
     mixer, _ = slot
     if mixer in ("attn", "local"):
-        return L.init_attn_cache(cfg, batch, max_len, _slot_window(cfg, mixer))
-    return L.init_mamba_cache(cfg, batch)
+        # the speculation ring depth doubles as sliding-window slack: both
+        # bound how far ahead of a row's logical length writes may land
+        return L.init_attn_cache(cfg, batch, max_len,
+                                 _slot_window(cfg, mixer),
+                                 ring_slack=ssm_ring)
+    return L.init_mamba_cache(cfg, batch, ring=ssm_ring)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               ssm_ring: int = 0) -> Params:
     """Decode cache pytree mirroring the params layout.
 
     Every leaf has a leading "stack" axis (n_periods for the scanned blocks,
     1 for remainder layers) so batch is uniformly axis 1 — branch fork/select
     in the runner rely on this.
+
+    ssm_ring > 0 swaps every mamba slot's carried state for a
+    position-indexed checkpoint ring of that depth (layers.init_mamba_cache)
+    — required by the batched serving path, whose per-row rollback is
+    positional (DESIGN.md §7.6).  0 keeps the sequential checkpoint+replay
+    rollback model (runtime/runner.py).
     """
     P, nper, nrem = cfg.period, cfg.n_periods, cfg.n_rem
     blocks = []
     for s in range(P):
-        one = _init_slot_cache(cfg, cfg.pattern[s], batch, max_len)
+        one = _init_slot_cache(cfg, cfg.pattern[s], batch, max_len, ssm_ring)
         blocks.append(jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (nper,) + a.shape).copy()
             if nper > 1 else a[None], one))
     rem = [jax.tree.map(lambda a: a[None],
-                        _init_slot_cache(cfg, cfg.pattern[r], batch, max_len))
+                        _init_slot_cache(cfg, cfg.pattern[r], batch, max_len,
+                                         ssm_ring))
            for r in range(nrem)]
     return {"blocks": blocks, "rem": rem}
 
@@ -114,7 +126,8 @@ def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int
     stores KV scattered across ``num_pages`` fixed-size pages (+ one trash
     page) addressed per call through a kv_pool page table.  Attention-only:
     SSM state is recurrent, not positional, so it cannot be paged this way
-    (the batched serving path already excludes it).
+    — hybrid/SSM configs serve batched on the dense backend, whose mamba
+    slots carry the checkpoint ring of ``init_cache(..., ssm_ring=...)``.
 
     Leaves keep the same leading stack axis as ``init_cache`` so the scan
     over periods carries them identically — but there is no batch axis:
@@ -158,7 +171,8 @@ def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
             window=_slot_window(cfg, mixer), kv_chunk=kv_chunk,
             cache_mode=cache_mode, paged=paged)
     else:
-        mx, new_cache = L.mamba(p["mixer"], x, cfg, cache=cache)
+        mx, new_cache = L.mamba(p["mixer"], x, cfg, cache=cache,
+                                positions=positions)
     x = x + mx
     if ffn_kind == "dense":
         x = x + L.ffn(p["ffn"], x, cfg)

@@ -208,6 +208,19 @@ class ModelRunner:
         self.batch = 1
         self._prefork = None
 
+    def sync_lineage(self, toks: Sequence[int]) -> None:
+        """Back-fill the replay lineage with branch-ingested tokens.
+
+        ``forward_batched`` advances ``pos`` without extending ``tokens``
+        (rows diverge — there is no single lineage until a branch wins);
+        after ``select`` the engine must append the winner's ingested
+        tokens here, or SSM rollback replay would read a stale lineage
+        (attention never replays, which is how the gap stayed invisible).
+        """
+        assert self.batch == 1 and self._prefork is None
+        self.tokens.extend(int(t) for t in toks)
+        assert len(self.tokens) == self.pos, (len(self.tokens), self.pos)
+
     def unfork(self) -> None:
         """Abandon all branches: restore the pre-fork cache."""
         assert self._prefork is not None

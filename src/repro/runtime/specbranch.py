@@ -223,6 +223,7 @@ class SpecBranchEngine(Engine):
             ctx.stats.run_extend(len(chunk) + 1)
             target.pending = [tok_b]
             draft.select(i)
+            draft.sync_lineage([int(cands[i])] + [int(t) for t in conts[i]])
 
             # posterior H-RAD (Sec. 5.2): features from THIS verification
             feats = self._feats_last(target)

@@ -19,12 +19,13 @@ from repro.serving.batch_scheduler import (ContinuousBatchScheduler,
                                            ServeRequest)
 from repro.serving.batched_engine import (BatchedDecoder, BatchedSpSEngine,
                                           BatchedSpecBranchEngine)
-from repro.serving.kv_pool import PagedKVPool, PagedStore, PoolExhausted
+from repro.serving.kv_pool import (PagedKVPool, PagedStore, PoolExhausted,
+                                   PoolGroup)
 from repro.serving.metrics import ServingMetrics, percentile
 
 __all__ = [
     "ContinuousBatchScheduler", "ServeRequest",
     "BatchedDecoder", "BatchedSpSEngine", "BatchedSpecBranchEngine",
-    "PagedKVPool", "PagedStore", "PoolExhausted",
+    "PagedKVPool", "PagedStore", "PoolExhausted", "PoolGroup",
     "ServingMetrics", "percentile",
 ]

@@ -28,15 +28,24 @@ A SpS round is serial like its sequential counterpart
 (``draft_steps * t + c * t``); a SpecBranch round with branch-stage
 requests overlaps drafting with verification
 (``max(draft_steps * t, c * t)``).  The batching win is amortization:
-one target-call price per round covers every request in the batch.  SSM
-models carry recurrent state that padding would corrupt, so the batched
-path is attention-only; ``--mode sequential`` serves the rest.
+one target-call price per round covers every request in the batch.
+
+SSM/hybrid models batch too (DESIGN.md §7.6): every mamba slot carries a
+position-indexed checkpoint ring (``init_cache(..., ssm_ring=...)``) that
+snapshots the post-step recurrent carry per drafted position, so per-row
+rollback is the same positional reset as attention — shrink the logical
+length and the next forward resumes from the accept-point checkpoint,
+O(1), no replay.  Pad writes land on future checkpoint slots and are
+overwritten before any load, the recurrent twin of causally-masked pad KV.
 
 Storage backends: ``attn_backend="dense"`` keeps the N-row reference
-caches; ``"paged"`` stores KV physically scattered across the pool's pages
-and attends in place through the page tables (Pallas paged-attention
-kernel, DESIGN.md §7.5) — same token streams, no gather, zero-copy branch
-forks and rollback.
+caches (and is the backend for SSM/hybrid configs — recurrent state is not
+positional KV and cannot be paged); ``"paged"`` stores KV physically
+scattered across per-decoder page pools (split id spaces, so each buffer
+is sized to its own pool) and attends in place through the page tables
+(Pallas paged-attention kernel, DESIGN.md §7.5) — same token streams, no
+gather, zero-copy branch forks and rollback, and preemption swap packed
+straight from the pages.
 """
 from __future__ import annotations
 
@@ -54,7 +63,8 @@ from repro.models.config import ModelConfig
 from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel
 from repro.runtime.engines import EngineConfig, GenResult, GenStats
-from repro.serving.kv_pool import PagedKVPool, PagedStore, PoolExhausted
+from repro.serving.kv_pool import (PagedKVPool, PagedStore, PoolExhausted,
+                                   PoolGroup)
 
 
 def _has_ssm(cfg: ModelConfig) -> bool:
@@ -84,16 +94,37 @@ class BatchedDecoder:
         key) and attends in place via the Pallas paged-attention kernel.
         A branch fork copies NOTHING (the pool's COW fork shares pages); a
         COW split is mirrored physically through ``copy_page`` (the pool's
-        cow_listeners); rollback frees pages with zero data movement.
+        cow_listeners); rollback frees pages with zero data movement.  The
+        pool is THIS decoder's own (split id space): the physical buffers
+        are sized to it, not to the union of every decoder's pages.
+
+    SSM/hybrid configs (``ssm_ring > 0``, dense backend only): mamba slots
+    carry the position-indexed checkpoint ring of DESIGN.md §7.6, which
+    makes per-row rollback positional for recurrent state too — the row's
+    next forward at its (shrunk) logical position resumes from that
+    position's snapshot.  ``snapshot``/``restore`` expose the ring
+    explicitly for the property tests; the serving engines never need them
+    because every forward restores implicitly through its start position.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_rows: int,
-                 max_len: int, paged: Optional[PagedKVPool] = None):
-        assert not _has_ssm(cfg), \
-            "batched decoding is attention-only (SSM state cannot be padded)"
+                 max_len: int, paged: Optional[PagedKVPool] = None,
+                 ssm_ring: int = 0):
+        if paged is not None and _has_ssm(cfg):
+            raise ValueError(
+                "the paged backend stores positional KV only; serve "
+                "SSM/hybrid configs with attn_backend='dense' (checkpoint-"
+                "ring SSM cache)")
+        if _has_ssm(cfg) and ssm_ring <= 0:
+            raise ValueError(
+                "batched decoding of an SSM-bearing config needs a "
+                "checkpoint ring (ssm_ring > 0) for per-row rollback")
         self.params, self.cfg = params, cfg
         self.n_rows, self.max_len = n_rows, max_len
         self.paged = paged
+        # checkpoint-ring depth for mamba slots AND window slack for local
+        # attention rings — both bound speculative overshoot per row
+        self.ssm_ring = max(0, ssm_ring)
         self.free_rows: List[int] = list(range(n_rows - 1, -1, -1))
         # per-row write head: idle rows in a batched call park HERE, so
         # their pad writes land exactly where the row's next real write
@@ -134,13 +165,15 @@ class BatchedDecoder:
                 return jax.tree.map(cp, cache)
 
             self._fwd, self._copy_page = _fwd_paged, _copy_page
-            # pack_row flattens positions, which pages scatter — the paged
-            # backend recomputes the prefix at re-admission instead.
-            self.swappable = False
-            self.swap_dim = 0
+            # swap space: pack/unpack straight from the pages (ROADMAP PR 2
+            # follow-up) — a row's token-rows are gathered page-by-page
+            # through its table, so preemption never densifies the cache.
+            self._init_swap_layout(self.cache)
+            self.swappable = True
             return
 
-        self.cache = M.init_cache(cfg, n_rows, max_len)
+        self.cache = M.init_cache(cfg, n_rows, max_len,
+                                  ssm_ring=self.ssm_ring)
 
         @jax.jit
         def _fwd(params, cache, tokens, pos):
@@ -170,12 +203,21 @@ class BatchedDecoder:
 
         # swap-space layout: flatten one row's cache to (L, swap_dim) token
         # rows.  Only exact when every leaf keeps the full sequence axis
-        # (global attention); sliding-window rings would fold positions.
-        shapes = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_len))
-        self._leaf_shapes = [tuple(s.shape) for s in jax.tree.leaves(shapes)]
-        self._leaf_dtypes = [s.dtype for s in jax.tree.leaves(shapes)]
-        self._treedef = jax.tree.structure(shapes)
-        self.swappable = all(s[2] == max_len for s in self._leaf_shapes)
+        # (global attention); sliding-window rings would fold positions and
+        # SSM checkpoint rings are position-indexed state, not token rows.
+        self._init_swap_layout(jax.eval_shape(
+            lambda: M.init_cache(cfg, 1, max_len, ssm_ring=self.ssm_ring)))
+        self.swappable = (not _has_ssm(cfg)
+                         and all(s[2] == max_len for s in self._leaf_shapes))
+
+    def _init_swap_layout(self, tree) -> None:
+        """Derive the (L, swap_dim) token-row layout shared by pack_row /
+        unpack_row from a cache pytree: per token each leaf contributes
+        its stack * trailing dims (axes 1..2 are batch/page + seq/slot)."""
+        leaves = jax.tree.leaves(tree)
+        self._leaf_shapes = [tuple(a.shape) for a in leaves]
+        self._leaf_dtypes = [a.dtype for a in leaves]
+        self._treedef = jax.tree.structure(tree)
         self.swap_dim = sum(s[0] * int(np.prod(s[3:], dtype=np.int64))
                             for s in self._leaf_shapes)
 
@@ -250,7 +292,8 @@ class BatchedDecoder:
                 jnp.zeros((1,), jnp.int32), jnp.asarray(tab),
                 jnp.asarray(lens))
         else:
-            tmp = M.init_cache(self.cfg, 1, self.max_len)
+            tmp = M.init_cache(self.cfg, 1, self.max_len,
+                               ssm_ring=self.ssm_ring)
             logits, tmp, feats = self._fwd(
                 self.params, tmp, jnp.asarray([list(tokens)], jnp.int32),
                 jnp.zeros((1,), jnp.int32))
@@ -272,8 +315,23 @@ class BatchedDecoder:
     def pack_row(self, row: int, length: int) -> np.ndarray:
         """Flatten the first ``length`` KV slots of a row to (L, swap_dim)
         float32 token-rows (pos leaves are exact in f32 for max_len < 2^24).
-        """
+
+        Paged backend: the rows are gathered page-by-page through the
+        row's bound page table — no densified intermediate cache — so a
+        preemption moves exactly the row's live pages (incl. a partial
+        tail page, trimmed to ``length``)."""
         assert self.swappable
+        if self.paged is not None:
+            table = np.asarray(self.paged.table(self.row_key[row]), np.int64)
+            parts = []
+            for lf in jax.tree.leaves(self.cache):
+                pg = np.asarray(jax.device_get(lf[:, jnp.asarray(table)]))
+                # (stack, n, ps, KV, hd) -> token-major (n*ps, stack*KV*hd)
+                tok = np.moveaxis(
+                    pg.reshape(pg.shape[0], -1, *pg.shape[3:]), 1, 0)
+                parts.append(tok[:length].reshape(length, -1)
+                             .astype(np.float32))
+            return np.concatenate(parts, axis=1)
         sub = jax.device_get(jax.tree.map(lambda a: a[:, row], self.cache))
         parts = [np.moveaxis(np.asarray(lf)[:, :length], 1, 0)
                  .reshape(length, -1).astype(np.float32)
@@ -282,9 +340,36 @@ class BatchedDecoder:
 
     def unpack_row(self, row: int, rows: np.ndarray) -> None:
         """Restore a row from packed token-rows (inverse of pack_row);
-        slots beyond len(rows) are reset to empty (pos = -1)."""
+        slots beyond len(rows) are reset to empty (pos = -1).
+
+        Paged backend: the token-rows are scattered straight into the pages
+        of the row's (freshly re-extended) table; the stale tail of a
+        partial last page stays masked by the row's pool length."""
         assert self.swappable
         L = rows.shape[0]
+        if self.paged is not None:
+            key = self.row_key[row]
+            table = self.paged.table(key)
+            assert self.paged.length(key) == L, (self.paged.length(key), L)
+            ps = self.paged.page_size
+            n = len(table)
+            leaves, off = [], 0
+            for lf, shape in zip(jax.tree.leaves(self.cache),
+                                 self._leaf_shapes):
+                stack, tail = shape[0], shape[3:]
+                width = stack * int(np.prod(tail, dtype=np.int64))
+                seg = rows[:, off:off + width].reshape((L, stack) + tail)
+                off += width
+                pad = n * ps - L
+                if pad:
+                    seg = np.concatenate(
+                        [seg, np.zeros((pad, stack) + tail, seg.dtype)])
+                pages = np.moveaxis(seg.reshape((n, ps, stack) + tail), 2, 0)
+                leaves.append(lf.at[:, jnp.asarray(table)].set(
+                    jnp.asarray(pages, lf.dtype)))
+            self.cache = jax.tree.unflatten(self._treedef, leaves)
+            self.row_pos[row] = L
+            return
         leaves, off = [], 0
         for shape, dtype in zip(self._leaf_shapes, self._leaf_dtypes):
             stack, tail = shape[0], shape[3:]
@@ -299,6 +384,47 @@ class BatchedDecoder:
         sub = jax.tree.unflatten(self._treedef, leaves)
         self.cache = self._set_row(self.cache, sub, jnp.int32(row))
         self.row_pos[row] = L
+
+    # ---------------------------------------------------- SSM checkpoints
+    def _ssm_slots(self, cache):
+        """The mamba slot caches of ``cache``, in stable order."""
+        return [c for c in cache["blocks"] + cache["rem"]
+                if c is not None and "h_ring" in c]
+
+    def snapshot(self, row: int, step: int) -> List[Dict[str, np.ndarray]]:
+        """Host copy of one row's recurrent state at stream length ``step``
+        (one {h, conv} dict per mamba slot).  Symmetric to the paged
+        table views: the serving engines never call this — every forward
+        restores implicitly from its start position — but it pins the ring
+        contents for the rollback property tests."""
+        assert self.ssm_ring > 0, "snapshot needs a checkpoint-ring cache"
+        s = step % self.ssm_ring
+        return [{"h": np.asarray(jax.device_get(c["h_ring"][:, row, s])),
+                 "conv": np.asarray(jax.device_get(
+                     c["conv_ring"][:, row, s]))}
+                for c in self._ssm_slots(self.cache)]
+
+    def restore(self, row: int, step: int,
+                snap: List[Dict[str, np.ndarray]]) -> None:
+        """Write a ``snapshot`` back into the ring at ``step`` — after
+        which a forward starting at position ``step`` resumes from it."""
+        assert self.ssm_ring > 0
+        s = step % self.ssm_ring
+        it = iter(snap)
+
+        def put(c):
+            if c is not None and isinstance(c, dict) and "h_ring" in c:
+                sn = next(it)
+                return dict(
+                    c,
+                    h_ring=c["h_ring"].at[:, row, s].set(
+                        jnp.asarray(sn["h"])),
+                    conv_ring=c["conv_ring"].at[:, row, s].set(
+                        jnp.asarray(sn["conv"], c["conv_ring"].dtype)))
+            return c
+
+        self.cache = {"blocks": [put(c) for c in self.cache["blocks"]],
+                      "rem": [put(c) for c in self.cache["rem"]]}
 
 
 # ---------------------------------------------------------------------------
@@ -366,22 +492,43 @@ class BatchedEngineBase:
         self.max_batch = max_batch
         self.attn_backend = attn_backend
         self.debug_check = debug_check
+        # split page-id spaces (DESIGN.md §7.6): target streams ("t", rid)
+        # and draft streams ("d"/"b", ...) allocate from separate pools, so
+        # each physically paged decoder sizes its buffers to ITS pages only
+        # (the PR 2 shared id space made every buffer pool-wide, ~2x).
         if pool_pages is None:
-            # room for every stream at full length plus branch slack
-            per_seq = 2 + (self.draft_rows_per_seq - 1)
-            pool_pages = -(-max_batch * per_seq * ecfg.max_len // page_size)
-        self.pool = PagedKVPool(pool_pages, page_size)
-        paged = self.pool if attn_backend == "paged" else None
+            t_pages = -(-max_batch * ecfg.max_len // page_size)
+            d_pages = -(-max_batch * self.draft_rows_per_seq
+                        * ecfg.max_len // page_size)
+        else:
+            # explicit total (tests/CLI): split by worst-case stream count
+            per_seq = 1 + self.draft_rows_per_seq
+            t_pages = max(2, round(pool_pages / per_seq))
+            d_pages = max(2, pool_pages - t_pages)
+        self.pools: Dict[str, PagedKVPool] = {
+            "t": PagedKVPool(t_pages, page_size),
+            "d": PagedKVPool(d_pages, page_size),
+        }
+        self.pool = PoolGroup(self.pools)      # aggregate metrics view
+        # ring deep enough for one worst-case round of forward progress
+        # (pending + chunk + branch continuation + batch-pad margin) PLUS
+        # the rollback span back across it, with slack; ~KBs per row.
+        ssm_ring = 4 * (ecfg.gamma + ecfg.gamma_branch) + 16
+        paged = attn_backend == "paged"
         self.tgt_dec = BatchedDecoder(target_params, target_cfg,
                                       n_rows=max_batch, max_len=ecfg.max_len,
-                                      paged=paged)
+                                      paged=self.pools["t"] if paged else None,
+                                      ssm_ring=ssm_ring)
         self.dft_dec = BatchedDecoder(draft_params, draft_cfg,
                                       n_rows=max_batch
                                       * self.draft_rows_per_seq,
-                                      max_len=ecfg.max_len, paged=paged)
-        if paged is not None:
-            # accounting COW (pool) -> physical COW (both paged buffers)
-            self.pool.cow_listeners.append(self._mirror_cow)
+                                      max_len=ecfg.max_len,
+                                      paged=self.pools["d"] if paged else None,
+                                      ssm_ring=ssm_ring)
+        if paged:
+            # accounting COW (pool) -> physical COW, each in its own buffer
+            self.pools["t"].cow_listeners.append(self.tgt_dec.copy_page)
+            self.pools["d"].cow_listeners.append(self.dft_dec.copy_page)
         self.swap: Optional[PagedStore] = None
         if swap_pages > 0 and self.tgt_dec.swappable:
             self.swap = PagedStore(swap_pages, page_size,
@@ -394,13 +541,11 @@ class BatchedEngineBase:
         self._admit_counter = 0
         self._seed = ecfg.seed
 
-    def _mirror_cow(self, old: int, new: int) -> None:
-        """A pool COW split copies page data in every paged buffer.  Page
-        ids are stream-agnostic, so the split's owner is unknown here; the
-        off-owner decoder copies a page of inert data (never referenced by
-        any of its tables) — harmless, and it keeps the hook stream-free."""
-        self.tgt_dec.copy_page(old, new)
-        self.dft_dec.copy_page(old, new)
+    def _pool_of(self, key: Any) -> PagedKVPool:
+        """Route a stream key to its id space: target streams ("t", rid)
+        live in the target pool; draft streams and their branch forks
+        ("d", rid) / ("b", rid, i) in the draft pool."""
+        return self.pools["t" if key[0] == "t" else "d"]
 
     # --------------------------------------------------------- prob helpers
     def _np_probs(self, logits_row: np.ndarray, temp: float) -> np.ndarray:
@@ -472,7 +617,7 @@ class BatchedEngineBase:
                 ) -> Tuple[np.ndarray, jax.Array]:
         """Batched ingest of per-stream token lists + pool accounting."""
         for st, pool_key, toks in triples:
-            self.pool.extend(pool_key, len(toks))
+            self._pool_of(pool_key).extend(pool_key, len(toks))
         parts = [(st.row, toks, st.ing) for st, _, toks in triples]
         out = self._batched(dec, parts)
         for st, _, toks in triples:
@@ -484,7 +629,9 @@ class BatchedEngineBase:
         return ("t", rid), ("d", rid)
 
     def admit_cost_pages(self, prompt_len: int) -> int:
-        return 2 * self.pool.pages_for(prompt_len - 1)
+        """Pages an admission takes from EACH pool (one prompt-length
+        stream per id space)."""
+        return self.pools["t"].pages_for(prompt_len - 1)
 
     def _max_len_headroom(self) -> int:
         """Worst-case tokens a live row can hold beyond prompt + max_new:
@@ -501,18 +648,21 @@ class BatchedEngineBase:
         if (prompt_len + max_new + self._max_len_headroom()
                 > self.ecfg.max_len):
             return False
-        slack = self._round_slack_pages()
-        return (self.admit_cost_pages(prompt_len) + slack
-                <= self.pool.free_pages)
+        need = self.admit_cost_pages(prompt_len)
+        return all(need + self._round_slack_pages(which) <= pool.free_pages
+                   for which, pool in self.pools.items())
 
-    def _round_slack_pages(self) -> int:
-        """Pages one request may need for one worst-case round — kept free
-        at admission so a fresh admit cannot immediately force preemption."""
+    def _round_slack_pages(self, which: str) -> int:
+        """Pages one request may need from pool ``which`` for one
+        worst-case round — kept free at admission so a fresh admit cannot
+        immediately force preemption."""
         g, gb = self.ecfg.gamma, self.ecfg.gamma_branch
-        worst = (2 + g) + (g + 1)
+        if which == "t":
+            return self.pools["t"].pages_for(2 + g)
+        worst = g + 1
         if self.draft_rows_per_seq > 1:
             worst += (self.draft_rows_per_seq - 1) * (1 + gb)
-        return self.pool.pages_for(worst) + self.draft_rows_per_seq
+        return self.pools["d"].pages_for(worst) + self.draft_rows_per_seq
 
     def resume_out_len(self, rid: int) -> int:
         """Tokens already generated by a parked (preempted) request — they
@@ -535,14 +685,14 @@ class BatchedEngineBase:
         assert len(toks) >= 2, "need a prompt of >= 2 tokens"
         L = len(toks) - 1
         tk, dk = self._pool_keys(rid)
-        self.pool.open(tk)
-        self.pool.open(dk)
+        self.pools["t"].open(tk)
+        self.pools["d"].open(dk)
         try:
-            self.pool.extend(tk, L)
-            self.pool.extend(dk, L)
+            self.pools["t"].extend(tk, L)
+            self.pools["d"].extend(dk, L)
         except PoolExhausted:
-            self.pool.close(tk, "preempt")
-            self.pool.close(dk, "preempt")
+            self.pools["t"].close(tk, "preempt")
+            self.pools["d"].close(dk, "preempt")
             if meta is not None:
                 self._swapped[rid] = meta
             raise
@@ -589,8 +739,8 @@ class BatchedEngineBase:
             except PoolExhausted:
                 pass
         tk, dk = self._pool_keys(victim.rid)
-        self.pool.close(tk, "preempt")
-        self.pool.close(dk, "preempt")
+        self.pools["t"].close(tk, "preempt")
+        self.pools["d"].close(dk, "preempt")
         self.tgt_dec.unbind_row(victim.tgt.row)
         self.dft_dec.unbind_row(victim.dft.row)
         self.tgt_dec.free_rows.append(victim.tgt.row)
@@ -631,11 +781,19 @@ class BatchedEngineBase:
         (the engines' uniform lineage reset), reclaiming rejected pages."""
         keep = seq.committed - 1
         tk, dk = self._pool_keys(seq.rid)
-        for st, key in ((seq.tgt, tk), (seq.dft, dk)):
+        for st, key, dec in ((seq.tgt, tk, self.tgt_dec),
+                             (seq.dft, dk, self.dft_dec)):
             if st.ing > keep:
-                self.pool.truncate(key, keep, "rollback")
+                self._pool_of(key).truncate(key, keep, "rollback")
             st.ing = min(st.ing, keep)
-            # a positional reset never needs replay for attention caches
+            # a positional reset never needs replay: attention masks stale
+            # slots causally, SSM rings resume from the keep-checkpoint.
+            # The write head must follow the reset: idle-row pad writes park
+            # at row_pos, and a stale head would park junk at a slot a
+            # local-attention ring still needs (evicting a key inside other
+            # queries' windows) instead of the slot the next real write
+            # overwrites anyway.
+            dec.row_pos[st.row] = st.ing
             st.pending = [seq.out[-1]]
 
     # -------------------------------------------------------------- retire
@@ -644,8 +802,8 @@ class BatchedEngineBase:
         for seq in [s for s in self.active if s.done]:
             self.active.remove(seq)
             tk, dk = self._pool_keys(seq.rid)
-            self.pool.close(tk, "retire")
-            self.pool.close(dk, "retire")
+            self.pools["t"].close(tk, "retire")
+            self.pools["d"].close(dk, "retire")
             self.tgt_dec.unbind_row(seq.tgt.row)
             self.dft_dec.unbind_row(seq.dft.row)
             self.tgt_dec.free_rows.append(seq.tgt.row)
@@ -687,9 +845,12 @@ class BatchedSpSEngine(BatchedEngineBase):
         g = self.ecfg.gamma
 
         def fits(ss):
-            return self.pool.has_room(
-                [(("d", s.rid), len(s.dft.pending) + g - 1) for s in ss]
-                + [(("t", s.rid), len(s.tgt.pending) + g) for s in ss])
+            return (self.pools["d"].has_room(
+                        [(("d", s.rid), len(s.dft.pending) + g - 1)
+                         for s in ss])
+                    and self.pools["t"].has_room(
+                        [(("t", s.rid), len(s.tgt.pending) + g)
+                         for s in ss]))
 
         preempted = self._make_room(seqs, fits)
         if not seqs:
@@ -821,7 +982,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         for i, st in enumerate(bset.streams):
             if i == keep:
                 continue
-            self.pool.close(self._bkey(seq.rid, i), reason)
+            self.pools["d"].close(self._bkey(seq.rid, i), reason)
             self.dft_dec.unbind_row(st.row)
             self.dft_dec.free_rows.append(st.row)
 
@@ -835,19 +996,21 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         # has_room can't price not-yet-forked branch streams; count their
         # worst case (suffix pages + one COW tail copy each) by hand.
         def fits(ss):
-            ups, extra = [], 0
+            d_ups, t_ups, d_extra = [], [], 0
+            pd = self.pools["d"]
             for s in ss:
                 if s.mode == "draft":
-                    ups.append((("d", s.rid), len(s.dft.pending) + g))
+                    d_ups.append((("d", s.rid), len(s.dft.pending) + g))
                 else:
                     k = self._branch_k(s.q_b)
-                    dlen = self.pool.length(("d", s.rid))
-                    per = (self.pool.pages_for(dlen + 1 + gb)
-                           - self.pool.pages_for(dlen) + 1)
-                    extra += k * per
-                    ups.append((("t", s.rid),
-                                len(s.tgt.pending) + len(s.chunk)))
-            return self.pool.would_need(ups) + extra <= self.pool.free_pages
+                    dlen = pd.length(("d", s.rid))
+                    per = (pd.pages_for(dlen + 1 + gb)
+                           - pd.pages_for(dlen) + 1)
+                    d_extra += k * per
+                    t_ups.append((("t", s.rid),
+                                  len(s.tgt.pending) + len(s.chunk)))
+            return (pd.would_need(d_ups) + d_extra <= pd.free_pages
+                    and self.pools["t"].has_room(t_ups))
 
         preempted = self._make_room(seqs, fits)
 
@@ -870,7 +1033,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             for i in range(k):
                 row = self.dft_dec.free_rows.pop()
                 self.dft_dec.copy_row(s.dft.row, row)
-                self.pool.fork(("d", s.rid), self._bkey(s.rid, i))
+                self.pools["d"].fork(("d", s.rid), self._bkey(s.rid, i))
                 self.dft_dec.bind_row(row, self._bkey(s.rid, i))
                 bset.streams.append(_Stream(row=row, ing=s.dft.ing))
                 bset.conts.append([])
@@ -1031,7 +1194,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         self.dft_dec.copy_row(win.row, s.dft.row)
         s.dft.ing = win.ing
         s.dft.pending = []
-        self.pool.adopt(("d", s.rid), self._bkey(s.rid, i))
+        self.pools["d"].adopt(("d", s.rid), self._bkey(s.rid, i))
         self._free_branches(s, bset, "branch", keep=i)
         self.dft_dec.unbind_row(win.row)
         self.dft_dec.free_rows.append(win.row)
@@ -1065,6 +1228,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
     def _prune_draft(self, s: _Seq, keep: int) -> None:
         """H-RAD pre-verify pruning: positional reset of the draft stream."""
         if s.dft.ing > keep:
-            self.pool.truncate(("d", s.rid), keep, "prune")
+            self.pools["d"].truncate(("d", s.rid), keep, "prune")
             s.dft.ing = keep
+        self.dft_dec.row_pos[s.dft.row] = s.dft.ing   # see _rollback_streams
         s.dft.pending = []

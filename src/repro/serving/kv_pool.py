@@ -254,6 +254,58 @@ class PagedKVPool:
         assert len(free) + int((self._ref > 0).sum()) == self.num_pages
 
 
+class PoolGroup:
+    """Read-only aggregate over per-decoder pools (DESIGN.md §7.6).
+
+    PR 2's single id space made every physically paged decoder size its
+    buffer to the WHOLE pool even though target pages never appear in a
+    draft table (and vice versa); splitting the id space per decoder halves
+    each buffer.  The split pools stay the allocation/accounting authority;
+    this view only re-aggregates them for metrics, reports and invariant
+    checks, so external consumers keep seeing one logical pool."""
+
+    def __init__(self, pools: Dict[str, "PagedKVPool"]):
+        assert pools
+        sizes = {p.page_size for p in pools.values()}
+        assert len(sizes) == 1, "split pools must share a page size"
+        self.pools = dict(pools)
+
+    @property
+    def page_size(self) -> int:
+        return next(iter(self.pools.values())).page_size
+
+    @property
+    def num_pages(self) -> int:
+        return sum(p.num_pages for p in self.pools.values())
+
+    @property
+    def free_pages(self) -> int:
+        return sum(p.free_pages for p in self.pools.values())
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(p.pages_in_use for p in self.pools.values())
+
+    @property
+    def occupancy(self) -> float:
+        return self.pages_in_use / self.num_pages
+
+    @property
+    def stats(self) -> PoolStats:
+        merged = PoolStats()
+        for pool in self.pools.values():
+            for f in dataclasses.fields(PoolStats):
+                # summing per-pool peaks upper-bounds the joint peak; every
+                # other field is a plain counter
+                setattr(merged, f.name, getattr(merged, f.name)
+                        + getattr(pool.stats, f.name))
+        return merged
+
+    def check(self) -> None:
+        for pool in self.pools.values():
+            pool.check()
+
+
 class PagedStore:
     """Physically paged token-row storage: a (num_pages, page_size, dim)
     buffer addressed through PagedKVPool page tables.

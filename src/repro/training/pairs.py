@@ -84,6 +84,49 @@ def get_pair(kind: str = "misaligned", steps: int = 400
     raise ValueError(kind)
 
 
+HYBRID_KINDS = ("falcon-shaped", "jamba-shaped")
+
+
+def hybrid_pair(kind: str, seed: int = 0
+                ) -> Tuple[dict, ModelConfig, dict, ModelConfig]:
+    """Tiny random-init SSM-bearing draft/target pairs for the hybrid
+    serving path (no training needed: greedy losslessness and rollback
+    correctness are properties of the engine, not of model quality).
+
+      * "falcon-shaped" — attention-free Mamba-1 stack (falcon-mamba-7b's
+        family, arXiv:2410.05355);
+      * "jamba-shaped"  — hybrid Mamba + attention with MoE FFNs
+        (jamba-1.5's family).  Drop-free MoE capacity so outputs are
+        batch-composition independent (reduced()'s convention).
+    """
+    common = dict(vocab_size=VOCAB, dtype="float32")
+    if kind == "falcon-shaped":
+        tcfg = ModelConfig(
+            name="hy-falcon-t", family="ssm", num_layers=2, d_model=64,
+            num_heads=2, num_kv_heads=1, d_ff=0,
+            pattern=(("mamba", "none"),), **common)
+        dcfg = ModelConfig(
+            name="hy-falcon-d", family="ssm", num_layers=1, d_model=32,
+            num_heads=2, num_kv_heads=1, d_ff=0,
+            pattern=(("mamba", "none"),), **common)
+    elif kind == "jamba-shaped":
+        tcfg = ModelConfig(
+            name="hy-jamba-t", family="hybrid", num_layers=2, d_model=64,
+            num_heads=2, num_kv_heads=1, d_ff=256,
+            pattern=(("mamba", "dense"), ("attn", "moe")),
+            num_experts=4, num_experts_per_tok=2, moe_d_ff=64,
+            capacity_factor=2.0, **common)
+        dcfg = ModelConfig(
+            name="hy-jamba-d", family="hybrid", num_layers=1, d_model=32,
+            num_heads=2, num_kv_heads=1, d_ff=128,
+            pattern=(("mamba", "dense"),), **common)
+    else:
+        raise ValueError(kind)
+    tp = M.init_params(jax.random.PRNGKey(seed), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(seed + 1), dcfg)
+    return dp, dcfg, tp, tcfg
+
+
 def measure_alpha(draft_params, draft_cfg, target_params, target_cfg,
                   n_prompts: int = 4, plen: int = 16, n_new: int = 48,
                   gamma: int = 4, seed: int = 0) -> float:

@@ -1,0 +1,150 @@
+"""Batched hybrid (SSM-bearing) serving equivalence (DESIGN.md §7.6).
+
+The continuous-batching engines must serve falcon-mamba- and jamba-shaped
+configs losslessly through the checkpoint-ring SSM cache: token-for-token
+against the autoregressive reference AND the sequential engines (greedy),
+batch-composition independent under temp-1 sampling (same per-request
+seeds), and exact through mid-stream preemption."""
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime.engines import EngineConfig, SpSEngine
+from repro.runtime.runner import greedy_reference
+from repro.runtime.specbranch import SpecBranchEngine
+from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
+                           ContinuousBatchScheduler, ServeRequest)
+from repro.training.pairs import HYBRID_KINDS, hybrid_pair
+
+N_NEW = 8
+N_REQ = 3
+
+
+def _ecfg(**kw):
+    kw.setdefault("gamma", 3)
+    kw.setdefault("c", 4.0)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("epsilon", 0.4)
+    kw.setdefault("signal_temperature", 0.5)
+    kw.setdefault("k_max", 2)
+    kw.setdefault("max_len", 128)
+    return EngineConfig(**kw)
+
+
+@pytest.fixture(scope="module", params=HYBRID_KINDS)
+def pair(request):
+    dp, dcfg, tp, tcfg = hybrid_pair(request.param)
+    rng = np.random.default_rng(5)
+    prompts = [list(map(int, rng.integers(0, tcfg.vocab_size, size=6)))
+               for _ in range(N_REQ)]
+    refs = [greedy_reference(tp, tcfg, p, N_NEW, max_len=128)
+            for p in prompts]
+    return request.param, dp, dcfg, tp, tcfg, prompts, refs
+
+
+def _serve(pair_, cls, rids=range(N_REQ), on_token=None, **ekw):
+    """Serve the requests ``rids`` on a fixed-shape (max_batch == N_REQ)
+    engine: solo and batched runs then differ only in occupancy, never in
+    compiled shapes, which is the batch-independence contract."""
+    _, dp, dcfg, tp, tcfg, prompts, _ = pair_
+    eng = cls(dp, dcfg, tp, tcfg, _ecfg(**ekw.pop("ecfg", {})),
+              max_batch=N_REQ, page_size=4, debug_check=True, **ekw)
+    res = ContinuousBatchScheduler(eng).run(
+        [ServeRequest(rid=i, prompt=prompts[i], max_new_tokens=N_NEW,
+                      on_token=on_token)
+         for i in rids])
+    return eng, res
+
+
+@pytest.mark.parametrize("cls", [BatchedSpSEngine, BatchedSpecBranchEngine])
+def test_hybrid_batched_greedy_lossless(pair, cls):
+    """Batched serving of an SSM-bearing config == the AR reference: every
+    rejection rolled the recurrent state back to its accept point."""
+    kind, _, _, _, _, _, refs = pair
+    eng, res = _serve(pair, cls)
+    for i, want in enumerate(refs):
+        assert res[i].tokens == want, (kind, i)
+    assert eng.pool.pages_in_use == 0
+    eng.pool.check()
+
+
+def test_hybrid_batched_equals_sequential_engine(pair):
+    """Token-for-token against the sequential engines (same greedy target,
+    checkpoint+replay rollback) — the two rollback models agree."""
+    kind, dp, dcfg, tp, tcfg, prompts, refs = pair
+    _, res = _serve(pair, BatchedSpSEngine)
+    ecfg = _ecfg()
+    for cls in (SpSEngine, SpecBranchEngine):
+        eng = cls(dp, dcfg, tp, tcfg, ecfg)
+        for i, p in enumerate(prompts):
+            r = eng.generate(p, N_NEW, jax.random.PRNGKey(i))
+            assert r.tokens == res[i].tokens == refs[i], (kind, cls.name, i)
+
+
+def test_hybrid_temp1_solo_equals_batched(pair):
+    """Sampled (temp-1) streams are batch-composition independent: the
+    per-request RNG sees identical logits whether the request rides solo
+    or with batchmates speculating/rolling back around it."""
+    kind = pair[0]
+    _, batch = _serve(pair, BatchedSpecBranchEngine,
+                      ecfg={"temperature": 1.0})
+    for i in range(N_REQ):
+        _, solo = _serve(pair, BatchedSpecBranchEngine, rids=[i],
+                         ecfg={"temperature": 1.0})
+        assert solo[i].tokens == batch[i].tokens, (kind, i)
+
+
+def test_hybrid_midstream_preemption_exact(pair):
+    """A pool too small for the batch preempts mid-stream; hybrid rows
+    cannot swap densely (ring state is not token rows), so the prefix —
+    including the recurrent state — is recomputed at re-admission and the
+    streams stay exact."""
+    kind, dp, dcfg, tp, tcfg, prompts, refs = pair
+    eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, _ecfg(),
+                                  max_batch=N_REQ, page_size=2,
+                                  pool_pages=44, swap_pages=64,
+                                  debug_check=True)
+    assert not eng.tgt_dec.swappable
+    assert eng.swap is None
+    sched = ContinuousBatchScheduler(eng)
+    res = sched.run([ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
+                     for i, p in enumerate(prompts)])
+    assert sched.metrics.preemptions > 0
+    for i, want in enumerate(refs):
+        assert res[i].tokens == want, (kind, i)
+    assert eng.pool.pages_in_use == 0
+
+
+def test_hybrid_streams_tokens_in_order(pair):
+    """Streaming callbacks fire in commit order for hybrid requests too —
+    rollback never un-streams a token."""
+    kind, _, _, _, _, _, refs = pair
+    got = {i: [] for i in range(N_REQ)}
+    _, res = _serve(pair, BatchedSpSEngine,
+                    on_token=lambda rid, tok, t: got[rid].append(tok))
+    for i in range(N_REQ):
+        assert got[i] == res[i].tokens == refs[i], (kind, i)
+
+
+def test_sequential_specbranch_ssm_long_branch_lossless(pair):
+    """Regression: sequential SpecBranch on an SSM target with a LONG
+    branch stage (c=10 -> gamma_branch=9).  Branch forwards advance the
+    draft runner without extending its replay lineage; before
+    ``sync_lineage`` the first post-adoption SSM rollback replayed a
+    stale token list (assert at best, silent corruption at worst)."""
+    kind, dp, dcfg, tp, tcfg, prompts, _ = pair
+    ecfg = _ecfg(gamma=4, c=10.0, max_len=256)
+    for i, p in enumerate(prompts):
+        ref = greedy_reference(tp, tcfg, p, 2 * N_NEW, max_len=256)
+        eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+        r = eng.generate(p, 2 * N_NEW, jax.random.PRNGKey(i))
+        assert r.tokens == ref, (kind, i)
+
+
+def test_hybrid_rejects_paged_backend(pair):
+    """Recurrent state is not positional KV: the paged backend must refuse
+    SSM-bearing configs with an actionable error, not corrupt streams."""
+    _, dp, dcfg, tp, tcfg, _, _ = pair
+    with pytest.raises(ValueError, match="dense"):
+        BatchedSpSEngine(dp, dcfg, tp, tcfg, _ecfg(), max_batch=2,
+                         page_size=4, attn_backend="paged")

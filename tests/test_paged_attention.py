@@ -207,6 +207,72 @@ def test_paged_equals_dense_at_temperature_one(pair):
     assert outs["dense"] == outs["paged"]
 
 
+def test_split_pools_halve_paged_buffers(pair):
+    """Split page-id spaces (DESIGN.md §7.6 follow-up to PR 2): each
+    physically paged decoder sizes its buffers to ITS OWN pool, so the
+    per-decoder physical footprint drops from pool-wide (t+d pages, the
+    old shared id space) to its split share."""
+    eng, _ = _serve(pair, BatchedSpSEngine, "paged")
+    t_pages = eng.pools["t"].num_pages
+    d_pages = eng.pools["d"].num_pages
+    assert eng.pool.num_pages == t_pages + d_pages
+    for dec, own in ((eng.tgt_dec, t_pages), (eng.dft_dec, d_pages)):
+        for leaf in jax.tree_util.tree_leaves(dec.cache):
+            # page axis sized to the decoder's own pool (+1 trash page),
+            # strictly smaller than the old shared-pool sizing
+            assert leaf.shape[1] == own + 1
+            assert leaf.shape[1] < t_pages + d_pages + 1
+    # regression: the shared id space made each buffer (t+d)+1 pages; the
+    # split totals exactly the old SINGLE decoder's footprint across BOTH
+    assert (eng.tgt_dec.cache["blocks"][0]["k_pages"].shape[1]
+            + eng.dft_dec.cache["blocks"][0]["k_pages"].shape[1]
+            == eng.pool.num_pages + 2)
+
+
+def test_paged_swap_roundtrip_partial_tail_page(pair):
+    """pack_row/unpack_row on the paged backend move a row's KV straight
+    through its page table — including a PARTIAL tail page — and restore
+    it into a different physical layout exactly."""
+    from repro.serving.batched_engine import BatchedDecoder
+    from repro.serving.kv_pool import PagedKVPool
+    dp, dcfg, tp, tcfg, prompts = pair
+    pool = PagedKVPool(16, 4)
+    dec = BatchedDecoder(tp, tcfg, n_rows=2, max_len=64, paged=pool)
+    pool.cow_listeners.append(dec.copy_page)
+    prompt = prompts[0] + prompts[1][:1]          # len 7: 4 + partial 3
+    assert len(prompt) % pool.page_size != 0
+    row = dec.free_rows.pop()
+    pool.open("s")
+    pool.extend("s", len(prompt))
+    dec.bind_row(row, "s")
+    dec.prefill_row(row, prompt)
+    packed = dec.pack_row(row, len(prompt))
+    assert packed.shape == (len(prompt), dec.swap_dim)
+
+    # decode one step from the original layout
+    tok = np.zeros((2, 1), np.int32)
+    pos = np.zeros((2,), np.int32)
+    tok[row, 0], pos[row] = 5, len(prompt)
+    pool.extend("s", 1)
+    ref_lg, _ = dec.step(tok.copy(), pos.copy())
+    ref = np.asarray(ref_lg)[row]
+
+    # drop the stream (pages go back fragmented), reopen at a DIFFERENT
+    # physical layout, unpack, decode again: logits must match exactly
+    pool.close("s", "preempt")
+    dec.unbind_row(row)
+    pool.open("pad")                              # shift the free list
+    pool.extend("pad", 5)
+    pool.open("s2")
+    pool.extend("s2", len(prompt))
+    dec.bind_row(row, "s2")
+    dec.unpack_row(row, packed)
+    pool.extend("s2", 1)
+    got_lg, _ = dec.step(tok, pos)
+    np.testing.assert_allclose(np.asarray(got_lg)[row], ref,
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_paged_backend_cow_forks_share_pages(pair):
     """Branch forks on the paged backend must COW-share (fork allocates
     zero pages; diverging branches split tails) and reclaim losers."""
@@ -217,17 +283,20 @@ def test_paged_backend_cow_forks_share_pages(pair):
     assert eng.pool.pages_in_use == 0
 
 
-def test_paged_backend_preemption_exact(pair):
-    """Pool pressure: preempt, re-admit (prefix recompute — the paged
-    backend has no dense rows to swap), still token-exact."""
+@pytest.mark.parametrize("swap_pages", [0, 64])
+def test_paged_backend_preemption_exact(pair, swap_pages):
+    """Pool pressure: preempt, re-admit, still token-exact — with the
+    paged swap store (rows packed/unpacked straight from pages) and
+    without (prefix recompute)."""
     dp, dcfg, tp, tcfg, prompts = pair
     refs = [greedy_reference(tp, tcfg, p, N_NEW, max_len=128)
             for p in prompts]
     eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, _ecfg(),
                                   max_batch=3, page_size=2, pool_pages=40,
-                                  swap_pages=64, attn_backend="paged",
-                                  debug_check=True)
-    assert eng.swap is None          # paged rows cannot pack densely
+                                  swap_pages=swap_pages,
+                                  attn_backend="paged", debug_check=True)
+    assert eng.tgt_dec.swappable       # pages pack without densifying
+    assert (eng.swap is not None) == bool(swap_pages)
     sched = ContinuousBatchScheduler(eng)
     res = sched.run([ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
                      for i, p in enumerate(prompts)])
@@ -235,3 +304,5 @@ def test_paged_backend_preemption_exact(pair):
     for i, want in enumerate(refs):
         assert res[i].tokens == want, i
     assert eng.pool.pages_in_use == 0
+    if swap_pages:
+        assert eng.swap.pool.pages_in_use == 0

@@ -1,0 +1,266 @@
+"""Rollback-aware per-row SSM state checkpointing (DESIGN.md §7.6).
+
+Three layers of evidence that checkpointed recurrent state makes SSM
+rollback positional (and therefore batched hybrid serving lossless):
+
+  * kernel vs oracle — ``ssm_scan(return_states=True)`` must emit the
+    post-step carry h_t of EVERY position, matching the sequential
+    reference (and the carried-only fast path bit for bit);
+  * ring semantics — a mamba checkpoint-ring cache must make
+    "roll back = restart the forward at the accept position" exact,
+    including ring laps, pad writes and the Pallas scan implementation;
+  * rollback property (hypothesis) — random accept/reject/rollback
+    patterns over random hybrid configs on a BatchedDecoder are
+    bit-identical to sequential replay from scratch, mirroring
+    test_paged_attention's COW-fork property test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.batched_engine import BatchedDecoder
+
+KEY = jax.random.PRNGKey(17)
+VOCAB = 61
+
+
+# ---------------------------------------------------------------------------
+# kernel: per-step states vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,E,N,bT", [
+    (1, 7, 16, 4, 16),        # single chunk
+    (2, 40, 24, 8, 16),       # multiple chunks
+    (1, 130, 32, 8, 64),      # chunk padding on the last tile
+])
+def test_ssm_scan_states_vs_oracle(B, T, E, N, bT):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, E))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, E)))
+    Bm = jax.random.normal(ks[2], (B, T, N))
+    Cm = jax.random.normal(ks[3], (B, T, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (E, N)) * 0.2)
+    D = jnp.ones((E,))
+    h0 = jax.random.normal(ks[5], (B, E, N))
+    y, hT, hs = ops.ssm_scan(x, dt, Bm, Cm, A, D, h0, bT=bT, bE=16,
+                             return_states=True)
+    yr, hTr, hsr = ref.ssm_scan_ref(x, dt, Bm, Cm, A, D, h0,
+                                    return_states=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hsr),
+                               rtol=2e-5, atol=2e-5)
+    # the last per-step carry IS the final state
+    np.testing.assert_allclose(np.asarray(hs[:, -1]), np.asarray(hT),
+                               rtol=1e-6, atol=1e-6)
+    # requesting states must not perturb the carried-only fast path
+    y2, hT2 = ops.ssm_scan(x, dt, Bm, Cm, A, D, h0, bT=bT, bE=16)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y))
+    np.testing.assert_array_equal(np.asarray(hT2), np.asarray(hT))
+
+
+# ---------------------------------------------------------------------------
+# ring cache semantics (model layer)
+# ---------------------------------------------------------------------------
+
+def _hybrid_cfg(pattern, d=32, N=8, Cv=4, window=0, vocab=VOCAB):
+    return ModelConfig(name="ckpt", family="hybrid", num_layers=len(pattern),
+                       d_model=d, num_heads=2, num_kv_heads=1, d_ff=2 * d,
+                       vocab_size=vocab, pattern=pattern, ssm_state=N,
+                       ssm_conv=Cv, sliding_window=window, dtype="float32")
+
+
+def _fwd(params, cfg, cache, toks, p0):
+    arr = jnp.asarray([toks], jnp.int32)
+    pos = p0 + jnp.arange(arr.shape[1], dtype=jnp.int32)[None]
+    logits, cache, _ = M.forward(params, cfg, arr, cache=cache,
+                                 positions=pos)
+    return np.asarray(logits[0]), cache
+
+
+def test_ring_rollback_is_positional():
+    """Speculate junk past the accept point, then simply restart the
+    forward at the accept position: the ring must resume from that
+    position's checkpoint bit-for-bit (no replay call)."""
+    cfg = _hybrid_cfg((("mamba", "dense"), ("attn", "dense")))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    seq = list(map(int, rng.integers(0, VOCAB, 14)))
+
+    lg_ref, _ = _fwd(params, cfg, M.init_cache(cfg, 1, 64), seq, 0)
+
+    c = M.init_cache(cfg, 1, 64, ssm_ring=16)
+    _, c = _fwd(params, cfg, c, seq[:6], 0)
+    junk = list(map(int, rng.integers(0, VOCAB, 5)))
+    _, c = _fwd(params, cfg, c, seq[6:9] + junk, 6)   # 3 accepted + 5 junk
+    lg, c = _fwd(params, cfg, c, seq[9:], 9)          # rollback to 9
+    np.testing.assert_array_equal(lg[-1], lg_ref[-1])
+
+
+def test_ring_laps_on_long_prefill():
+    """A prefill longer than the ring wraps it; the surviving checkpoints
+    are the trailing ones and decoding continues exactly."""
+    cfg = _hybrid_cfg((("mamba", "none"),))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    seq = list(map(int, rng.integers(0, VOCAB, 37)))
+    c = M.init_cache(cfg, 1, 64, ssm_ring=8)          # 37 >> 8: many laps
+    _, c = _fwd(params, cfg, c, seq, 0)
+    lg, _ = _fwd(params, cfg, c, [5], 37)
+    lg_ref, _ = _fwd(params, cfg, M.init_cache(cfg, 1, 64), seq + [5], 0)
+    np.testing.assert_array_equal(lg[-1], lg_ref[-1])
+
+
+def test_ring_pallas_scan_matches_jnp():
+    """The ring decode path through the Pallas kernel (return_states) must
+    agree with the pure-jnp per-step scan."""
+    cfg = _hybrid_cfg((("mamba", "dense"),), d=16, N=4)
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    seq = list(map(int, rng.integers(0, VOCAB, 6)))
+    outs = {}
+    for impl in ("jnp", "pallas"):
+        old = L.SSM_SCAN_IMPL
+        L.SSM_SCAN_IMPL = impl
+        try:
+            c = M.init_cache(cfg, 1, 32, ssm_ring=8)
+            _, c = _fwd(params, cfg, c, seq, 0)
+            lg, _ = _fwd(params, cfg, c, [7], len(seq))
+            outs[impl] = lg[-1]
+        finally:
+            L.SSM_SCAN_IMPL = old
+    np.testing.assert_allclose(outs["pallas"], outs["jnp"],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decoder_snapshot_restore_roundtrip():
+    """snapshot(row, step) / restore(row, step) pin the ring explicitly:
+    clobber the checkpoint with junk decoding, restore it, and the row
+    must continue exactly as if the junk never happened."""
+    cfg = _hybrid_cfg((("mamba", "dense"), ("attn", "dense")))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    prompt = list(map(int, rng.integers(0, VOCAB, 6)))
+    dec = BatchedDecoder(params, cfg, n_rows=1, max_len=64, ssm_ring=8)
+    row = dec.free_rows.pop()
+    dec.prefill_row(row, prompt)
+    snap = dec.snapshot(row, len(prompt))
+
+    ref_lg, _ = dec.step(np.asarray([[9]], np.int32),
+                         np.asarray([len(prompt)], np.int32))
+    ref_lg = np.asarray(ref_lg)[0, 0]
+
+    # lap the ring so slot len(prompt) % 8 is overwritten with junk state
+    junk = list(map(int, rng.integers(0, VOCAB, 9)))
+    dec.step(np.asarray([junk], np.int32),
+             np.asarray([len(prompt) + 1], np.int32))
+    dec.restore(row, len(prompt), snap)
+    got_lg, _ = dec.step(np.asarray([[9]], np.int32),
+                         np.asarray([len(prompt)], np.int32))
+    # attention KV of the probe slot was overwritten by junk and is now
+    # rewritten by the probe itself; the SSM state comes from the restored
+    # snapshot — logits must match the pre-junk call exactly
+    np.testing.assert_array_equal(np.asarray(got_lg)[0, 0], ref_lg)
+
+
+# ---------------------------------------------------------------------------
+# rollback-correctness property (hypothesis)
+# ---------------------------------------------------------------------------
+
+PATTERNS = [
+    (("mamba", "none"),),                                     # falcon-shaped
+    (("mamba", "dense"), ("attn", "dense")),                  # hybrid
+    (("mamba", "dense"), ("local", "dense"), ("attn", "dense")),
+]
+
+
+def _batched_call(dec, parts):
+    """Mirror of BatchedEngineBase._batched (without pool accounting):
+    listed rows ingest their tokens from their start positions, idle rows
+    tick in place at their own write head."""
+    T = max(len(t) for _, t, _ in parts)
+    toks = np.zeros((dec.n_rows, T), np.int32)
+    pos = np.minimum(dec.row_pos, dec.max_len - T).astype(np.int32)
+    for row, t, p0 in parts:
+        toks[row, :len(t)] = t
+        if len(t) < T:
+            toks[row, len(t):] = t[-1]
+        pos[row] = p0
+    logits, _ = dec.step(toks, pos)
+    for row, t, p0 in parts:
+        dec.row_pos[row] = p0 + len(t)
+    return np.asarray(logits)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_checkpointed_rollback_equals_replay_from_scratch(seed):
+    """THE rollback-correctness invariant: drive a batched decoder with a
+    random accept/reject/rollback script over a random hybrid config —
+    rows speculating different spans, rolling back to random accept
+    points, idling through other rows' rounds — and the surviving stream
+    must be bit-identical to a fresh decoder that ingests the committed
+    tokens once, sequentially, with no speculation at all."""
+    rng = np.random.default_rng(seed)
+    cfg = _hybrid_cfg(PATTERNS[int(rng.integers(len(PATTERNS)))],
+                      d=int(rng.choice([16, 32])),
+                      N=int(rng.choice([4, 8])),
+                      Cv=int(rng.choice([2, 4])),
+                      window=16)
+    params = M.init_params(jax.random.PRNGKey(int(rng.integers(1 << 16))),
+                           cfg)
+    ring = int(rng.choice([12, 16]))
+    dec = BatchedDecoder(params, cfg, n_rows=2, max_len=96, ssm_ring=ring)
+    committed = {}
+    for row in (0, 1):
+        r = dec.free_rows.pop()
+        committed[r] = list(map(int, rng.integers(0, VOCAB,
+                                                  int(rng.integers(4, 8)))))
+        dec.prefill_row(r, committed[r])
+
+    rows = sorted(committed)
+    for _ in range(5):
+        active = [r for r in rows if rng.random() < 0.8] or [rows[0]]
+        parts, drafts = [], {}
+        for r in active:
+            k = int(rng.integers(1, 5))
+            drafts[r] = list(map(int, rng.integers(0, VOCAB, k)))
+            parts.append((r, drafts[r], len(committed[r])))
+        _batched_call(dec, parts)
+        for r in active:
+            # verification verdict: accept a random prefix, reject the rest
+            n_acc = int(rng.integers(0, len(drafts[r]) + 1))
+            committed[r] += drafts[r][:n_acc]
+            # rollback = bookkeeping only: the next forward for this row
+            # starts at len(committed[r]) and resumes from that checkpoint.
+            # The write head follows the reset (engine _rollback_streams):
+            # idle parking must pad the slot the next REAL write overwrites.
+            dec.row_pos[r] = len(committed[r])
+
+    probe = int(rng.integers(0, VOCAB))
+    got = _batched_call(dec, [(r, [probe], len(committed[r]))
+                              for r in rows])
+
+    fresh = BatchedDecoder(params, cfg, n_rows=2, max_len=96, ssm_ring=ring)
+    for r in rows:
+        fresh.free_rows.remove(r)
+        fresh.prefill_row(r, committed[r])
+    want = _batched_call(fresh, [(r, [probe], len(committed[r]))
+                                 for r in rows])
+    for r in rows:
+        g, w = got[r, 0], want[r, 0]
+        if not cfg.has_attention():
+            # the SSM checkpoint path is exactly bitwise
+            np.testing.assert_array_equal(g, w)
+        else:
+            # attention K/V matmuls see different call chunkings between
+            # speculative decode and one-shot replay (XLA reduction order:
+            # ~1e-7 LSB noise); the stream-level invariant is exact
+            assert int(g.argmax()) == int(w.argmax())
+            np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-5)
