@@ -15,9 +15,18 @@ scheduler does (the clock idles until the next arrival).  Run with
 --pair trained for the cached Zipf-Markov pair, or the default random
 tiny pair for a fast smoke sweep.
 
+Batched cells additionally record the device-resident loop's host-boundary
+traffic (DESIGN.md §7.7): per-step host-transfer bytes (a deterministic
+count — the engines tally every device_get) and wall-clock step-latency
+p50/p95.  ``--check-baseline`` diffs the measured transfer bytes against a
+committed baseline JSON (benchmarks/baselines/serving_transfer_cpu.json)
+and exits non-zero when the loop regresses to >2x the committed post-PR
+bytes or loses the >=10x reduction over the recorded pre-PR host loop —
+the CI bench-smoke gate.
+
 Usage:
   PYTHONPATH=src python benchmarks/serving_throughput.py \
-      --out serving_sweep.json
+      --out serving_sweep.json [--check-baseline benchmarks/baselines/...]
 """
 from __future__ import annotations
 
@@ -83,7 +92,10 @@ def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
     return {k: rep[k] for k in
             ("total_tokens", "total_cost", "tokens_per_cost",
              "ttft_p50", "ttft_p95", "itl_p50", "itl_p95",
-             "pool_occupancy_peak", "preemptions")} | {
+             "pool_occupancy_peak", "preemptions", "rounds",
+             "host_transfer_bytes", "host_fetches",
+             "per_step_transfer_bytes", "step_wall_p50",
+             "step_wall_p95")} | {
         "reclaimed_speculative_pages":
             rep["pool"]["reclaimed_speculative_pages"]}
 
@@ -103,6 +115,10 @@ def main() -> None:
     ap.add_argument("--gamma", type=int, default=3)
     ap.add_argument("--c", type=float, default=4.0)
     ap.add_argument("--out", default="serving_sweep.json")
+    ap.add_argument("--check-baseline", default=None, metavar="JSON",
+                    help="diff per-step host-transfer bytes against this "
+                    "committed baseline; exit 1 on >2x regression or on "
+                    "losing the >=10x reduction vs the pre-PR host loop")
     args = ap.parse_args()
 
     if args.hybrid and args.pair != "random":
@@ -149,7 +165,9 @@ def main() -> None:
             print(f"interval={interval:5.1f} max_batch={mb}: "
                   f"seq {seq['tokens_per_cost']:.3f} tok/cost -> batched "
                   f"{bat['tokens_per_cost']:.3f} "
-                  f"({cell['throughput_gain']:.2f}x)")
+                  f"({cell['throughput_gain']:.2f}x)  "
+                  f"xfer/step {bat['per_step_transfer_bytes']:.0f}B  "
+                  f"step p50 {bat['step_wall_p50'] * 1e3:.1f}ms")
 
     report = {
         "engine": "specbranch",
@@ -165,6 +183,38 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, default=float)
     print(f"wrote {args.out} ({len(grid)} cells)")
+
+    if args.check_baseline:
+        with open(args.check_baseline) as f:
+            base = json.load(f)
+        base_intervals = base.get("sweep", {}).get("arrival_intervals")
+        ok = True
+        for cell in grid:
+            key = str(cell["max_batch"])
+            if key not in base.get("per_step_transfer_bytes", {}):
+                continue
+            if (base_intervals is not None
+                    and cell["arrival_interval"] not in base_intervals):
+                continue            # baseline bytes are per-interval
+            got = cell["batched"]["per_step_transfer_bytes"]
+            committed = base["per_step_transfer_bytes"][key]
+            pre = base.get("pre_pr_per_step_transfer_bytes", {}).get(key)
+            vs_pre = ("" if pre is None else
+                      f" (pre-PR host loop {pre:.0f}B, "
+                      f"{pre / max(got, 1e-9):.0f}x reduction)")
+            print(f"baseline max_batch={key}: {got:.0f}B/step vs committed "
+                  f"{committed:.0f}B{vs_pre}")
+            if got > 2.0 * committed:
+                print(f"  FAIL: >2x transfer-bytes regression over the "
+                      f"committed baseline ({got:.0f} > 2*{committed:.0f})")
+                ok = False
+            if pre is not None and got * 10.0 > pre:
+                print(f"  FAIL: lost the >=10x reduction vs the pre-PR "
+                      f"host loop ({got:.0f} * 10 > {pre:.0f})")
+                ok = False
+        if not ok:
+            sys.exit(1)
+        print("baseline check passed")
 
 
 if __name__ == "__main__":

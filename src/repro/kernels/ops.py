@@ -84,6 +84,28 @@ def verify_accept(p_logits, q_logits, tokens, uniforms, res_uniforms, *,
                              res_uniforms, interpret=it)
 
 
+def verify_accept_batched(p_logits, q_logits, tokens, lens, uniforms,
+                          res_uniforms, *, backend: Optional[str] = None,
+                          interpret: Optional[bool] = None):
+    """Batched ragged verification (see kernels.verify_accept).
+
+    backend: "pallas" | "xla" | None.  None routes to the pallas kernel on
+    TPU and to the compiled XLA path everywhere else (REPRO_VERIFY_BACKEND
+    overrides).  The serving engines call the kernel through
+    serving/device_loop (kernel_route); their off-TPU verify math lives in
+    ``sampling.verify_chain_device``.
+    """
+    if backend is None:
+        backend = os.environ.get("REPRO_VERIFY_BACKEND") or (
+            "pallas" if jax.default_backend() == "tpu" else "xla")
+    if backend == "xla":
+        return _va.verify_accept_batched_xla(p_logits, q_logits, tokens,
+                                             lens, uniforms, res_uniforms)
+    it = _default_interpret() if interpret is None else interpret
+    return _va.verify_accept_batched(p_logits, q_logits, tokens, lens,
+                                     uniforms, res_uniforms, interpret=it)
+
+
 def paged_gather(pages, table, valid_len=None, *,
                  interpret: Optional[bool] = None):
     """Gather logical pages through a page table.  See kernels.paged."""

@@ -100,6 +100,32 @@ def ssm_scan_ref(x, dt, Bm, Cm, A, D, h0, *, return_states: bool = False
     return y, hT
 
 
+def verify_accept_batched_ref(p_logits, q_logits, tokens, lens, uniforms,
+                              res_uniforms):
+    """Oracle for the batched (B, R, V) verification grid: per-row lens
+    masking (positions >= lens[b] return zeros), otherwise the per-row
+    verify_accept semantics."""
+    p = jax.nn.softmax(p_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.softmax(q_logits.astype(jnp.float32), axis=-1)
+    B, R, _ = p.shape
+    valid = jnp.arange(R)[None] < lens[:, None]
+    t = tokens.astype(jnp.int32)[..., None]
+    p_t = jnp.where(valid, jnp.take_along_axis(p, t, -1)[..., 0], 0.0)
+    q_t = jnp.where(valid, jnp.take_along_axis(q, t, -1)[..., 0], 0.0)
+    accept = (valid & (uniforms <= p_t / jnp.maximum(q_t, 1e-30))
+              ).astype(jnp.int32)
+    r = jnp.maximum(p - q, 0.0)
+    z = r.sum(-1, keepdims=True)
+    r = jnp.where(z > 1e-12, r / jnp.maximum(z, 1e-30), p)
+    cdf = jnp.cumsum(r, axis=-1)
+    # renormalized + clamped like the kernel: f32 cumsum can end below a
+    # uniform in (cdf[-1], 1), which must not emit token id V
+    cdf = cdf / jnp.maximum(cdf[..., -1:], 1e-30)
+    res = jnp.sum((cdf <= res_uniforms[..., None]).astype(jnp.int32), axis=-1)
+    res = jnp.minimum(res, p.shape[-1] - 1)
+    return accept, jnp.where(valid, res, 0), p_t, q_t
+
+
 def verify_accept_ref(p_logits, q_logits, tokens, uniforms, res_uniforms):
     p = jax.nn.softmax(p_logits.astype(jnp.float32), axis=-1)
     q = jax.nn.softmax(q_logits.astype(jnp.float32), axis=-1)
@@ -112,5 +138,7 @@ def verify_accept_ref(p_logits, q_logits, tokens, uniforms, res_uniforms):
     z = r.sum(-1, keepdims=True)
     r = jnp.where(z > 1e-12, r / jnp.maximum(z, 1e-30), p)
     cdf = jnp.cumsum(r, axis=-1)
-    res = jnp.sum((cdf < res_uniforms[:, None]).astype(jnp.int32), axis=-1)
+    cdf = cdf / jnp.maximum(cdf[..., -1:], 1e-30)
+    res = jnp.sum((cdf <= res_uniforms[:, None]).astype(jnp.int32), axis=-1)
+    res = jnp.minimum(res, p.shape[-1] - 1)
     return accept, res, p_t, q_t

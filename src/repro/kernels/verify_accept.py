@@ -15,7 +15,24 @@ times (max, sum, gather, residual); this kernel reads them once.  V up to
 larger vocabularies would stream V blocks with the same accumulators (the
 assigned configs top out at 262k).
 
-Grid = (R,); one program per draft row.
+Two entry points (DESIGN.md §7.7):
+
+  * ``verify_accept``          — the original (R, V) grid, one program per
+    draft row (single-request engines);
+  * ``verify_accept_batched``  — a (B, R, V) grid for the batched serving
+    loop: grid (B, R) with the per-row draft lengths riding in SMEM via
+    scalar prefetch, so ragged rows (different gamma per request — H-RAD's
+    adaptive stop) mask their pad positions for free.  Masked positions
+    return accept = 0, residual = 0, p_tok = q_tok = 0.
+
+``verify_accept_batched_xla`` is the same contract as a pure-XLA jitted
+function (an online max/sum pass, no pallas) — the compiled backend of
+``ops.verify_accept_batched`` on machines without a Mosaic lowering (this
+CPU container, CI).  The serving loop routes per
+``device_loop.kernel_route``: through the pallas kernel on TPU, and
+through the probs-space twin ``sampling.verify_chain_device`` off-TPU
+(same math as the XLA path here; both are pinned against the numpy cores
+and against each other in tests/test_verify_device.py).
 """
 from __future__ import annotations
 
@@ -25,6 +42,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(p_ref, q_ref, tok_ref, u_ref, w_ref,
@@ -45,7 +63,11 @@ def _kernel(p_ref, q_ref, tok_ref, u_ref, w_ref,
     # fall back to p when the residual is (numerically) empty
     r = jnp.where(z > 1e-12, r / jnp.maximum(z, 1e-30), p)
     cdf = jnp.cumsum(r)
-    res_ref[0] = jnp.sum((cdf < w_ref[0]).astype(jnp.int32))
+    # renormalize by the last cdf entry (f32 cumsum can top out below any
+    # uniform in (cdf[-1], 1)) and clamp — never emit token id V
+    cdf = cdf / jnp.maximum(cdf[-1], 1e-30)
+    res = jnp.sum((cdf <= w_ref[0]).astype(jnp.int32))
+    res_ref[0] = jnp.minimum(res, cdf.shape[0] - 1)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -85,3 +107,119 @@ def verify_accept(p_logits: jax.Array, q_logits: jax.Array,
         interpret=interpret,
     )(p_logits, q_logits, tokens.astype(jnp.int32),
       uniforms.astype(jnp.float32), res_uniforms.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# batched (B, R, V) grid with per-row lens masking
+# ---------------------------------------------------------------------------
+
+def _batched_kernel(lens_ref, p_ref, q_ref, tok_ref, u_ref, w_ref,
+                    acc_ref, res_ref, ptok_ref, qtok_ref):
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+    valid = r < lens_ref[b]
+    pl_ = p_ref[0, 0].astype(jnp.float32)       # (V,)
+    ql_ = q_ref[0, 0].astype(jnp.float32)
+    p = jax.nn.softmax(pl_)
+    q = jax.nn.softmax(ql_)
+    t = tok_ref[0, 0]
+    p_t = jnp.where(valid, jnp.take(p, t), 0.0)
+    q_t = jnp.where(valid, jnp.take(q, t), 0.0)
+    acc_ref[0, 0] = (valid
+                     & (u_ref[0, 0] <= p_t / jnp.maximum(q_t, 1e-30))
+                     ).astype(jnp.int32)
+    ptok_ref[0, 0] = p_t
+    qtok_ref[0, 0] = q_t
+    res = jnp.maximum(p - q, 0.0)
+    z = res.sum()
+    res = jnp.where(z > 1e-12, res / jnp.maximum(z, 1e-30), p)
+    cdf = jnp.cumsum(res)
+    cdf = cdf / jnp.maximum(cdf[-1], 1e-30)     # see _kernel
+    tok = jnp.minimum(jnp.sum((cdf <= w_ref[0, 0]).astype(jnp.int32)),
+                      cdf.shape[0] - 1)
+    res_ref[0, 0] = jnp.where(valid, tok, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def verify_accept_batched(p_logits: jax.Array, q_logits: jax.Array,
+                          tokens: jax.Array, lens: jax.Array,
+                          uniforms: jax.Array, res_uniforms: jax.Array, *,
+                          interpret: bool = True
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """Fused batched verification with ragged rows.
+
+    p_logits, q_logits: (B, R, V); tokens/uniforms/res_uniforms: (B, R);
+    lens: (B,) valid draft positions per row (positions >= lens[b] are
+    masked to zeros).  Returns (accept (B, R) i32, residual_tokens (B, R)
+    i32, p_tok (B, R) f32, q_tok (B, R) f32).
+    """
+    B, R, V = p_logits.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, R),
+        in_specs=[
+            pl.BlockSpec((1, 1, V), lambda b, r, ln: (b, r, 0)),
+            pl.BlockSpec((1, 1, V), lambda b, r, ln: (b, r, 0)),
+            pl.BlockSpec((1, 1), lambda b, r, ln: (b, r)),
+            pl.BlockSpec((1, 1), lambda b, r, ln: (b, r)),
+            pl.BlockSpec((1, 1), lambda b, r, ln: (b, r)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, r, ln: (b, r)),
+            pl.BlockSpec((1, 1), lambda b, r, ln: (b, r)),
+            pl.BlockSpec((1, 1), lambda b, r, ln: (b, r)),
+            pl.BlockSpec((1, 1), lambda b, r, ln: (b, r)),
+        ],
+    )
+    return pl.pallas_call(
+        _batched_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R), jnp.int32),
+            jax.ShapeDtypeStruct((B, R), jnp.int32),
+            jax.ShapeDtypeStruct((B, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, R), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens.astype(jnp.int32), p_logits, q_logits, tokens.astype(jnp.int32),
+      uniforms.astype(jnp.float32), res_uniforms.astype(jnp.float32))
+
+
+@jax.jit
+def verify_accept_batched_xla(p_logits: jax.Array, q_logits: jax.Array,
+                              tokens: jax.Array, lens: jax.Array,
+                              uniforms: jax.Array, res_uniforms: jax.Array
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                         jax.Array]:
+    """Compiled (non-pallas) path, same contract as verify_accept_batched.
+
+    Written as an explicit online max-subtract/exp-sum pass (rather than
+    two jax.nn.softmax calls) so the XLA path and the ref.py oracle stay
+    algorithmically independent.
+    """
+    B, R, V = p_logits.shape
+    pl_ = p_logits.astype(jnp.float32)
+    ql_ = q_logits.astype(jnp.float32)
+    pm = pl_.max(-1, keepdims=True)
+    qm = ql_.max(-1, keepdims=True)
+    pe = jnp.exp(pl_ - pm)
+    qe = jnp.exp(ql_ - qm)
+    p = pe / pe.sum(-1, keepdims=True)
+    q = qe / qe.sum(-1, keepdims=True)
+    t = tokens.astype(jnp.int32)[..., None]
+    valid = (jnp.arange(R, dtype=jnp.int32)[None]
+             < lens.astype(jnp.int32)[:, None])
+    p_t = jnp.where(valid, jnp.take_along_axis(p, t, -1)[..., 0], 0.0)
+    q_t = jnp.where(valid, jnp.take_along_axis(q, t, -1)[..., 0], 0.0)
+    acc = (valid & (uniforms.astype(jnp.float32)
+                    <= p_t / jnp.maximum(q_t, 1e-30))).astype(jnp.int32)
+    r = jnp.maximum(p - q, 0.0)
+    z = r.sum(-1, keepdims=True)
+    r = jnp.where(z > 1e-12, r / jnp.maximum(z, 1e-30), p)
+    cdf = jnp.cumsum(r, axis=-1)
+    cdf = cdf / jnp.maximum(cdf[..., -1:], 1e-30)     # see _kernel
+    res = jnp.sum((cdf <= res_uniforms.astype(jnp.float32)[..., None])
+                  .astype(jnp.int32), axis=-1)
+    res = jnp.where(valid, jnp.minimum(res, V - 1), 0)
+    return acc, res, p_t, q_t

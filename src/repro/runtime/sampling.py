@@ -8,6 +8,20 @@ tests/test_sampling.py:
     stream is distributed exactly as the target model.
   * ``branch_spec_sample`` — Algorithm 2 (branch speculative sampling): with
     candidates drawn i.i.d. from q, the returned token ~ p exactly.
+
+Two families live here:
+
+  * the float64 **numpy cores** (``verify_chain_np``,
+    ``branch_spec_sample_np``, ``_np_categorical``) — the reference oracle.
+    The sequential engines keep running on them; kernel and device-loop
+    equivalence tests check against them.
+  * the **device twins** (``verify_chain_device``,
+    ``branch_verdict_device``, ``categorical_from_uniform``,
+    ``uniform_grid``) — jnp implementations of
+    the same math, batched over requests, that the serving engines jit into
+    their device-resident verify/commit step (DESIGN.md §7.7).  Uniforms come
+    from per-row folded PRNG keys, so a request's random stream depends only
+    on ``(rid, decision counter)`` — never on its batchmates.
 """
 from __future__ import annotations
 
@@ -177,3 +191,119 @@ def draw_branch_candidates(key, q_b: jax.Array, k: int,
 def adaptive_k(q_conf: float, k_max: int) -> int:
     """Eq. (7): k = max(1, floor(k_max * (1 - q(x_b))))."""
     return max(1, int(k_max * (1.0 - q_conf)))
+
+
+# ---------------------------------------------------------------------------
+# device twins (batched, jnp) — numpy cores above are the oracle
+# ---------------------------------------------------------------------------
+
+def uniform_grid(base_key, rids: jax.Array, ctrs: jax.Array,
+                 width: int) -> jax.Array:
+    """(S, width) uniforms where element (s, j) is a pure function of
+    ``(rids[s], ctrs[s] + j)`` — NOT of s, the batch size, or ``width``.
+
+    This is the batch-composition-independence contract of the
+    device-resident loop: a request consumes uniforms addressed by its own
+    (rid, decision-counter) coordinates, so its sampled stream is identical
+    whether it rides solo or in a full batch, and identical across bucket
+    re-padding (the engine indexes into the grid by the request's OWN
+    lengths, never by the padded width).
+    """
+    def one(rid, ctr):
+        k = jax.random.fold_in(jax.random.fold_in(base_key, rid), ctr)
+        return jax.random.uniform(k, ())
+
+    j = jnp.arange(width, dtype=jnp.int32)
+    return jax.vmap(lambda r, c: jax.vmap(lambda jj: one(r, c + jj))(j))(
+        rids.astype(jnp.int32), ctrs.astype(jnp.int32))
+
+
+def categorical_from_uniform(probs: jax.Array, u: jax.Array) -> jax.Array:
+    """Inverse-CDF categorical sample (..., V) x (...) -> (...) int32.
+
+    Mirrors ``_np_categorical``: the cdf is renormalized by its last
+    entry so un-normalized residual vectors sample correctly, and the
+    comparison is ``cdf <= u`` (= searchsorted side="right"), so u == 0.0
+    — which jax.random.uniform can return — skips any zero-probability
+    prefix instead of emitting it.
+    """
+    cdf = jnp.cumsum(probs.astype(jnp.float32), axis=-1)
+    cdf = cdf / jnp.maximum(cdf[..., -1:], 1e-30)
+    tok = jnp.sum((cdf <= u[..., None]).astype(jnp.int32), axis=-1)
+    return jnp.clip(tok, 0, probs.shape[-1] - 1)
+
+
+def verify_chain_device(p_probs: jax.Array, q_probs: jax.Array,
+                        toks: jax.Array, lens: jax.Array,
+                        ugrid: jax.Array,
+                        bonus_probs: Optional[jax.Array] = None):
+    """Batched device twin of ``verify_chain_np`` with ragged draft widths.
+
+    p_probs, q_probs: (S, R, V) target/draft distributions per draft
+    position (R = padded bucket width); toks: (S, R) drafted ids;
+    lens: (S,) each row's REAL draft length (<= R); ugrid: (S, >= R + 1)
+    uniforms — row s consumes ugrid[s, :lens[s]] for the accept tests and
+    ugrid[s, lens[s]] for the residual/bonus draw, exactly the numpy core's
+    ``us[i]`` / ``us[-1]`` layout, so consumption is independent of the pad.
+
+    Returns (n_acc (S,) i32, next_token (S,) i32, all_acc (S,) bool).
+    With no bonus, next_token is -1 on all-accept rows.
+    """
+    S, R, V = p_probs.shape
+    idx = toks.astype(jnp.int32)[..., None]
+    p_t = jnp.take_along_axis(p_probs, idx, -1)[..., 0]
+    q_t = jnp.take_along_axis(q_probs, idx, -1)[..., 0]
+    j = jnp.arange(R, dtype=jnp.int32)[None]
+    within = j < lens[:, None]
+    acc = ugrid[:, :R] <= p_t / jnp.maximum(q_t, 1e-30)
+    run = jnp.cumprod(jnp.where(within, acc, True).astype(jnp.int32), axis=1)
+    n_acc = (run * within.astype(jnp.int32)).sum(1).astype(jnp.int32)
+    all_acc = n_acc == lens
+    # residual at the first rejected position (clamped when all accepted)
+    pos = jnp.minimum(n_acc, R - 1)[:, None, None]
+    p_n = jnp.take_along_axis(p_probs, pos, 1)[:, 0]
+    q_n = jnp.take_along_axis(q_probs, pos, 1)[:, 0]
+    r = jnp.maximum(p_n - q_n, 0.0)
+    z = r.sum(-1, keepdims=True)
+    r = jnp.where(z > 1e-12, r / jnp.maximum(z, 1e-30), p_n)
+    u_fin = jnp.take_along_axis(ugrid, lens[:, None].astype(jnp.int32),
+                                1)[:, 0]
+    nxt = categorical_from_uniform(r, u_fin)
+    if bonus_probs is not None:
+        nxt = jnp.where(all_acc, categorical_from_uniform(bonus_probs, u_fin),
+                        nxt)
+    else:
+        nxt = jnp.where(all_acc, -1, nxt)
+    return n_acc, nxt.astype(jnp.int32), all_acc
+
+
+def branch_verdict_device(p_b: jax.Array, q_b: jax.Array, cands: jax.Array,
+                          ks: jax.Array, ugrid: jax.Array):
+    """Batched device twin of ``branch_spec_sample_np`` (Algorithm 2).
+
+    p_b, q_b: (S, V); cands: (S, K) padded candidate ids; ks: (S,) each
+    row's REAL candidate count (<= K); ugrid: (S, >= K + 1) uniforms —
+    row s consumes ugrid[s, :ks[s]] plus ugrid[s, ks[s]] for the final
+    residual draw (the numpy core's ``us[-1]``).
+
+    Returns (accepted_branch (S,) i32 — -1 when none — and token (S,) i32).
+    """
+    S, K = cands.shape
+    acc = jnp.full((S,), -1, jnp.int32)
+    tok = jnp.zeros((S,), jnp.int32)
+    p_cur = p_b.astype(jnp.float32)
+    for i in range(K):            # static unroll: K = k_max is small
+        active = (i < ks) & (acc < 0)
+        t = cands[:, i].astype(jnp.int32)
+        p_t = jnp.take_along_axis(p_cur, t[:, None], 1)[:, 0]
+        q_t = jnp.take_along_axis(q_b, t[:, None], 1)[:, 0]
+        hit = active & (ugrid[:, i] < p_t / jnp.maximum(q_t, 1e-30))
+        acc = jnp.where(hit, i, acc)
+        tok = jnp.where(hit, t, tok)
+        r = jnp.maximum(p_cur - q_b, 0.0)
+        z = r.sum(-1, keepdims=True)
+        r = jnp.where(z > 1e-12, r / jnp.maximum(z, 1e-30), p_cur)
+        p_cur = jnp.where((active & ~hit)[:, None], r, p_cur)
+    u_fin = jnp.take_along_axis(ugrid, ks[:, None].astype(jnp.int32), 1)[:, 0]
+    tok = jnp.where(acc < 0, categorical_from_uniform(p_cur, u_fin), tok)
+    return acc, tok

@@ -26,6 +26,7 @@ it jumps to the next arrival (an idle server).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -68,7 +69,9 @@ class ContinuousBatchScheduler:
                         "(pool or row capacity too small)")
                 eng.clock = max(eng.clock, nxt)
                 continue
+            t0 = time.time()
             rr = eng.step_round()
+            step_wall = time.time() - t0
             now = eng.clock
             for rid, n in rr["committed"].items():
                 if n > 0:
@@ -83,7 +86,7 @@ class ContinuousBatchScheduler:
             for seq, res in eng.retire_done():
                 results[seq.rid] = res
                 self.metrics.on_finish(seq.rid, now)
-            self.metrics.on_round(eng.pool.occupancy)
+            self.metrics.on_round(eng.pool.occupancy, step_wall=step_wall)
         return results
 
     # ------------------------------------------------------------ admission
@@ -107,8 +110,13 @@ class ContinuousBatchScheduler:
     # -------------------------------------------------------------- report
     def report(self) -> dict:
         eng = self.engine
+        transfer = None
+        if hasattr(eng, "host_transfer_bytes"):
+            transfer = {"host_transfer_bytes": eng.host_transfer_bytes,
+                        "host_fetches": eng.host_fetches}
         return self.metrics.summary(eng.clock,
-                                    pool_stats=eng.pool.stats.as_dict())
+                                    pool_stats=eng.pool.stats.as_dict(),
+                                    transfer=transfer)
 
 
 def victim_arrival(metrics: ServingMetrics, rid: int) -> float:

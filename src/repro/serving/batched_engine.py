@@ -1,5 +1,5 @@
 """Batched serving engines: SpS and SpecBranch draft/verify rounds run
-across a whole batch of requests (DESIGN.md §7.2).
+across a whole batch of requests (DESIGN.md §7.2, §7.7).
 
 ``BatchedDecoder`` is the substrate: one model with an N-row decode cache
 and *per-row* positions, so requests at different sequence lengths share
@@ -17,9 +17,23 @@ three properties the serving layer builds on:
 
 Engine contract: per-request token streams are distributed exactly as the
 sequential engines (lossless; token-for-token identical under a greedy
-target).  Per-request verification/sampling runs host-side in float64 numpy
-(the repo's convention, runtime/sampling.py) with a per-request RNG, so a
-request's output is independent of which batch it rode in.
+target).  The inner loop is **device-resident** (DESIGN.md §7.7): every
+distribution — draft q, target p, residuals, branch posteriors — lives and
+is consumed on device through the jitted functions in serving/device_loop,
+and the host receives only small int32/f32 packets (sampled tokens,
+confidence signals, accept lengths, branch verdicts).  Uniform randomness
+comes from per-request folded PRNG keys indexed by a per-request decision
+counter, so a request's output is independent of which batch it rode in —
+the same batch-composition-independence contract the PR 1 host-side
+float64 numpy path provided (that path survives in runtime/sampling.py as
+the oracle for the sequential engines and the equivalence tests).
+
+Token widths are padded up a fixed bucket ladder (1/2/4/8/...), so H-RAD's
+adaptive chunk lengths never retrace the jitted step; and a SpecBranch
+round dispatches its target verification *before* running its draft ticks,
+so on an asynchronous-dispatch backend the drafting hides under the
+verification — the paper's branch parallelism realized at the dispatch
+layer.
 
 Cost accounting (Group SD, App. G.4): a round's draft steps are batched
 over rows and its target verify is ONE batched call, priced the same as a
@@ -58,17 +72,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hrad as H
+from repro.kernels.ops import _default_interpret as _ops_default_interpret
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel
 from repro.runtime.engines import EngineConfig, GenResult, GenStats
+from repro.serving import device_loop as DL
 from repro.serving.kv_pool import (PagedKVPool, PagedStore, PoolExhausted,
                                    PoolGroup)
 
 
 def _has_ssm(cfg: ModelConfig) -> bool:
     return any(m == "mamba" for m, _ in cfg.pattern)
+
+
+def _count_fetch(owner, arr) -> np.ndarray:
+    """THE device -> host gate of the serving layer: every byte that
+    crosses the boundary goes through here and lands in ``owner``'s
+    ``xfer_bytes``/``xfer_fetches`` tally (decoder or engine) — the
+    counters the metrics report and the CI transfer baseline compare."""
+    a = np.asarray(jax.device_get(arr))
+    owner.xfer_bytes += a.nbytes
+    owner.xfer_fetches += 1
+    return a
 
 
 # ---------------------------------------------------------------------------
@@ -80,9 +107,13 @@ class BatchedDecoder:
 
     The engine owns per-row logical lengths; the decoder is a thin compute
     wrapper: ``step`` runs one batched forward at caller-supplied per-row
-    start positions, ``prefill_row`` ingests a prompt into a fresh row via a
-    batch-1 forward scattered into the batched cache (no full-batch compute
-    at admission), ``copy_row`` implements branch forks.
+    start positions and returns DEVICE logits (nothing is fetched — the
+    device-resident loop consumes them in place), ``prefill_row`` ingests a
+    prompt into a fresh row via a batch-1 forward scattered into the
+    batched cache (no full-batch compute at admission), ``copy_row``
+    implements branch forks.  ``xfer_bytes`` counts every byte this decoder
+    moves device -> host (swap packing, ring snapshots) for the serving
+    transfer metrics.
 
     Two storage backends (DESIGN.md §7.5):
 
@@ -124,6 +155,7 @@ class BatchedDecoder:
         self.paged = paged
         # checkpoint-ring depth for mamba slots AND window slack for local
         # attention rings — both bound speculative overshoot per row
+        # (including bucket-ladder padding)
         self.ssm_ring = max(0, ssm_ring)
         self.free_rows: List[int] = list(range(n_rows - 1, -1, -1))
         # per-row write head: idle rows in a batched call park HERE, so
@@ -135,6 +167,8 @@ class BatchedDecoder:
         self.row_pos = np.zeros(n_rows, np.int64)
         self.n_calls = 0
         self.n_call_tokens = 0
+        self.xfer_bytes = 0
+        self.xfer_fetches = 0
 
         if paged is not None:
             self.cache = M.init_paged_cache(cfg, paged.num_pages,
@@ -221,6 +255,10 @@ class BatchedDecoder:
         self.swap_dim = sum(s[0] * int(np.prod(s[3:], dtype=np.int64))
                             for s in self._leaf_shapes)
 
+    def _fetch(self, arr) -> np.ndarray:
+        """The decoder's device -> host gate (swap packing, snapshots)."""
+        return _count_fetch(self, arr)
+
     # ------------------------------------------------------ paged plumbing
     def bind_row(self, row: int, key: Any) -> None:
         """Attach a pool stream to a decoder row (paged backend only):
@@ -258,10 +296,11 @@ class BatchedDecoder:
         return tab, lens
 
     # -------------------------------------------------------------- compute
-    def step(self, tokens: np.ndarray, pos: np.ndarray
-             ) -> Tuple[jax.Array, jax.Array]:
-        """Batched forward: tokens (n_rows, T), pos (n_rows,) start
-        positions.  Returns (logits (n_rows, T, V), feats)."""
+    def step(self, tokens, pos) -> Tuple[jax.Array, jax.Array]:
+        """Batched forward: tokens (n_rows, T) int32 (numpy OR device —
+        the device-resident loop chains sampled tokens straight back in),
+        pos (n_rows,) start positions.  Returns DEVICE (logits
+        (n_rows, T, V), feats); nothing crosses to the host."""
         assert tokens.shape[0] == self.n_rows
         if self.paged is not None:
             tab, lens = self._table_view()
@@ -274,14 +313,22 @@ class BatchedDecoder:
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(pos, jnp.int32))
         self.n_calls += 1
-        self.n_call_tokens += int(tokens.size)
+        self.n_call_tokens += int(np.prod(tokens.shape))
         return logits, feats
 
     def prefill_row(self, row: int, tokens: Sequence[int]
                     ) -> Tuple[jax.Array, jax.Array]:
         """Ingest ``tokens`` into a fresh row.  Returns (logits, feats) of
-        the batch-1 prefill call."""
+        the batch-1 prefill call — device arrays.
+
+        Prefill runs at the EXACT prompt length (one trace per distinct
+        length): the bucket ladder is a decode-step device, and its pad
+        overshoot budget (sliding-window ``ring_slack``, SSM ring depth)
+        only covers decode widths — padding a long prompt up a power of
+        two could wrap a local-attention ring or an SSM checkpoint ring
+        past live state."""
         assert len(tokens) >= 1
+        L = len(tokens)
         if self.paged is not None:
             # batch-1 forward writing straight into the shared paged
             # buffers (the pool was extended by the caller already)
@@ -298,9 +345,9 @@ class BatchedDecoder:
                 self.params, tmp, jnp.asarray([list(tokens)], jnp.int32),
                 jnp.zeros((1,), jnp.int32))
             self.cache = self._set_row(self.cache, tmp, jnp.int32(row))
-        self.row_pos[row] = len(tokens)
+        self.row_pos[row] = L
         self.n_calls += 1
-        self.n_call_tokens += len(tokens)
+        self.n_call_tokens += L
         return logits, feats
 
     def copy_row(self, src: int, dst: int) -> None:
@@ -316,27 +363,31 @@ class BatchedDecoder:
         """Flatten the first ``length`` KV slots of a row to (L, swap_dim)
         float32 token-rows (pos leaves are exact in f32 for max_len < 2^24).
 
+        The flatten/concat runs on device and the result crosses the
+        boundary in ONE transfer (the PR 1 path issued one device_get per
+        cache leaf).
+
         Paged backend: the rows are gathered page-by-page through the
         row's bound page table — no densified intermediate cache — so a
         preemption moves exactly the row's live pages (incl. a partial
         tail page, trimmed to ``length``)."""
         assert self.swappable
         if self.paged is not None:
-            table = np.asarray(self.paged.table(self.row_key[row]), np.int64)
+            table = jnp.asarray(
+                np.asarray(self.paged.table(self.row_key[row]), np.int64))
             parts = []
             for lf in jax.tree.leaves(self.cache):
-                pg = np.asarray(jax.device_get(lf[:, jnp.asarray(table)]))
+                pg = lf[:, table]
                 # (stack, n, ps, KV, hd) -> token-major (n*ps, stack*KV*hd)
-                tok = np.moveaxis(
+                tok = jnp.moveaxis(
                     pg.reshape(pg.shape[0], -1, *pg.shape[3:]), 1, 0)
                 parts.append(tok[:length].reshape(length, -1)
-                             .astype(np.float32))
-            return np.concatenate(parts, axis=1)
-        sub = jax.device_get(jax.tree.map(lambda a: a[:, row], self.cache))
-        parts = [np.moveaxis(np.asarray(lf)[:, :length], 1, 0)
-                 .reshape(length, -1).astype(np.float32)
-                 for lf in jax.tree.leaves(sub)]
-        return np.concatenate(parts, axis=1)
+                             .astype(jnp.float32))
+            return self._fetch(jnp.concatenate(parts, axis=1))
+        parts = [jnp.moveaxis(lf[:, row, :length], 1, 0)
+                 .reshape(length, -1).astype(jnp.float32)
+                 for lf in jax.tree.leaves(self.cache)]
+        return self._fetch(jnp.concatenate(parts, axis=1))
 
     def unpack_row(self, row: int, rows: np.ndarray) -> None:
         """Restore a row from packed token-rows (inverse of pack_row);
@@ -396,13 +447,34 @@ class BatchedDecoder:
         (one {h, conv} dict per mamba slot).  Symmetric to the paged
         table views: the serving engines never call this — every forward
         restores implicitly from its start position — but it pins the ring
-        contents for the rollback property tests."""
+        contents for the rollback property tests.
+
+        All slots are flattened and concatenated on device so the copy
+        crosses the boundary in ONE transfer (the PR 1 path issued one
+        device_get per slot per field)."""
         assert self.ssm_ring > 0, "snapshot needs a checkpoint-ring cache"
         s = step % self.ssm_ring
-        return [{"h": np.asarray(jax.device_get(c["h_ring"][:, row, s])),
-                 "conv": np.asarray(jax.device_get(
-                     c["conv_ring"][:, row, s]))}
-                for c in self._ssm_slots(self.cache)]
+        slots = self._ssm_slots(self.cache)
+        flat = jnp.concatenate(
+            [jnp.concatenate([c["h_ring"][:, row, s].reshape(-1)
+                              .astype(jnp.float32),
+                              c["conv_ring"][:, row, s].reshape(-1)
+                              .astype(jnp.float32)])
+             for c in slots])
+        buf = self._fetch(flat)
+        out, off = [], 0
+        for c in slots:
+            h_shape = ((c["h_ring"].shape[0],) + c["h_ring"].shape[3:])
+            c_shape = ((c["conv_ring"].shape[0],) + c["conv_ring"].shape[3:])
+            hn = int(np.prod(h_shape))
+            cn = int(np.prod(c_shape))
+            out.append({
+                "h": buf[off:off + hn].reshape(h_shape),
+                "conv": buf[off + hn:off + hn + cn].reshape(c_shape)
+                .astype(c["conv_ring"].dtype),
+            })
+            off += hn + cn
+        return out
 
     def restore(self, row: int, step: int,
                 snap: List[Dict[str, np.ndarray]]) -> None:
@@ -445,7 +517,7 @@ class _Seq:
     prompt: List[int]
     max_new: int
     on_token: Optional[Callable[[int, int, float], None]]
-    rng: np.random.Generator
+    ctr: int = 0                     # PRNG decision counter (folded key)
     tgt: _Stream = None
     dft: _Stream = None
     out: List[int] = dataclasses.field(default_factory=list)
@@ -454,11 +526,12 @@ class _Seq:
     admit_order: int = -1
     done: bool = False
     feats_last: Optional[jax.Array] = None   # (n_points, 1, D)
-    # SpecBranch carried state
+    # SpecBranch carried state — distributions stay on device
     mode: str = "draft"
     chunk: List[int] = dataclasses.field(default_factory=list)
-    chunk_q: List[np.ndarray] = dataclasses.field(default_factory=list)
-    q_b: Optional[np.ndarray] = None
+    chunk_q: List[jax.Array] = dataclasses.field(default_factory=list)
+    q_b: Optional[jax.Array] = None          # (V,) signal LOGITS, device
+    q_b_conf: float = 0.0                    # host copy of max signal prob
 
     @property
     def committed(self) -> int:
@@ -492,6 +565,24 @@ class BatchedEngineBase:
         self.max_batch = max_batch
         self.attn_backend = attn_backend
         self.debug_check = debug_check
+        # device-resident loop constants (DESIGN.md §7.7)
+        self._key = jax.random.PRNGKey(ecfg.seed & 0x7FFFFFFF)
+        self._tt = float(ecfg.temperature)
+        self._dt = float(ecfg.draft_temperature)
+        self._st = float(ecfg.signal_temperature)
+        # chunk pad width: a carried chunk is a serial draft (<= gamma) OR
+        # an adopted branch continuation (<= gamma_branch)
+        self._CH = DL.bucket(max(1, ecfg.gamma, ecfg.gamma_branch))
+        self._K = max(1, ecfg.k_max)
+        # fused verify route: the batched Pallas verify_accept kernel on
+        # TPU (pre-scaled logits), the compiled XLA twin elsewhere
+        self._use_kernel = DL.kernel_route(self._tt, self._dt)
+        self._kernel_interpret = _ops_default_interpret()
+        # uniform-window width one branch verify consumes per request:
+        # [0, CH] chain block + [CH+1, CH+1+K] branch block
+        self._W = self._CH + 1 + self._K + 1
+        self.xfer_bytes = 0
+        self.xfer_fetches = 0
         # split page-id spaces (DESIGN.md §7.6): target streams ("t", rid)
         # and draft streams ("d"/"b", ...) allocate from separate pools, so
         # each physically paged decoder sizes its buffers to ITS pages only
@@ -511,9 +602,11 @@ class BatchedEngineBase:
         }
         self.pool = PoolGroup(self.pools)      # aggregate metrics view
         # ring deep enough for one worst-case round of forward progress
-        # (pending + chunk + branch continuation + batch-pad margin) PLUS
-        # the rollback span back across it, with slack; ~KBs per row.
-        ssm_ring = 4 * (ecfg.gamma + ecfg.gamma_branch) + 16
+        # (pending + chunk + branch continuation + batch-pad margin,
+        # including bucket-ladder overshoot) PLUS the rollback span back
+        # across it, with slack; ~KBs per row.
+        ssm_ring = (4 * (ecfg.gamma + ecfg.gamma_branch)
+                    + 2 * DL.bucket(ecfg.gamma + 2) + 16)
         paged = attn_backend == "paged"
         self.tgt_dec = BatchedDecoder(target_params, target_cfg,
                                       n_rows=max_batch, max_len=ecfg.max_len,
@@ -539,7 +632,6 @@ class BatchedEngineBase:
         self.timeline: List[Tuple[str, int, int]] = []
         self.active: List[_Seq] = []
         self._admit_counter = 0
-        self._seed = ecfg.seed
 
     def _pool_of(self, key: Any) -> PagedKVPool:
         """Route a stream key to its id space: target streams ("t", rid)
@@ -547,29 +639,23 @@ class BatchedEngineBase:
         ("d", rid) / ("b", rid, i) in the draft pool."""
         return self.pools["t" if key[0] == "t" else "d"]
 
-    # --------------------------------------------------------- prob helpers
-    def _np_probs(self, logits_row: np.ndarray, temp: float) -> np.ndarray:
-        z = logits_row.astype(np.float64)
-        if temp == 0.0:
-            p = np.zeros_like(z)
-            p[int(z.argmax())] = 1.0
-            return p
-        z = z / temp
-        z -= z.max()
-        e = np.exp(z)
-        return e / e.sum()
+    # ------------------------------------------------------- host boundary
+    def _fetch(self, arr) -> np.ndarray:
+        """The engines' device -> host gate: small packets (tokens,
+        confidences, verdicts) — never logits."""
+        return _count_fetch(self, arr)
 
-    def _tprobs(self, row): return self._np_probs(row, self.ecfg.temperature)
+    @property
+    def host_transfer_bytes(self) -> int:
+        """Total device -> host bytes this engine has moved (packets +
+        swap packing + ring snapshots)."""
+        return (self.xfer_bytes + self.tgt_dec.xfer_bytes
+                + self.dft_dec.xfer_bytes)
 
-    def _qprobs(self, row):
-        return self._np_probs(row, self.ecfg.draft_temperature)
-
-    def _qsig(self, row):
-        return self._np_probs(row, self.ecfg.signal_temperature)
-
-    @staticmethod
-    def _sample(rng: np.random.Generator, probs: np.ndarray) -> int:
-        return S._np_categorical(rng.random(), probs)
+    @property
+    def host_fetches(self) -> int:
+        return (self.xfer_fetches + self.tgt_dec.xfer_fetches
+                + self.dft_dec.xfer_fetches)
 
     # ------------------------------------------------------------ H-RAD
     def _embed_of(self, token: int) -> jax.Array:
@@ -581,20 +667,22 @@ class BatchedEngineBase:
             return 1
         z = H.build_feature(seq.feats_last, self._embed_of(token),
                             self.ecfg.hrad_k_layers)
-        s = int(jax.device_get(H.predict(self.hrad_params, z)[0]))
+        s = int(self._fetch(H.predict(self.hrad_params, z))[0])
         seq.stats.hrad_signals.append(s)
         return s
 
     # ---------------------------------------------------------- batched fwd
     def _batched(self, dec: BatchedDecoder,
                  parts: List[Tuple[int, List[int], int]]
-                 ) -> Tuple[np.ndarray, jax.Array]:
-        """One batched forward.  parts: (row, real_tokens, start_pos).
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """One batched forward with host-staged tokens.  parts: (row,
+        real_tokens, start_pos).  The token width is padded up the bucket
+        ladder so ragged chunk lengths hit a handful of compiled shapes.
         Rows not listed tick in place at their own write head: their pad
         writes land on the slot their next real write will overwrite, and
-        stay causally masked until then.  Returns (logits as float numpy
+        stay causally masked until then.  Returns DEVICE (logits
         (B, T, V), feats)."""
-        T = max(len(t) for _, t, _ in parts)
+        T = DL.bucket(max(len(t) for _, t, _ in parts))
         toks = np.zeros((dec.n_rows, T), np.int32)
         pos = np.minimum(dec.row_pos, dec.max_len - T).astype(np.int32)
         # ^ free rows only: live rows are guaranteed max_len headroom at
@@ -610,11 +698,11 @@ class BatchedEngineBase:
         logits, feats = dec.step(toks, pos)
         for row, t, p0 in parts:
             dec.row_pos[row] = p0 + len(t)
-        return np.asarray(jax.device_get(logits)), feats
+        return logits, feats
 
     def _ingest(self, dec: BatchedDecoder,
                 triples: List[Tuple[_Stream, Any, List[int]]]
-                ) -> Tuple[np.ndarray, jax.Array]:
+                ) -> Tuple[jax.Array, jax.Array]:
         """Batched ingest of per-stream token lists + pool accounting."""
         for st, pool_key, toks in triples:
             self._pool_of(pool_key).extend(pool_key, len(toks))
@@ -623,6 +711,30 @@ class BatchedEngineBase:
         for st, _, toks in triples:
             st.ing += len(toks)
         return out
+
+    def _ingest_dev(self, dec: BatchedDecoder,
+                    pairs: List[Tuple[_Stream, Any]],
+                    tokens_by_row: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Single-token batched ingest with DEVICE tokens: each listed
+        stream consumes tokens_by_row[stream.row] straight from the
+        previous tick's sample — the sampled ids never visit the host.
+        Unlisted rows park at their write head (token id 0, causally
+        masked)."""
+        mask = np.zeros(dec.n_rows, bool)
+        pos = np.minimum(dec.row_pos, dec.max_len - 1).astype(np.int32)
+        for st, pool_key in pairs:
+            self._pool_of(pool_key).extend(pool_key, 1)
+            if st.ing + 1 > dec.max_len:
+                raise RuntimeError(
+                    f"row {st.row} overflows max_len={dec.max_len}")
+            mask[st.row] = True
+            pos[st.row] = st.ing
+        col = DL.masked_token_column(tokens_by_row, jnp.asarray(mask))
+        logits, feats = dec.step(col, pos)
+        for st, _ in pairs:
+            st.ing += 1
+            dec.row_pos[st.row] = st.ing
+        return logits, feats
 
     # ----------------------------------------------------------- admission
     def _pool_keys(self, rid: int) -> Tuple[Any, Any]:
@@ -636,9 +748,10 @@ class BatchedEngineBase:
     def _max_len_headroom(self) -> int:
         """Worst-case tokens a live row can hold beyond prompt + max_new:
         one round of overshoot (chunk/bonus) plus a branch continuation
-        plus pad margin — rows must never come within a batched call's
-        padding of max_len (see _batched)."""
-        return 2 * (self.ecfg.gamma + self.ecfg.gamma_branch + 4)
+        plus bucket-ladder and batch-pad margin — rows must never come
+        within a batched call's padding of max_len (see _batched)."""
+        return 2 * (DL.bucket(self.ecfg.gamma + 2)
+                    + DL.bucket(self.ecfg.gamma_branch + 2) + 4)
 
     def can_admit(self, prompt_len: int, max_new: int = 0) -> bool:
         if not self.tgt_dec.free_rows or len(self.active) >= self.max_batch:
@@ -678,9 +791,7 @@ class BatchedEngineBase:
             seq = meta["seq"]
         else:
             seq = _Seq(rid=rid, prompt=list(prompt), max_new=max_new,
-                       on_token=on_token,
-                       rng=np.random.default_rng(
-                           (self._seed * 1_000_003 + rid) & 0x7FFFFFFF))
+                       on_token=on_token)
         toks = seq.prompt + seq.out
         assert len(toks) >= 2, "need a prompt of >= 2 tokens"
         L = len(toks) - 1
@@ -707,7 +818,7 @@ class BatchedEngineBase:
             seq.feats_last = meta["feats_last"]
         else:
             _, feats = self.tgt_dec.prefill_row(t_row, toks[:-1])
-            seq.feats_last = feats[:, 0:1, -1, :]
+            seq.feats_last = feats[:, 0:1, L - 1, :]
             seq.stats.target_calls += 1      # swap restore runs no prefill
         self.dft_dec.prefill_row(d_row, toks[:-1])
         seq.tgt = _Stream(row=t_row, ing=L, pending=[toks[-1]])
@@ -828,6 +939,20 @@ class BatchedEngineBase:
             self.pool.check()
         return self.clock
 
+    # ----------------------------------------------- by-row lane staging
+    def _by_row(self, dec: BatchedDecoder, seqs: List[_Seq],
+                row_of: Callable[[_Seq], int]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """(rids, ctrs) by decoder row for the tick functions; rows not
+        owned by a listed request keep (0, 0) — their lanes compute
+        garbage the host ignores."""
+        rids = np.zeros(dec.n_rows, np.int32)
+        ctrs = np.zeros(dec.n_rows, np.int32)
+        for s in seqs:
+            rids[row_of(s)] = s.rid
+            ctrs[row_of(s)] = s.ctr
+        return rids, ctrs
+
 
 # ---------------------------------------------------------------------------
 # batched SpS
@@ -835,7 +960,10 @@ class BatchedEngineBase:
 
 class BatchedSpSEngine(BatchedEngineBase):
     """Vanilla speculative decoding, continuous-batched: gamma batched
-    draft steps then one batched target verification per round."""
+    draft steps then one batched target verification per round — all
+    device-resident.  Draft tokens chain from tick to tick as device
+    arrays (the host never sees them mid-round); the round's only fetch is
+    the (S, 3 + gamma) verdict packet."""
     name = "batched-sps"
 
     def step_round(self) -> Dict[str, Any]:
@@ -855,62 +983,104 @@ class BatchedSpSEngine(BatchedEngineBase):
         preempted = self._make_room(seqs, fits)
         if not seqs:
             return {"committed": {}, "preempted": preempted}
+        n_d = self.dft_dec.n_rows
+        B = self.max_batch
 
-        # ---- draft stage: batched pending ingest + gamma sampling steps
+        # ---- draft stage: batched pending ingest + gamma sampling ticks,
+        # sampled ids chained on device tick to tick
         lg, _ = self._ingest(
             self.dft_dec,
             [(s.dft, ("d", s.rid), list(s.dft.pending)) for s in seqs])
         # pending lengths differ (1 after a reject, 2 after an all-accept):
         # read each row's logits at its REAL last token, not the pad
-        last = {s.rid: len(s.dft.pending) - 1 for s in seqs}
+        last = np.zeros(n_d, np.int32)
         for s in seqs:
+            last[s.dft.row] = len(s.dft.pending) - 1
             s.dft.pending = []
-        drafted: Dict[int, List[int]] = {s.rid: [] for s in seqs}
-        qstk: Dict[int, List[np.ndarray]] = {s.rid: [] for s in seqs}
+        tok_ticks, q_ticks = [], []
         for i in range(g):
+            rids, ctrs = self._by_row(self.dft_dec, seqs,
+                                      lambda s: s.dft.row)
+            toks, qsl, _ = DL.tick_sample(lg, jnp.asarray(last),
+                                          jnp.asarray(rids),
+                                          jnp.asarray(ctrs), self._key,
+                                          dtemp=self._dt, stemp=self._st)
+            tok_ticks.append(toks)
+            q_ticks.append(qsl)
             for s in seqs:
-                q = self._qprobs(lg[s.dft.row, last[s.rid]])
-                tok = self._sample(s.rng, q)
-                drafted[s.rid].append(tok)
-                qstk[s.rid].append(q)
+                s.ctr += 1
                 s.stats.draft_tokens += 1
             if i < g - 1:
-                lg, _ = self._ingest(
+                lg, _ = self._ingest_dev(
                     self.dft_dec,
-                    [(s.dft, ("d", s.rid), [drafted[s.rid][-1]])
-                     for s in seqs])
-                last = {s.rid: 0 for s in seqs}
+                    [(s.dft, ("d", s.rid)) for s in seqs], toks)
+                last[:] = 0
+        tok_stack = jnp.stack(tok_ticks)          # (g, n_d) device
+        q_stack = jnp.stack(q_ticks)              # (g, n_d, V) device
 
-        # ---- verify stage: ONE batched target call for the whole batch
+        # ---- verify stage: ONE batched target call + fused device verdict
         pends = {s.rid: list(s.tgt.pending) for s in seqs}
-        tlg, feats = self._ingest(
-            self.tgt_dec,
-            [(s.tgt, ("t", s.rid), s.tgt.pending + drafted[s.rid])
-             for s in seqs])
+        npend = np.zeros(B, np.int32)
+        pend_arr = np.zeros((B, 2), np.int32)
+        trows = np.full(B, self.tgt_dec.n_rows, np.int32)  # OOB = pad lane
+        drows = np.zeros(B, np.int32)
+        rid_l = np.zeros(B, np.int32)
+        ctr_l = np.zeros(B, np.int32)
+        for i, s in enumerate(seqs):
+            p = pends[s.rid]
+            npend[i] = len(p)
+            pend_arr[i, :len(p)] = p
+            trows[i] = s.tgt.row
+            drows[i] = s.dft.row
+            rid_l[i] = s.rid
+            ctr_l[i] = s.ctr
+        Tb = DL.bucket(int(npend.max()) + g)
+        toks_full = DL.compose_verify_tokens(
+            jnp.asarray(pend_arr), jnp.asarray(npend), tok_stack,
+            jnp.asarray(drows), jnp.asarray(trows),
+            n_rows=self.tgt_dec.n_rows, Tb=Tb)
+        # staging mirrors _ingest/_batched for a device-composed token
+        # frame: pool-extend by the REAL count, overflow-check the PADDED
+        # width (same `p0 + T` rule _batched applies)
+        pos = np.minimum(self.tgt_dec.row_pos,
+                         self.tgt_dec.max_len - Tb).astype(np.int32)
+        for s in seqs:
+            self.pools["t"].extend(("t", s.rid),
+                                   len(pends[s.rid]) + g)
+            if s.tgt.ing + Tb > self.tgt_dec.max_len:
+                raise RuntimeError(
+                    f"row {s.tgt.row} overflows max_len")
+            pos[s.tgt.row] = s.tgt.ing
+        tlg, feats = self.tgt_dec.step(toks_full, pos)
+        for s in seqs:
+            s.tgt.ing += len(pends[s.rid]) + g
+            self.tgt_dec.row_pos[s.tgt.row] = s.tgt.ing
+        packet_dev = DL.sps_verify(
+            tlg, q_stack, tok_stack, jnp.asarray(trows), jnp.asarray(drows),
+            jnp.asarray(npend), jnp.asarray(rid_l), jnp.asarray(ctr_l),
+            self._key, g=g, ttemp=self._tt, dtemp=self._dt,
+            kernel=self._use_kernel, interpret=self._kernel_interpret)
+        for s in seqs:
+            s.ctr += g + 1
+        pk = self._fetch(packet_dev)       # the round's ONLY host fetch
         now = self.clock + self.cost.round_cost(("serial", g, 1))
         committed: Dict[int, int] = {}
-        for s in seqs:
-            npend = len(pends[s.rid])
-            row = tlg[s.tgt.row]
-            dr = drafted[s.rid]
+        for i, s in enumerate(seqs):
+            n, nxt, all_acc = int(pk[i, 0]), int(pk[i, 1]), bool(pk[i, 2])
+            dr = [int(x) for x in pk[i, 3:3 + g]]
+            npend_i = len(pends[s.rid])
             before = min(len(s.out), s.max_new)
-            p_stack = np.stack([self._tprobs(row[npend - 1 + j])
-                                for j in range(g)])
-            bonus = self._tprobs(row[npend + g - 1])
             s.stats.target_calls += 1
             s.feats_last = feats[:, s.tgt.row:s.tgt.row + 1,
-                                 npend + g - 1, :]
-            v = S.verify_chain_np(s.rng.random(g + 1), p_stack,
-                                  np.stack(qstk[s.rid]), dr, bonus)
+                                 npend_i + g - 1, :]
             s.tgt.pending = []
-            if v.all_accepted:
-                self._commit(s, dr + [v.next_token], now)
+            if all_acc:
+                self._commit(s, dr + [nxt], now)
                 s.stats.run_extend(g + 1)
-                s.tgt.pending = [v.next_token]
-                s.dft.pending = [dr[-1], v.next_token]
+                s.tgt.pending = [nxt]
+                s.dft.pending = [dr[-1], nxt]
             else:
-                n = v.n_accepted
-                self._commit(s, dr[:n] + [v.next_token], now)
+                self._commit(s, dr[:n] + [nxt], now)
                 s.stats.run_extend(n)
                 s.stats.run_break()
                 s.stats.rollback_tokens += g - n
@@ -926,15 +1096,20 @@ class BatchedSpSEngine(BatchedEngineBase):
 
 @dataclasses.dataclass
 class _BranchSet:
-    """Per-request branch-stage working set, alive within one round."""
+    """Per-request branch-stage working set, alive within one round.
+    Token ids and confidences are host ints/floats (from the per-tick
+    packets); distributions stay device logits slices.  ``cont_q`` holds
+    the RAW logits per continuation position — draft and signal
+    temperatures are applied downstream, so one list serves both the
+    chunk_q adoption and the q_b signal reads."""
     cands: np.ndarray                        # (k,)
     streams: List[_Stream] = dataclasses.field(default_factory=list)
     conts: List[List[int]] = dataclasses.field(default_factory=list)
-    cont_q: List[List[np.ndarray]] = dataclasses.field(default_factory=list)
-    cont_sig: List[List[np.ndarray]] = dataclasses.field(default_factory=list)
+    cont_q: List[List[jax.Array]] = dataclasses.field(default_factory=list)
     confs: List[List[float]] = dataclasses.field(default_factory=list)
-    final_sig: List[Optional[np.ndarray]] = dataclasses.field(
+    final_sig: List[Optional[jax.Array]] = dataclasses.field(
         default_factory=list)
+    final_conf: List[float] = dataclasses.field(default_factory=list)
 
 
 class BatchedSpecBranchEngine(BatchedEngineBase):
@@ -944,9 +1119,17 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
     engine's state machine (runtime/specbranch.py): DRAFT-mode requests
     serial-draft their chunk, BRANCH-mode requests fork k branch rows and
     draft continuations — all draft work rides the same batched single-token
-    steps — and one batched target call verifies every BRANCH-mode chunk.
+    ticks — and one batched target call verifies every BRANCH-mode chunk.
     Requests in DRAFT mode simply skip the verify (their draft work is
     hidden under the other requests' verification, the Group-SD overlap).
+
+    The target verification is DISPATCHED before the draft ticks run (the
+    chunk under verification was drafted last round, so its tokens are
+    already host-resident): on an async-dispatch backend the device chews
+    the target forward + fused verdict while the host drives the draft
+    ticks — the branch-parallel overlap of Sec. 5 realized at the dispatch
+    layer.  The verdict packet ((S, 5) int32) is fetched only after the
+    draft phase.
 
     Branch forks are row copies in the reference decoder, but page-table
     COW shares in the pool: the fork itself allocates zero pages and each
@@ -962,17 +1145,11 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         super().__init__(*args, **kw)
 
     # ------------------------------------------------------------- helpers
-    def _branch_k(self, q_b: np.ndarray) -> int:
+    def _branch_k(self, seq: _Seq) -> int:
         if not self.ecfg.use_branch:
             return 1
         return min(self.ecfg.k_max,
-                   S.adaptive_k(float(q_b.max()), self.ecfg.k_max))
-
-    def _draw_cands(self, seq: _Seq, k: int) -> np.ndarray:
-        if self.ecfg.branch_mode == "topk":
-            return np.argsort(seq.q_b)[::-1][:k].astype(np.int64)
-        return np.asarray([self._sample(seq.rng, seq.q_b)
-                           for _ in range(k)], np.int64)
+                   S.adaptive_k(seq.q_b_conf, self.ecfg.k_max))
 
     def _bkey(self, rid: int, i: int):
         return ("b", rid, i)
@@ -992,6 +1169,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         if not seqs:
             return {"committed": {}, "preempted": []}
         g, gb = self.ecfg.gamma, self.ecfg.gamma_branch
+        K, CH = self._K, self._CH
 
         # has_room can't price not-yet-forked branch streams; count their
         # worst case (suffix pages + one COW tail copy each) by hand.
@@ -1002,7 +1180,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 if s.mode == "draft":
                     d_ups.append((("d", s.rid), len(s.dft.pending) + g))
                 else:
-                    k = self._branch_k(s.q_b)
+                    k = self._branch_k(s)
                     dlen = pd.length(("d", s.rid))
                     per = (pd.pages_for(dlen + 1 + gb)
                            - pd.pages_for(dlen) + 1)
@@ -1016,8 +1194,93 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
 
         serial = [s for s in seqs if s.mode == "draft"]
         branchers = [s for s in seqs if s.mode == "branch"]
+        B = self.max_batch
+        n_d = self.dft_dec.n_rows
 
-        # ---- PHASE A: all draft-model work, interleaved batched steps ----
+        # ---- dispatch the branch-stage verification FIRST: the chunks
+        # under verification were drafted last round, so the target
+        # forward + fused verdict can overlap the draft ticks below
+        # (JAX async dispatch — the paper's draft/verify parallelism).
+        bsets: Dict[int, _BranchSet] = {}
+        packet_dev = None
+        tfeats = None
+        pends: Dict[int, List[int]] = {}
+        ks: Dict[int, int] = {}
+        if branchers:
+            zero_v = jnp.zeros((self.dcfg.vocab_size,), jnp.float32)
+            qb_rows = [s.q_b for s in branchers]
+            qb_stack = jnp.stack(qb_rows
+                                 + [zero_v] * (B - len(branchers)))
+            rid_l = np.zeros(B, np.int32)
+            ctr_l = np.zeros(B, np.int32)
+            for i, s in enumerate(branchers):
+                rid_l[i] = s.rid
+                ctr_l[i] = s.ctr
+                ks[s.rid] = self._branch_k(s)
+            cands = self._fetch(DL.draw_cands(
+                qb_stack, jnp.asarray(rid_l), jnp.asarray(ctr_l),
+                self._key, K=K, stemp=self._st,
+                mode=self.ecfg.branch_mode))
+            if self.ecfg.branch_mode != "topk":
+                for s in branchers:
+                    s.ctr += ks[s.rid]
+            for i, s in enumerate(branchers):
+                bset = _BranchSet(cands=cands[i, :ks[s.rid]].astype(np.int64))
+                for bi in range(ks[s.rid]):
+                    row = self.dft_dec.free_rows.pop()
+                    self.dft_dec.copy_row(s.dft.row, row)
+                    self.pools["d"].fork(("d", s.rid), self._bkey(s.rid, bi))
+                    self.dft_dec.bind_row(row, self._bkey(s.rid, bi))
+                    bset.streams.append(_Stream(row=row, ing=s.dft.ing))
+                    bset.conts.append([])
+                    bset.cont_q.append([])
+                    bset.confs.append([])
+                    bset.final_sig.append(None)
+                    bset.final_conf.append(0.0)
+                bsets[s.rid] = bset
+            pends = {s.rid: list(s.tgt.pending) for s in branchers}
+            tlg, tfeats = self._ingest(
+                self.tgt_dec,
+                [(s.tgt, ("t", s.rid), s.tgt.pending + s.chunk)
+                 for s in branchers])
+            # fused chain + branch verdict (device); packet fetched after
+            # the draft phase
+            npend_l = np.zeros(B, np.int32)
+            gch_l = np.zeros(B, np.int32)
+            ks_l = np.ones(B, np.int32)
+            trows = np.full(B, self.tgt_dec.n_rows, np.int32)  # OOB pad
+            ctr_v = np.zeros(B, np.int32)
+            cq_rows, ct_rows = [], []
+            zero_q = jnp.zeros((CH, self.dcfg.vocab_size), jnp.float32)
+            for i, s in enumerate(branchers):
+                npend_l[i] = len(pends[s.rid])
+                gch_l[i] = len(s.chunk)
+                ks_l[i] = ks[s.rid]
+                trows[i] = s.tgt.row
+                ctr_v[i] = s.ctr
+                if s.chunk_q:
+                    cq = jnp.stack(list(s.chunk_q)
+                                   + [s.chunk_q[-1]] * (CH - len(s.chunk_q)))
+                else:
+                    cq = zero_q
+                cq_rows.append(cq)
+                ct = np.zeros(CH, np.int32)
+                ct[:len(s.chunk)] = s.chunk
+                ct_rows.append(ct)
+            cq_rows += [zero_q] * (B - len(branchers))
+            ct_rows += [np.zeros(CH, np.int32)] * (B - len(branchers))
+            packet_dev = DL.branch_verify(
+                tlg, jnp.asarray(trows), jnp.asarray(npend_l),
+                jnp.asarray(gch_l), jnp.stack(cq_rows),
+                jnp.asarray(np.stack(ct_rows)), jnp.asarray(cands),
+                jnp.asarray(ks_l), qb_stack, jnp.asarray(rid_l),
+                jnp.asarray(ctr_v), self._key, CH=CH, K=K,
+                ttemp=self._tt, dtemp=self._dt, stemp=self._st,
+                kernel=self._use_kernel, interpret=self._kernel_interpret)
+            for s in branchers:
+                s.ctr += self._W
+
+        # ---- PHASE A: all draft-model work, interleaved batched ticks ----
         # H-RAD prior signal decides each DRAFT-mode request's stop rule.
         sig: Dict[int, int] = {}
         for s in serial:
@@ -1025,23 +1288,6 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             sig[s.rid] = (self._hrad_signal(s, e_tok)
                           if self.ecfg.use_hrad else 1)
             s.chunk, s.chunk_q = [], []
-
-        bsets: Dict[int, _BranchSet] = {}
-        for s in branchers:
-            k = self._branch_k(s.q_b)
-            bset = _BranchSet(cands=self._draw_cands(s, k))
-            for i in range(k):
-                row = self.dft_dec.free_rows.pop()
-                self.dft_dec.copy_row(s.dft.row, row)
-                self.pools["d"].fork(("d", s.rid), self._bkey(s.rid, i))
-                self.dft_dec.bind_row(row, self._bkey(s.rid, i))
-                bset.streams.append(_Stream(row=row, ing=s.dft.ing))
-                bset.conts.append([])
-                bset.cont_q.append([])
-                bset.cont_sig.append([])
-                bset.confs.append([])
-                bset.final_sig.append(None)
-            bsets[s.rid] = bset
 
         # tick 0: serial rows ingest pending; branch rows ingest candidates
         triples = []
@@ -1055,84 +1301,96 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                                 [int(bset.cands[i])]))
             s.stats.draft_tokens += 1      # batched candidate ingest step
         lg, _ = self._ingest(self.dft_dec, triples)
+        last = np.zeros(n_d, np.int32)
+        for st, _, toks in triples:
+            last[st.row] = len(toks) - 1
         ticks = 1
 
         serial_live = {s.rid: True for s in serial}
         branch_j = {s.rid: 0 for s in branchers}
         while True:
-            triples = []
-            # serial chunks: read -> stop? -> sample -> ingest
-            for s in serial:
-                if not serial_live[s.rid]:
-                    continue
-                row = lg[s.dft.row, -1]
-                q = self._qprobs(row)
-                q_s = self._qsig(row)
+            # which rows need a read this tick?
+            readers = [s for s in serial if serial_live[s.rid]]
+            br_read = [s for s in branchers if branch_j[s.rid] <= gb]
+            if not readers and not br_read:
+                break
+            rids = np.zeros(n_d, np.int32)
+            ctrs = np.zeros(n_d, np.int32)
+            for s in readers:
+                rids[s.dft.row] = s.rid
+                ctrs[s.dft.row] = s.ctr
+            for s in br_read:
+                for i, st in enumerate(bsets[s.rid].streams):
+                    rids[st.row] = s.rid
+                    # branch lane i draws uniform (rid, ctr + i): the
+                    # request's counter advances by its OWN k per tick
+                    ctrs[st.row] = s.ctr + i
+            toks_dev, qsl, packed = DL.tick_sample(
+                lg, jnp.asarray(last), jnp.asarray(rids), jnp.asarray(ctrs),
+                self._key, dtemp=self._dt, stemp=self._st)
+            pkt = self._fetch(packed)           # (n_d, 2) f32 — tiny
+            ingest_pairs = []
+            mask_any = False
+            # serial chunks: read -> stop? -> keep sample -> ingest
+            for s in readers:
+                row = s.dft.row
+                conf = float(pkt[row, 1])
                 stop = False
                 if sig[s.rid] == 0:
                     stop = True
-                elif sig[s.rid] == 1 and q_s.max() < self.ecfg.epsilon:
+                elif sig[s.rid] == 1 and conf < self.ecfg.epsilon:
                     stop = True
                 elif len(s.chunk) >= g:
                     stop = True
                 if stop:
-                    s.q_b = q_s
+                    s.q_b = qsl[row]
+                    s.q_b_conf = conf
                     s.stats.draft_tokens += len(s.chunk) + 1
                     serial_live[s.rid] = False
                     continue
-                tok = self._sample(s.rng, q)
-                s.chunk.append(tok)
-                s.chunk_q.append(q)
-                triples.append((s.dft, ("d", s.rid), [tok]))
-            # branch continuations: read -> record -> sample -> ingest
-            for s in branchers:
+                s.chunk.append(int(pkt[row, 0]))
+                s.chunk_q.append(qsl[row])
+                s.ctr += 1
+                ingest_pairs.append((s.dft, ("d", s.rid)))
+                mask_any = True
+            # branch continuations: read -> record -> ingest
+            for s in br_read:
                 j = branch_j[s.rid]
-                if j >= gb + 1:
-                    continue
                 bset = bsets[s.rid]
                 if j == gb:
                     for i, st in enumerate(bset.streams):
-                        bset.final_sig[i] = self._qsig(lg[st.row, -1])
+                        bset.final_sig[i] = qsl[st.row]
+                        bset.final_conf[i] = float(pkt[st.row, 1])
                     branch_j[s.rid] = gb + 1
                     continue
                 for i, st in enumerate(bset.streams):
-                    row = lg[st.row, -1]
-                    q = self._qprobs(row)
-                    q_s = self._qsig(row)
-                    tok = self._sample(s.rng, q)
-                    bset.conts[i].append(tok)
-                    bset.cont_q[i].append(q)
-                    bset.cont_sig[i].append(q_s)
-                    bset.confs[i].append(float(q_s.max()))
-                    triples.append((st, self._bkey(s.rid, i), [tok]))
+                    row = st.row
+                    bset.conts[i].append(int(pkt[row, 0]))
+                    bset.cont_q[i].append(qsl[row])
+                    bset.confs[i].append(float(pkt[row, 1]))
+                    ingest_pairs.append((st, self._bkey(s.rid, i)))
+                    mask_any = True
                 s.stats.draft_tokens += 1
+                s.ctr += len(bset.streams)
                 branch_j[s.rid] = j + 1
-            if not triples:
-                break
-            lg, _ = self._ingest(self.dft_dec, triples)
+            if not mask_any:
+                continue
+            lg, _ = self._ingest_dev(self.dft_dec, ingest_pairs, toks_dev)
+            last[:] = 0
             ticks += 1
-        for s in serial:
-            if serial_live[s.rid]:       # ended exactly on the last ingest
-                s.q_b = self._qsig(lg[s.dft.row, -1])
-                s.stats.draft_tokens += len(s.chunk) + 1
-                serial_live[s.rid] = False
 
-        # ---- PHASE B: one batched target call verifies all chunks ----
+        # ---- PHASE B: fetch the verdict packet, commit per brancher ----
         committed: Dict[int, int] = {}
         n_target = 1 if branchers else 0
         kind = "parallel" if (branchers and self.ecfg.use_branch) \
             else "serial"
         now = self.clock + self.cost.round_cost((kind, ticks, n_target))
         if branchers:
-            pends = {s.rid: list(s.tgt.pending) for s in branchers}
-            tlg, feats = self._ingest(
-                self.tgt_dec,
-                [(s.tgt, ("t", s.rid), s.tgt.pending + s.chunk)
-                 for s in branchers])
-            for s in branchers:
+            pk = self._fetch(packet_dev)
+            for i, s in enumerate(branchers):
                 s.tgt.pending = []
                 before = min(len(s.out), s.max_new)
-                self._branch_verdict(s, bsets[s.rid], tlg, feats,
+                self._branch_verdict(s, bsets[s.rid], pk[i], tfeats,
                                      len(pends[s.rid]), now)
                 committed[s.rid] = min(len(s.out), s.max_new) - before
         for s in serial:
@@ -1140,41 +1398,33 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         self._finish_round(kind, ticks, n_target)
         return {"committed": committed, "preempted": preempted}
 
-    # ----------------------------------------------------- verdict (host)
-    def _branch_verdict(self, s: _Seq, bset: _BranchSet, tlg, feats,
+    # --------------------------------------------------- verdict (packet)
+    def _branch_verdict(self, s: _Seq, bset: _BranchSet, pk_row, feats,
                         npend: int, now: float) -> None:
+        """Commit/rollback bookkeeping from the (5,) int32 verdict packet
+        [n_acc, chain_next, all_acc, accepted_branch, branch_token] — the
+        distributions that produced it never left the device."""
         gb = self.ecfg.gamma_branch
         gchunk = len(s.chunk)
-        row = tlg[s.tgt.row]
+        n_acc, chain_next, all_acc, acc_b, tok_bd = (int(x) for x in pk_row)
         s.stats.target_calls += 1
-        p_stack = (np.stack([self._tprobs(row[npend - 1 + j])
-                             for j in range(gchunk)])
-                   if gchunk else np.zeros((0, row.shape[-1])))
-        p_b = self._tprobs(row[npend + gchunk - 1])
         s.feats_last = feats[:, s.tgt.row:s.tgt.row + 1,
                              npend + gchunk - 1, :]
-        q_stack = (np.stack(s.chunk_q) if s.chunk_q
-                   else np.zeros((0, row.shape[-1])))
-        v = S.verify_chain_np(s.rng.random(gchunk + 1), p_stack, q_stack,
-                              s.chunk, None)
 
-        if not v.all_accepted:
+        if not all_acc:
             # mid-chunk rejection: every branch is doomed (Fig. 1a)
-            n = v.n_accepted
-            self._commit(s, s.chunk[:n] + [v.next_token], now)
-            s.stats.run_extend(n)
+            self._commit(s, s.chunk[:n_acc] + [chain_next], now)
+            s.stats.run_extend(n_acc)
             s.stats.run_break()
-            s.stats.rollback_tokens += (gchunk - n) + gb
+            s.stats.rollback_tokens += (gchunk - n_acc) + gb
             self._free_branches(s, bset, "rollback")
             self._rollback_streams(s)
             s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
             return
 
-        bv = S.branch_spec_sample_np(s.rng.random(len(bset.cands) + 1),
-                                     p_b, bset.cands, s.q_b)
-        if bv.accepted_branch < 0:
+        if acc_b < 0:
             # no branch survives: emit the residual, drop continuations
-            self._commit(s, s.chunk + [bv.token], now)
+            self._commit(s, s.chunk + [tok_bd], now)
             s.stats.run_extend(gchunk)
             s.stats.run_break()
             s.stats.rollback_tokens += gb
@@ -1183,8 +1433,8 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
             return
 
-        i = bv.accepted_branch
-        tok_b = bv.token
+        i = acc_b
+        tok_b = tok_bd
         self._commit(s, s.chunk + [tok_b], now)
         s.stats.run_extend(gchunk + 1)
         s.tgt.pending = [tok_b]
@@ -1202,14 +1452,16 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         # posterior H-RAD on THIS verification's features (Sec. 5.2)
         sgn = (self._hrad_signal(s, tok_b) if self.ecfg.use_hrad else 1)
         cont, q_i = bset.conts[i], bset.cont_q[i]
-        sig_i, confs = bset.cont_sig[i], bset.confs[i]
+        confs = bset.confs[i]
         if sgn == 2:
             s.chunk, s.chunk_q = list(cont), list(q_i)
             s.q_b = bset.final_sig[i]
+            s.q_b_conf = bset.final_conf[i]
         elif sgn == 0:
             # prune the whole continuation; branch at its first token
             s.chunk, s.chunk_q = [], []
-            s.q_b = sig_i[0]
+            s.q_b = q_i[0]
+            s.q_b_conf = confs[0]
             s.stats.pruned_tokens += gb
             self._prune_draft(s, s.committed)
         else:
@@ -1218,9 +1470,11 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             if j == gb:
                 s.chunk, s.chunk_q = list(cont), list(q_i)
                 s.q_b = bset.final_sig[i]
+                s.q_b_conf = bset.final_conf[i]
             else:
                 s.chunk, s.chunk_q = list(cont[:j]), list(q_i[:j])
-                s.q_b = sig_i[j]
+                s.q_b = q_i[j]
+                s.q_b_conf = confs[j]
                 s.stats.pruned_tokens += gb - j
                 self._prune_draft(s, s.committed + j)
         s.mode = "branch"

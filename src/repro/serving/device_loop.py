@@ -1,0 +1,268 @@
+"""Device-resident inner loop for the batched serving engines
+(DESIGN.md §7.7).
+
+The PR 1 engines serialized every decode step through the host: each
+batched forward ended in a ``jax.device_get`` of the full (B, T, V) logits
+and verification/residual sampling ran in float64 numpy per row, so draft,
+target and verdict could never overlap and the logits transfer alone
+dwarfed the verify FLOPs.  This module is the replacement: a small set of
+jitted, shape-stable functions that keep every distribution on device and
+hand the host only small int32/f32 *packets* (sampled tokens, confidence
+signals, accept lengths, branch verdicts).
+
+Design rules:
+
+  * **Packets, not logits.**  Every function returns either device arrays
+    that feed the next device call (logits, q-distribution slices) or a
+    packed (B, k) array of a few int32/f32 per row — the only thing the
+    engine ever fetches.
+  * **Shape stability.**  All row-index / counter arrays are padded to the
+    decoder's static row count and token widths are padded to the bucket
+    ladder (``bucket``), so the jit cache holds a handful of traces no
+    matter how H-RAD's adaptive gamma staggers per-request chunk lengths.
+    Pad lanes compute garbage that the host ignores; pad draws consume
+    uniforms at counter coordinates the real stream never visits.
+  * **Folded-key determinism.**  Uniforms come from
+    ``sampling.uniform_grid``: element (s, j) is a pure function of
+    (rid_s, ctr_s + j), and the engine advances each request's counter by
+    its OWN consumption (its chunk length, its branch count) — never by a
+    padded width — so sampled streams are batch-composition independent.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import verify_accept as _va
+from repro.runtime import sampling as S
+
+__all__ = ["bucket", "kernel_route", "tick_sample", "masked_token_column",
+           "compose_verify_tokens", "sps_verify", "draw_cands",
+           "branch_verify"]
+
+
+def bucket(n: int) -> int:
+    """Round a token width up the fixed ladder 1/2/4/8/... so adaptive
+    draft lengths never retrace the jitted step functions."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def kernel_route(ttemp: float, dtemp: float) -> bool:
+    """Should the fused verify run through the batched Pallas
+    ``verify_accept`` kernel?  True on TPU with both temperatures > 0 (the
+    kernel softmaxes pre-scaled logits; temp 0 needs the one-hot probs
+    path), overridable via REPRO_VERIFY_BACKEND=pallas|xla.  Off-TPU the
+    compiled XLA twin is the production route — interpret mode would
+    re-add the overhead the device-resident loop removes."""
+    if ttemp <= 0.0 or dtemp <= 0.0:
+        return False                  # one-hot probs need the XLA path
+    env = os.environ.get("REPRO_VERIFY_BACKEND")
+    if env == "pallas":
+        return True
+    if env == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _chain_via_kernel(p_lg: jax.Array, q_lg: jax.Array, toks: jax.Array,
+                      lens: jax.Array, ugrid: jax.Array, interpret: bool):
+    """Chain verdict through the batched (B, R, V) Pallas kernel:
+    temperature-prescaled LOGITS in, accept flags + per-position residual
+    samples out, then the same leading-run reduction as
+    ``sampling.verify_chain_device``.  The residual draw reuses the
+    chain's final uniform (``ugrid[s, lens[s]]``, the numpy cores'
+    ``us[-1]``) broadcast as the kernel's per-position ``w`` so the sample
+    at the rejection position matches the oracle's layout."""
+    R = toks.shape[1]
+    u_fin = jnp.take_along_axis(ugrid, lens[:, None].astype(jnp.int32),
+                                1)[:, 0]
+    w = jnp.broadcast_to(u_fin[:, None], (toks.shape[0], R))
+    acc, res, _, _ = _va.verify_accept_batched(
+        p_lg, q_lg, toks, lens, ugrid[:, :R], w, interpret=interpret)
+    j = jnp.arange(R, dtype=jnp.int32)[None]
+    within = j < lens[:, None]
+    run = jnp.cumprod(jnp.where(within, acc, 1), axis=1)
+    n_acc = (run * within.astype(jnp.int32)).sum(1).astype(jnp.int32)
+    all_acc = n_acc == lens
+    nxt = jnp.take_along_axis(
+        res, jnp.minimum(n_acc, R - 1)[:, None], 1)[:, 0]
+    nxt = jnp.where(all_acc, -1, nxt).astype(jnp.int32)
+    return n_acc, nxt, all_acc
+
+
+@functools.partial(jax.jit, static_argnames=("dtemp", "stemp"))
+def tick_sample(lg: jax.Array, last: jax.Array, rids: jax.Array,
+                ctrs: jax.Array, base_key, *, dtemp: float, stemp: float):
+    """One fused draft-sampling tick over a batched forward's logits.
+
+    All arrays are indexed BY DECODER ROW: lg (n_rows, T, V) logits,
+    last/rids/ctrs (n_rows,) — last-real-token index and PRNG coordinates
+    of the request occupying each row (rows without a sampling request
+    carry (0, 0) and compute garbage the host ignores).
+
+    Returns (tokens (n_rows,) i32 device — chained into the next ingest
+    without visiting the host, q_slice (n_rows, V) raw logits device — the
+    q distributions verification will consume, packed (n_rows, 2) f32
+    [token, signal-confidence] — the per-tick host packet for the engines'
+    stop rules and commit bookkeeping).
+    """
+    sl = jnp.take_along_axis(
+        lg, last.astype(jnp.int32)[:, None, None], 1)[:, 0]   # (n_rows, V)
+    qp = S.probs_from_logits(sl, dtemp)
+    sg = S.probs_from_logits(sl, stemp)
+    u = S.uniform_grid(base_key, rids, ctrs, 1)[:, 0]
+    tok = S.categorical_from_uniform(qp, u)
+    packed = jnp.stack([tok.astype(jnp.float32), sg.max(-1)], axis=-1)
+    return tok, sl, packed
+
+
+@jax.jit
+def masked_token_column(tokens: jax.Array, mask: jax.Array):
+    """(n_rows,) sampled tokens -> (n_rows, 1) step input with non-ingesting
+    rows zeroed (their write head parks in place; the pad write is causally
+    masked, see BatchedDecoder)."""
+    return jnp.where(mask, tokens.astype(jnp.int32), 0)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "Tb"))
+def compose_verify_tokens(pend: jax.Array, npend: jax.Array,
+                          tok_stack: jax.Array, drows: jax.Array,
+                          trows: jax.Array, *, n_rows: int, Tb: int):
+    """Target-verify step input: row s holds pend[s] ++ drafted[s] padded to
+    the Tb bucket, scattered into the target decoder's (n_rows, Tb) frame.
+
+    pend: (S, P) host-staged pending tokens; npend: (S,); tok_stack:
+    (g, n_draft_rows) the draft ticks' sampled tokens (device, never
+    fetched); drows/trows: (S,) draft/target row per lane.
+    """
+    S_, P = pend.shape
+    g = tok_stack.shape[0]
+    drafted = tok_stack[:, drows].T.astype(jnp.int32)     # (S, g)
+    t = jnp.arange(Tb, dtype=jnp.int32)[None]
+    pidx = jnp.broadcast_to(jnp.clip(t, 0, P - 1), (S_, Tb))
+    didx = jnp.clip(t - npend[:, None], 0, g - 1)
+    vals = jnp.where(t < npend[:, None],
+                     jnp.take_along_axis(pend.astype(jnp.int32), pidx, 1),
+                     jnp.take_along_axis(drafted, didx, 1))
+    full = jnp.zeros((n_rows, Tb), jnp.int32)
+    return full.at[trows].set(vals)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("g", "ttemp", "dtemp", "kernel",
+                                    "interpret"))
+def sps_verify(tlg: jax.Array, q_stack: jax.Array, tok_stack: jax.Array,
+               trows: jax.Array, drows: jax.Array, npend: jax.Array,
+               rids: jax.Array, ctrs: jax.Array, base_key, *,
+               g: int, ttemp: float, dtemp: float, kernel: bool = False,
+               interpret: bool = True):
+    """Fused SpS verification: target-forward logits in, one small packet
+    out.  tlg: (n_rows, Tb, V); q_stack: (g, n_draft_rows, V) raw draft
+    logits from the ticks; tok_stack: (g, n_draft_rows).
+
+    ``kernel=True`` (see ``kernel_route``) sends the accept/residual pass
+    through the batched Pallas ``verify_accept`` kernel on
+    temperature-prescaled logits; otherwise the compiled XLA twin in
+    ``sampling.verify_chain_device`` runs the same math in probs space.
+
+    Returns packet (S, 3 + g) i32: [n_acc, next_token, all_acc,
+    drafted tokens...] — accept lengths, the resampled/bonus token and the
+    draft tokens the host has never seen, ~4(3+g) bytes per request instead
+    of 4V(T+g).
+    """
+    rowlg = tlg[trows]                                    # (S, Tb, V)
+    j = jnp.arange(g + 1, dtype=jnp.int32)[None]
+    idx = jnp.clip(npend[:, None] - 1 + j, 0, rowlg.shape[1] - 1)
+    pall = jnp.take_along_axis(rowlg, idx[..., None], 1)  # (S, g+1, V)
+    bonus = S.probs_from_logits(pall[:, g], ttemp)
+    q_raw = q_stack[:, drows].transpose(1, 0, 2)          # (S, g, V)
+    drafted = tok_stack[:, drows].T.astype(jnp.int32)     # (S, g)
+    ugrid = S.uniform_grid(base_key, rids, ctrs, g + 1)
+    lens = jnp.full((drafted.shape[0],), g, jnp.int32)
+    if kernel:
+        n_acc, nxt, all_acc = _chain_via_kernel(
+            pall[:, :g] / ttemp, q_raw / dtemp, drafted, lens, ugrid,
+            interpret)
+        u_fin = ugrid[:, g]
+        nxt = jnp.where(all_acc, S.categorical_from_uniform(bonus, u_fin),
+                        nxt)
+    else:
+        n_acc, nxt, all_acc = S.verify_chain_device(
+            S.probs_from_logits(pall[:, :g], ttemp),
+            S.probs_from_logits(q_raw, dtemp), drafted, lens, ugrid, bonus)
+    return jnp.concatenate(
+        [n_acc[:, None], nxt[:, None], all_acc.astype(jnp.int32)[:, None],
+         drafted], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "stemp", "mode"))
+def draw_cands(qb_lg: jax.Array, rids: jax.Array, ctrs: jax.Array,
+               base_key, *, K: int, stemp: float, mode: str):
+    """Branch-point candidates from the stored q_b signal logits (S, V).
+    mode="sample": K i.i.d. inverse-CDF draws at counter offsets 0..K-1 (a
+    row with adaptive k consumes only its first k); "topk": deterministic
+    Top-K.  Returns (S, K) int32."""
+    if mode == "topk":
+        _, idx = jax.lax.top_k(qb_lg, K)
+        return idx.astype(jnp.int32)
+    qb = S.probs_from_logits(qb_lg, stemp)
+    ugrid = S.uniform_grid(base_key, rids, ctrs, K)
+    return S.categorical_from_uniform(qb[:, None, :], ugrid)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("CH", "K", "ttemp", "dtemp", "stemp",
+                                    "kernel", "interpret"))
+def branch_verify(tlg: jax.Array, trows: jax.Array, npend: jax.Array,
+                  gch: jax.Array, chunk_q: jax.Array, chunk_toks: jax.Array,
+                  cands: jax.Array, ks: jax.Array, qb_lg: jax.Array,
+                  rids: jax.Array, ctrs: jax.Array, base_key, *,
+                  CH: int, K: int, ttemp: float, dtemp: float, stemp: float,
+                  kernel: bool = False, interpret: bool = True):
+    """Fused SpecBranch verdict: chain-verify each request's chunk (ragged
+    lengths gch <= CH) AND run Algorithm 2 over its branch candidates, all
+    from one target forward's logits.
+
+    chunk_q: (S, CH, V) raw draft logits of the chunk; chunk_toks: (S, CH);
+    cands: (S, K); ks: (S,) real candidate counts; qb_lg: (S, V) branch-
+    point signal logits.  Uniform layout per request: indices [0, gch] for
+    the chain (ragged, own length), [CH + 1, CH + 1 + ks] for the branch
+    stage — both blocks are addressed by the request's own lengths, so
+    consumption is pad-independent.
+
+    Returns packet (S, 5) i32: [n_acc, chain_next, all_acc,
+    accepted_branch, branch_token].
+    """
+    rowlg = tlg[trows]
+    j = jnp.arange(CH + 1, dtype=jnp.int32)[None]
+    idx = jnp.clip(npend[:, None] - 1 + j, 0, rowlg.shape[1] - 1)
+    lall = jnp.take_along_axis(rowlg, idx[..., None], 1)   # (S, CH+1, V)
+    pall = S.probs_from_logits(lall, ttemp)
+    p_b = jnp.take_along_axis(
+        pall, gch[:, None, None].astype(jnp.int32), 1)[:, 0]   # (S, V)
+    W = CH + 1 + K + 1
+    ugrid = S.uniform_grid(base_key, rids, ctrs, W)
+    if CH == 0:
+        S_ = trows.shape[0]
+        n_acc = jnp.zeros((S_,), jnp.int32)
+        nxt = jnp.full((S_,), -1, jnp.int32)
+        all_acc = jnp.ones((S_,), bool)
+    elif kernel:
+        n_acc, nxt, all_acc = _chain_via_kernel(
+            lall[:, :CH] / ttemp, chunk_q / dtemp, chunk_toks, gch,
+            ugrid[:, :CH + 1], interpret)
+    else:
+        n_acc, nxt, all_acc = S.verify_chain_device(
+            pall[:, :CH], S.probs_from_logits(chunk_q, dtemp), chunk_toks,
+            gch, ugrid[:, :CH + 1], None)
+    qb_probs = S.probs_from_logits(qb_lg, stemp)
+    acc_b, tok_b = S.branch_verdict_device(p_b, qb_probs, cands, ks,
+                                           ugrid[:, CH + 1:])
+    return jnp.stack([n_acc, nxt, all_acc.astype(jnp.int32),
+                      acc_b, tok_b], axis=1)

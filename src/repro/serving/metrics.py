@@ -14,6 +14,13 @@ cost).  TTFT / inter-token latency are measured per request against the
 modeled clock; tokens committed by the same verify call share a timestamp,
 so ITL percentiles reflect the bursty commit pattern of speculative
 decoding rather than a smoothed rate.
+
+Host-transfer accounting (DESIGN.md §7.7): the device-resident loop's
+engines tally every device -> host byte they move (verdict/token packets,
+swap packing, ring snapshots — never logits).  The scheduler samples the
+counter per round and ``summary`` reports totals, per-step bytes and
+wall-clock step-latency percentiles; benchmarks/serving_throughput.py
+gates CI on the per-step byte count.
 """
 from __future__ import annotations
 
@@ -57,6 +64,7 @@ class ServingMetrics:
         self.occupancy_samples: List[float] = []   # pool fill at round ends
         self.rounds = 0
         self.preemptions = 0
+        self.step_walls: List[float] = []          # wall seconds per round
         self._wall0 = time.time()
 
     # ------------------------------------------------------------- events
@@ -80,13 +88,16 @@ class ServingMetrics:
         self.traces[rid].preemptions += 1
         self.preemptions += 1
 
-    def on_round(self, occupancy: float) -> None:
+    def on_round(self, occupancy: float,
+                 step_wall: Optional[float] = None) -> None:
         self.rounds += 1
         self.occupancy_samples.append(occupancy)
+        if step_wall is not None:
+            self.step_walls.append(step_wall)
 
     # ------------------------------------------------------------ summary
-    def summary(self, total_cost: float, pool_stats: Optional[dict] = None
-                ) -> dict:
+    def summary(self, total_cost: float, pool_stats: Optional[dict] = None,
+                transfer: Optional[dict] = None) -> dict:
         toks = sum(len(t.token_times) for t in self.traces.values())
         ttfts = [t.ttft for t in self.traces.values() if t.ttft is not None]
         itls = [d for t in self.traces.values() for d in t.itls]
@@ -108,6 +119,14 @@ class ServingMetrics:
                                     / max(len(self.occupancy_samples), 1)),
             "pool_occupancy_peak": max(self.occupancy_samples, default=0.0),
         }
+        if self.step_walls:
+            out["step_wall_p50"] = percentile(self.step_walls, 50)
+            out["step_wall_p95"] = percentile(self.step_walls, 95)
+        if transfer is not None:
+            total = transfer.get("host_transfer_bytes", 0)
+            out["host_transfer_bytes"] = total
+            out["host_fetches"] = transfer.get("host_fetches", 0)
+            out["per_step_transfer_bytes"] = total / max(self.rounds, 1)
         if pool_stats is not None:
             out["pool"] = dict(pool_stats)
         return out

@@ -127,6 +127,34 @@ def hybrid_pair(kind: str, seed: int = 0
     return dp, dcfg, tp, tcfg
 
 
+LOCAL_KINDS = ("gemma3-shaped",)
+
+
+def local_pair(kind: str = "gemma3-shaped", seed: int = 0
+               ) -> Tuple[dict, ModelConfig, dict, ModelConfig]:
+    """Tiny random-init local-attention (sliding-window) draft/target pair
+    for the batched serving path: gemma3's family — interleaved local
+    (windowed ring cache) and global layers.  The window is deliberately
+    smaller than prompt + generation so the ring wraps end to end during a
+    serving test, exercising speculative overshoot + rollback against ring
+    eviction (the `ring_slack` machinery of DESIGN.md §7.6)."""
+    if kind != "gemma3-shaped":
+        raise ValueError(kind)
+    common = dict(vocab_size=VOCAB, dtype="float32", sliding_window=8)
+    tcfg = ModelConfig(
+        name="lo-gemma3-t", family="dense", num_layers=3, d_model=64,
+        num_heads=2, num_kv_heads=1, d_ff=128, qk_norm=True,
+        pattern=dense_pattern(2),            # 2 local : 1 global
+        **common)
+    dcfg = ModelConfig(
+        name="lo-gemma3-d", family="dense", num_layers=1, d_model=32,
+        num_heads=2, num_kv_heads=1, d_ff=64,
+        pattern=(("local", "dense"),), **common)
+    tp = M.init_params(jax.random.PRNGKey(seed), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(seed + 1), dcfg)
+    return dp, dcfg, tp, tcfg
+
+
 def measure_alpha(draft_params, draft_cfg, target_params, target_cfg,
                   n_prompts: int = 4, plen: int = 16, n_new: int = 48,
                   gamma: int = 4, seed: int = 0) -> float:

@@ -1,0 +1,52 @@
+"""Lossless determinism pin for the sequential engines (DESIGN.md §7.7).
+
+The PRNG-key migration of the batched serving loop moved the BATCHED
+engines from host numpy RNG to per-row folded JAX keys; the sequential
+engines deliberately kept the float64 numpy cores of runtime/sampling.py
+(they are the oracle).  These goldens pin that a fixed seed still yields
+exactly the pre-migration token streams — recorded from the engines before
+the device-resident rewrite landed — so any accidental RNG-path change in
+the shared sampling code is caught as a hard diff, not a statistical
+drift.  (jax.random is version-pinned in CI; the goldens are a function of
+jax's threefry and the fixed init keys only.)
+"""
+import jax
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, dense_pattern
+from repro.runtime.engines import EngineConfig, SpSEngine
+from repro.runtime.specbranch import SpecBranchEngine
+
+VOCAB = 64
+
+# streams recorded pre-migration: PRNGKey(42), temp 1 sampling, the fixed
+# tiny random-init pair below
+GOLDEN = {
+    "sps": [24, 24, 24, 24, 24, 24, 24, 24, 24, 7, 60, 60],
+    "specbranch": [25, 25, 25, 25, 25, 25, 25, 25, 37, 37, 37, 37],
+}
+PROMPT = [51, 5, 11, 15, 11, 51]
+
+
+def _cfg(name, layers, d, heads):
+    return ModelConfig(name=name, family="dense", num_layers=layers,
+                       d_model=d, num_heads=heads,
+                       num_kv_heads=max(1, heads // 2), d_ff=4 * d,
+                       vocab_size=VOCAB, pattern=dense_pattern(0),
+                       dtype="float32")
+
+
+def test_sequential_streams_unchanged_by_prng_migration():
+    tcfg = _cfg("det-t", 2, 64, 2)
+    dcfg = _cfg("det-d", 1, 32, 2)
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    assert PROMPT == list(map(int, np.random.default_rng(3)
+                              .integers(0, VOCAB, size=6)))
+    ecfg = EngineConfig(gamma=3, c=4.0, temperature=1.0, epsilon=0.4,
+                        signal_temperature=0.5, k_max=3, max_len=128)
+    for cls in (SpSEngine, SpecBranchEngine):
+        eng = cls(dp, dcfg, tp, tcfg, ecfg)
+        r = eng.generate(PROMPT, 12, jax.random.PRNGKey(42))
+        assert r.tokens == GOLDEN[cls.name], cls.name

@@ -1,0 +1,151 @@
+"""Device-resident serving loop (DESIGN.md §7.7): logits must never cross
+the device -> host boundary during batched serving — the host sees only
+small packets — and token widths ride the bucket ladder."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, dense_pattern
+from repro.runtime.engines import EngineConfig
+from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
+                           ContinuousBatchScheduler, ServeRequest)
+from repro.serving.device_loop import bucket
+
+N_NEW = 8
+N_REQ = 4
+VOCAB = 64
+
+
+def _cfg(name, layers, d, heads):
+    return ModelConfig(name=name, family="dense", num_layers=layers,
+                       d_model=d, num_heads=heads,
+                       num_kv_heads=max(1, heads // 2), d_ff=4 * d,
+                       vocab_size=VOCAB, pattern=dense_pattern(0),
+                       dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def pair():
+    tcfg = _cfg("dev-t", 2, 64, 2)
+    dcfg = _cfg("dev-d", 1, 32, 2)
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(0, VOCAB, size=6)))
+               for _ in range(N_REQ)]
+    return dp, dcfg, tp, tcfg, prompts
+
+
+def test_bucket_ladder():
+    assert [bucket(n) for n in (1, 2, 3, 4, 5, 7, 8, 9, 17)] == \
+        [1, 2, 4, 4, 8, 8, 8, 16, 32]
+
+
+@pytest.mark.parametrize("cls", [BatchedSpSEngine, BatchedSpecBranchEngine])
+def test_no_logits_cross_the_boundary(pair, cls):
+    """Per round, total host-transfer bytes must stay below even ONE (V,)
+    logits row per request — the packet protocol's structural bound.  The
+    PR 1 host loop fetched several full (n_rows, T, V) tensors per round
+    (tens of KB here), so this fails loudly on any regression to
+    logits-over-the-boundary."""
+    dp, dcfg, tp, tcfg, prompts = pair
+    ecfg = EngineConfig(gamma=3, c=4.0, temperature=0.0, epsilon=0.4,
+                        signal_temperature=0.5, k_max=3, max_len=128)
+    eng = cls(dp, dcfg, tp, tcfg, ecfg, max_batch=N_REQ, page_size=4)
+    sched = ContinuousBatchScheduler(eng)
+    sched.run([ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
+               for i, p in enumerate(prompts)])
+    rep = sched.report()
+    rounds = rep["rounds"]
+    assert rounds > 0
+    assert rep["host_transfer_bytes"] == eng.host_transfer_bytes
+    per_step = rep["per_step_transfer_bytes"]
+    bound = N_REQ * VOCAB * 4            # one f32 logits row per request
+    assert per_step < bound, (cls.name, per_step, bound)
+    # and the fetch COUNT is a handful of packets per round, not per-row
+    assert rep["host_fetches"] / rounds < 12, cls.name
+    assert rep["step_wall_p50"] > 0.0
+
+
+def test_hrad_signals_stay_lossless_and_small(pair):
+    """A random-init H-RAD head fires arbitrary 0/1/2 signals into the
+    batched SpecBranch stop/prune rules — losslessness must not depend on
+    the signal, and the per-signal fetch is 8 bytes, not a feature
+    vector."""
+    from repro.core import hrad as H
+    from repro.runtime.runner import greedy_reference
+    dp, dcfg, tp, tcfg, prompts = pair
+    ecfg = EngineConfig(gamma=3, c=4.0, temperature=0.0, epsilon=0.4,
+                        signal_temperature=0.5, k_max=3, max_len=128)
+    hrad_params = H.init_mlp(jax.random.PRNGKey(5),
+                             (ecfg.hrad_k_layers + 1) * tcfg.d_model)
+    eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
+                                  max_batch=N_REQ, page_size=4,
+                                  hrad_params=hrad_params)
+    sched = ContinuousBatchScheduler(eng)
+    res = sched.run([ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
+                     for i, p in enumerate(prompts)])
+    signals = set()
+    for i, p in enumerate(prompts):
+        assert res[i].tokens == greedy_reference(tp, tcfg, p, N_NEW,
+                                                 max_len=128), i
+        signals.update(res[i].stats.hrad_signals)
+    assert signals, "H-RAD never fired"
+    rep = sched.report()
+    assert rep["per_step_transfer_bytes"] < N_REQ * VOCAB * 4
+
+
+def test_branch_continuation_longer_than_gamma_bucket(pair):
+    """Regression: with gamma_branch > bucket(gamma) (gamma=2, c=4 ->
+    gb=3) an adopted branch continuation becomes next round's chunk and
+    must fit the chunk pad width — an aligned (identical) draft makes the
+    all-accept + no-prune path that carries the full continuation."""
+    from repro.runtime.runner import greedy_reference
+    _, _, tp, tcfg, prompts = pair
+    ecfg = EngineConfig(gamma=2, c=4.0, temperature=0.0, epsilon=0.0,
+                        signal_temperature=0.5, k_max=2, max_len=128)
+    assert ecfg.gamma_branch > ecfg.gamma
+    eng = BatchedSpecBranchEngine(tp, tcfg, tp, tcfg, ecfg,
+                                  max_batch=2, page_size=4)
+    sched = ContinuousBatchScheduler(eng)
+    res = sched.run([ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
+                     for i, p in enumerate(prompts[:2])])
+    for i in range(2):
+        assert res[i].tokens == greedy_reference(
+            tp, tcfg, prompts[i], N_NEW, max_len=128), i
+
+
+def test_residual_sample_never_out_of_vocab():
+    """Regression: an extreme residual uniform (u > the f32 cdf tail) must
+    clamp to V-1, not emit token id V."""
+    from repro.kernels import ops
+    B, R, V = 2, 3, 50_000
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    p = jax.random.normal(ks[0], (B, R, V)) * 2
+    q = jax.random.normal(ks[1], (B, R, V)) * 2
+    toks = jax.random.randint(ks[2], (B, R), 0, V)
+    lens = np.full((B,), R)
+    u = np.zeros((B, R), np.float32)
+    w = np.full((B, R), np.float32(1.0) - np.float32(1e-7))
+    for backend in ("xla", "pallas"):
+        _, res, _, _ = ops.verify_accept_batched(
+            p, q, toks, lens, u, w, backend=backend)
+        assert int(np.asarray(res).max()) < V, backend
+
+
+def test_transfer_counter_includes_swap_packing(pair):
+    """pack_row's single-transfer swap packing lands in the decoder's
+    tally and therefore in the engine's host_transfer_bytes."""
+    dp, dcfg, tp, tcfg, prompts = pair
+    ecfg = EngineConfig(gamma=3, c=4.0, temperature=0.0, epsilon=0.4,
+                        signal_temperature=0.5, k_max=3, max_len=128)
+    eng = BatchedSpSEngine(dp, dcfg, tp, tcfg, ecfg, max_batch=2,
+                           page_size=4)
+    eng.admit(0, prompts[0], N_NEW)
+    before = eng.host_transfer_bytes
+    seq = eng.active[0]
+    packed = eng.tgt_dec.pack_row(seq.tgt.row, seq.tgt.ing)
+    assert eng.host_transfer_bytes - before == packed.nbytes
+    assert eng.tgt_dec.xfer_fetches == 1

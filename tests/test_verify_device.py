@@ -1,0 +1,212 @@
+"""Device-resident verification layer (DESIGN.md §7.7): the batched
+verify_accept kernel (pallas interpret + compiled XLA path) and the
+sampling.py device twins must agree with the float64 numpy cores — the
+oracle the sequential engines keep running on — over ragged (B, R) grids
+and vocabularies up to the assigned configs' 262k."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.runtime import sampling as S
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _case(B, R, V, seed):
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 6)
+    p = jax.random.normal(ks[0], (B, R, V)) * 2
+    q = jax.random.normal(ks[1], (B, R, V)) * 2
+    toks = jax.random.randint(ks[2], (B, R), 0, V)
+    lens = jax.random.randint(ks[3], (B,), 0, R + 1)
+    u = jax.random.uniform(ks[4], (B, R))
+    w = jax.random.uniform(ks[5], (B, R))
+    return p, q, toks, lens, u, w
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+@pytest.mark.parametrize("B,R,V", [(1, 1, 32), (3, 4, 211), (2, 8, 1024)])
+def test_verify_accept_batched_vs_oracle(backend, B, R, V):
+    p, q, toks, lens, u, w = _case(B, R, V, seed=B * 100 + R)
+    got = ops.verify_accept_batched(p, q, toks, lens, u, w, backend=backend)
+    want = ref.verify_accept_batched_ref(p, q, toks, lens, u, w)
+    for g, wv in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wv),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_verify_accept_batched_large_vocab_compiled():
+    """The compiled (non-interpret) path at the assigned configs' top
+    vocabulary (grok-1's 262k) — the shape the serving loop runs hot."""
+    B, R, V = 2, 4, 262_144
+    p, q, toks, lens, u, w = _case(B, R, V, seed=7)
+    got = ops.verify_accept_batched(p, q, toks, lens, u, w, backend="xla")
+    want = ref.verify_accept_batched_ref(p, q, toks, lens, u, w)
+    for g, wv in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wv),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_verify_accept_batched_env_routing(monkeypatch):
+    """REPRO_VERIFY_BACKEND pins the route; both routes agree."""
+    p, q, toks, lens, u, w = _case(2, 3, 64, seed=3)
+    monkeypatch.setitem(os.environ, "REPRO_VERIFY_BACKEND", "xla")
+    a = ops.verify_accept_batched(p, q, toks, lens, u, w)
+    monkeypatch.setitem(os.environ, "REPRO_VERIFY_BACKEND", "pallas")
+    b = ops.verify_accept_batched(p, q, toks, lens, u, w)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_batched_matches_unbatched_rows():
+    """Each full-length row of the batched grid == the original (R, V)
+    kernel on that row."""
+    B, R, V = 3, 5, 128
+    p, q, toks, _, u, w = _case(B, R, V, seed=9)
+    lens = jnp.full((B,), R)
+    got = ops.verify_accept_batched(p, q, toks, lens, u, w, backend="pallas")
+    for b in range(B):
+        row = ops.verify_accept(p[b], q[b], toks[b], u[b], w[b])
+        for g, wv in zip(got, row):
+            np.testing.assert_allclose(np.asarray(g[b]), np.asarray(wv),
+                                       rtol=1e-5, atol=1e-6)
+
+
+def test_masked_positions_zeroed():
+    p, q, toks, _, u, w = _case(2, 6, 64, seed=13)
+    lens = jnp.asarray([2, 0])
+    for backend in ("pallas", "xla"):
+        acc, res, pt, qt = ops.verify_accept_batched(p, q, toks, lens, u, w,
+                                                     backend=backend)
+        for arr in (acc, res, pt, qt):
+            a = np.asarray(arr)
+            assert (a[0, 2:] == 0).all() and (a[1] == 0).all(), backend
+
+
+# ---------------------------------------------------------------------------
+# sampling.py device twins vs the numpy cores
+# ---------------------------------------------------------------------------
+
+def _rand_probs(key, shape):
+    return jax.nn.softmax(jax.random.normal(key, shape) * 2, axis=-1)
+
+
+@pytest.mark.parametrize("S_,R,V", [(1, 3, 64), (4, 5, 199), (3, 1, 32)])
+@pytest.mark.parametrize("bonus", [False, True])
+def test_verify_chain_device_vs_np(S_, R, V, bonus):
+    ks = jax.random.split(jax.random.fold_in(KEY, S_ * 10 + R), 6)
+    p = _rand_probs(ks[0], (S_, R, V))
+    q = _rand_probs(ks[1], (S_, R, V))
+    toks = jax.random.randint(ks[2], (S_, R), 0, V)
+    lens = jax.random.randint(ks[3], (S_,), 0, R + 1)
+    ugrid = jax.random.uniform(ks[4], (S_, R + 1))
+    bp = _rand_probs(ks[5], (S_, V)) if bonus else None
+    n_acc, nxt, all_acc = jax.jit(S.verify_chain_device)(
+        p, q, toks, lens, ugrid, bp)
+    for s in range(S_):
+        g = int(lens[s])
+        us = np.asarray(ugrid[s, :R + 1], np.float64)
+        # the numpy core reads us[i] for i < g and us[-1] for the final
+        # draw; the device twin indexes the grid at the row's OWN length
+        us_row = np.concatenate([us[:g], [us[g]]])
+        v = S.verify_chain_np(
+            us_row, np.asarray(p[s, :g], np.float64),
+            np.asarray(q[s, :g], np.float64),
+            list(np.asarray(toks[s, :g])),
+            None if bp is None else np.asarray(bp[s], np.float64))
+        assert int(n_acc[s]) == v.n_accepted, s
+        assert bool(all_acc[s]) == v.all_accepted, s
+        if not (v.all_accepted and bp is None):
+            assert int(nxt[s]) == v.next_token, s
+
+
+@pytest.mark.parametrize("S_,K,V", [(1, 1, 64), (4, 4, 199), (2, 6, 97)])
+def test_branch_verdict_device_vs_np(S_, K, V):
+    ks = jax.random.split(jax.random.fold_in(KEY, S_ * 7 + K), 4)
+    p_b = _rand_probs(ks[0], (S_, V))
+    q_b = _rand_probs(ks[1], (S_, V))
+    cands = jax.random.randint(ks[2], (S_, K), 0, V)
+    ksz = jax.random.randint(ks[3], (S_,), 1, K + 1)
+    ugrid = jax.random.uniform(jax.random.fold_in(KEY, 99), (S_, K + 1))
+    acc, tok = jax.jit(S.branch_verdict_device)(p_b, q_b, cands, ksz, ugrid)
+    for s in range(S_):
+        k = int(ksz[s])
+        us = np.asarray(ugrid[s], np.float64)
+        us_row = np.concatenate([us[:k], [us[k]]])
+        v = S.branch_spec_sample_np(us_row, np.asarray(p_b[s], np.float64),
+                                    np.asarray(cands[s, :k]),
+                                    np.asarray(q_b[s], np.float64))
+        assert int(acc[s]) == v.accepted_branch, s
+        assert int(tok[s]) == v.token, s
+
+
+def test_uniform_grid_batch_composition_independent():
+    """Element (s, j) depends only on (rid_s, ctr_s + j): slicing a row out
+    of a bigger batch or widening the grid never changes its values."""
+    base = jax.random.PRNGKey(5)
+    rids = jnp.asarray([3, 8, 21])
+    ctrs = jnp.asarray([0, 40, 7])
+    g = S.uniform_grid(base, rids, ctrs, 6)
+    solo = S.uniform_grid(base, rids[1:2], ctrs[1:2], 9)
+    np.testing.assert_array_equal(np.asarray(g[1]), np.asarray(solo[0, :6]))
+    # a shifted counter is a shifted window
+    shifted = S.uniform_grid(base, rids[1:2], ctrs[1:2] + 2, 4)
+    np.testing.assert_array_equal(np.asarray(g[1, 2:6]),
+                                  np.asarray(shifted[0]))
+
+
+def test_fused_verify_kernel_route_matches_xla_route():
+    """The serving loop's fused SpS/branch verify must produce identical
+    packets whether the chain runs through the batched Pallas kernel
+    (TPU route, interpret here) or the compiled XLA twin."""
+    from repro.serving import device_loop as DL
+    n_rows, g, V, B = 6, 3, 64, 3
+    ks = jax.random.split(KEY, 4)
+    tlg = jax.random.normal(ks[0], (n_rows, 8, V)) * 2
+    q_stack = jax.random.normal(ks[1], (g, n_rows, V)) * 2
+    tok_stack = jax.random.randint(ks[2], (g, n_rows), 0, V)
+    trows = jnp.asarray([0, 2, 4])
+    drows = jnp.asarray([1, 3, 5])
+    npend = jnp.asarray([1, 2, 1])
+    rids = jnp.asarray([7, 8, 9])
+    ctrs = jnp.asarray([0, 12, 40])
+    kw = dict(g=g, ttemp=0.7, dtemp=1.0)
+    a = DL.sps_verify(tlg, q_stack, tok_stack, trows, drows, npend,
+                      rids, ctrs, KEY, kernel=False, **kw)
+    b = DL.sps_verify(tlg, q_stack, tok_stack, trows, drows, npend,
+                      rids, ctrs, KEY, kernel=True, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    CH, K = 4, 3
+    chunk_q = jax.random.normal(ks[3], (B, CH, V)) * 2
+    chunk_toks = jax.random.randint(jax.random.fold_in(KEY, 5),
+                                    (B, CH), 0, V)
+    gch = jnp.asarray([0, 2, 4])
+    cands = jax.random.randint(jax.random.fold_in(KEY, 6), (B, K), 0, V)
+    ksz = jnp.asarray([1, 2, 3])
+    qb_lg = jax.random.normal(jax.random.fold_in(KEY, 8), (B, V)) * 2
+    kw = dict(CH=CH, K=K, ttemp=0.7, dtemp=1.0, stemp=0.5)
+    a = DL.branch_verify(tlg, trows, npend, gch, chunk_q, chunk_toks,
+                         cands, ksz, qb_lg, rids, ctrs, KEY,
+                         kernel=False, **kw)
+    b = DL.branch_verify(tlg, trows, npend, gch, chunk_q, chunk_toks,
+                         cands, ksz, qb_lg, rids, ctrs, KEY,
+                         kernel=True, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_categorical_from_uniform_matches_np():
+    key = jax.random.fold_in(KEY, 123)
+    probs = _rand_probs(key, (64, 50))
+    us = jax.random.uniform(jax.random.fold_in(KEY, 124), (64,))
+    got = np.asarray(S.categorical_from_uniform(probs, us))
+    for s in range(64):
+        # sum(cdf < u) == searchsorted(cdf, u, side="right") away from
+        # exact boundaries (measure zero for random uniforms)
+        want = S._np_categorical(float(us[s]),
+                                 np.asarray(probs[s], np.float64))
+        assert got[s] == want, s
