@@ -7,7 +7,8 @@ through both paths:
   * sequential — runtime/scheduler.py round-robin (one request at a time;
     a request arriving mid-generation waits for every earlier request);
   * batched    — repro.serving continuous batching (token-level batching
-    with the paged KV pool).
+    with the paged KV pool; physically paged attention storage by default,
+    ``--attn-backend dense`` for the reference layout).
 
 Throughput is modeled tokens-per-cost (runtime/cost_model.py, t = 1);
 sequential completion accounts for arrival gaps the same way the batched
@@ -80,9 +81,10 @@ def run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
 
 
 def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
-                max_batch) -> dict:
+                max_batch, attn_backend="paged") -> dict:
     eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
-                                  max_batch=max_batch, page_size=16)
+                                  max_batch=max_batch, page_size=16,
+                                  attn_backend=attn_backend)
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=n_new,
                          arrival=i * interval)
@@ -114,6 +116,12 @@ def main() -> None:
                     default=[0.0, 10.0])
     ap.add_argument("--gamma", type=int, default=3)
     ap.add_argument("--c", type=float, default=4.0)
+    ap.add_argument("--attn-backend", default="paged",
+                    choices=["dense", "paged"],
+                    help="batched-cell KV storage (default: paged, the "
+                    "serving default backend; dense is the reference "
+                    "oracle).  Hybrid sweeps run SSM rings next to the "
+                    "chosen attention backend")
     ap.add_argument("--out", default="serving_sweep.json")
     ap.add_argument("--check-baseline", default=None, metavar="JSON",
                     help="diff per-step host-transfer bytes against this "
@@ -151,7 +159,8 @@ def main() -> None:
         for mb in args.batch_sizes:
             t0 = time.time()
             bat = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
-                              args.new_tokens, interval, mb)
+                              args.new_tokens, interval, mb,
+                              attn_backend=args.attn_backend)
             bat["wall_s"] = time.time() - t0
             cell = {
                 "max_batch": mb,
@@ -173,6 +182,7 @@ def main() -> None:
         "engine": "specbranch",
         "pair": "jamba-shaped" if args.hybrid else args.pair,
         "hybrid": bool(args.hybrid),
+        "attn_backend": args.attn_backend,
         "target_pattern": [list(s) for s in tcfg.pattern],
         "requests": args.requests,
         "new_tokens": args.new_tokens,

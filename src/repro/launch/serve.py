@@ -7,11 +7,15 @@ Two modes (DESIGN.md §7):
     in arrival order.
   * ``--mode batched``   — the continuous-batching subsystem
     (repro.serving): token-level batching with per-decoder paged KV pools,
-    rollback-aware page reclamation, step-granularity admission/retirement,
-    preemption + paged swap, and per-request streaming.  SSM/hybrid pairs
-    (``--pair falcon-shaped|jamba-shaped``) batch too: mamba state rides
-    the per-row checkpoint ring (DESIGN.md §7.6), so rollback stays O(1)
-    and there is no sequential fallback for recurrent models.
+    rollback-aware page reclamation, step-granularity admission/retirement
+    with batched bucketed prefill, preemption + paged swap, and
+    per-request streaming.  The default storage backend is **paged**
+    (DESIGN.md §7.5/§7.8); ``--attn-backend dense`` keeps the N-row
+    reference caches as the equivalence oracle.  SSM/hybrid pairs
+    (``--pair falcon-shaped|jamba-shaped``) batch on either backend:
+    mamba state rides the per-row checkpoint ring (DESIGN.md §7.6) next
+    to dense rows or paged tables, so rollback stays O(1) and there is no
+    sequential fallback for recurrent models.
 
 Speeds are reported on the modeled clock (runtime/cost_model.py — wall
 clock is meaningless on this CPU container); both modes print the same
@@ -178,11 +182,14 @@ def main() -> None:
                     "preemption)")
     ap.add_argument("--swap-pages", type=int, default=256,
                     help="paged swap-store pages for preempted requests")
-    ap.add_argument("--attn-backend", default="dense",
+    ap.add_argument("--attn-backend", default="paged",
                     choices=["dense", "paged"],
-                    help="batched-mode KV storage: dense per-row caches, "
-                    "or physically paged KV attended in place through the "
-                    "pool page tables (Pallas paged-attention kernel)")
+                    help="batched-mode KV storage (default: paged — "
+                    "physically paged KV attended in place through the "
+                    "pool page tables via the Pallas paged-attention "
+                    "kernel; SSM/hybrid configs ride per-row checkpoint "
+                    "rings next to the pages).  dense keeps the N-row "
+                    "reference caches — the equivalence oracle")
     ap.add_argument("--arrival-interval", type=float, default=0.0,
                     help="modeled time units between request arrivals")
     ap.add_argument("--max-len", type=int, default=0,

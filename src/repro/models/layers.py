@@ -277,7 +277,10 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
     the key at ``pos - window``, which is still inside the window of the
     row's post-rollback queries.  With Sc >= window + slack (slack >= max
     overshoot + rollback span) every evicted key is provably outside all
-    future windows."""
+    future windows.  Batched bucketed prefill (DESIGN.md §7.8) leans on
+    the same guarantee: prompts pad up a fixed-quantum length ladder, and
+    the serving engines fold that quantum into the slack so prefill pad
+    writes can never wrap live window state either."""
     Sc = min(window + ring_slack, max_len) if window > 0 else max_len
     KV, hd = cfg.num_kv_heads, cfg.hd
     dt = cfg.jdtype

@@ -120,33 +120,57 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"blocks": blocks, "rem": rem}
 
 
-def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int
-                     ) -> Params:
-    """Physically paged decode cache (DESIGN.md §7.5): every attention slot
-    stores KV scattered across ``num_pages`` fixed-size pages (+ one trash
-    page) addressed per call through a kv_pool page table.  Attention-only:
-    SSM state is recurrent, not positional, so it cannot be paged this way
-    — hybrid/SSM configs serve batched on the dense backend, whose mamba
-    slots carry the checkpoint ring of ``init_cache(..., ssm_ring=...)``.
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     *, n_rows: int = 0, ssm_ring: int = 0) -> Params:
+    """Physically paged decode cache (DESIGN.md §7.5, §7.8): every attention
+    slot stores KV scattered across ``num_pages`` fixed-size pages (+ one
+    trash page) addressed per call through a kv_pool page table.
 
-    Leaves keep the same leading stack axis as ``init_cache`` so the scan
-    over periods carries them identically — but there is no batch axis:
-    batch rows exist only as page-table views passed alongside the forward.
+    SSM/hybrid configs build a **mixed pytree**: recurrent state is not
+    positional KV and cannot be paged, so every mamba slot instead carries
+    the per-row position-indexed checkpoint ring of DESIGN.md §7.6
+    (``n_rows`` rows, depth ``ssm_ring``) alongside the paged attention
+    slots.  Per-row rollback is positional for both halves — paged slots
+    reclaim pages, ring slots resume from the accept-point checkpoint — so
+    one forward serves the whole tree.
+
+    Paged leaves keep the same leading stack axis as ``init_cache`` so the
+    scan over periods carries them identically — but they have no batch
+    axis: batch rows exist only as page-table views passed alongside the
+    forward.  Ring leaves keep the batch axis (axis 1 after the stack),
+    sized ``n_rows``.
     """
     for mixer, _ in cfg.pattern:
-        if mixer == "mamba":
-            raise ValueError("paged decode cache is attention-only")
+        if mixer == "mamba" and (n_rows <= 0 or ssm_ring <= 0):
+            raise ValueError(
+                "mamba slots in a paged cache ride per-row checkpoint "
+                "rings: pass n_rows > 0 and ssm_ring > 0 (DESIGN.md §7.8)")
+
+    def slot_cache(slot):
+        mixer, _ = slot
+        if mixer in ("attn", "local"):
+            return L.init_paged_attn_cache(cfg, num_pages, page_size)
+        return L.init_mamba_cache(cfg, n_rows, ring=ssm_ring)
+
     P, nper, nrem = cfg.period, cfg.n_periods, cfg.n_rem
     blocks = []
-    for _ in range(P):
-        one = L.init_paged_attn_cache(cfg, num_pages, page_size)
+    for s in range(P):
+        one = slot_cache(cfg.pattern[s])
         blocks.append(jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (nper,) + a.shape).copy()
             if nper > 1 else a[None], one))
-    rem = [jax.tree.map(lambda a: a[None],
-                        L.init_paged_attn_cache(cfg, num_pages, page_size))
-           for _ in range(nrem)]
+    rem = [jax.tree.map(lambda a: a[None], slot_cache(cfg.pattern[r]))
+           for r in range(nrem)]
     return {"blocks": blocks, "rem": rem}
+
+
+def map_slot_caches(cache: Params, fn) -> Params:
+    """Apply ``fn`` to every slot cache dict (blocks + remainder),
+    preserving the layout.  The serving DecodeState components use this
+    walk to address their own slots inside a mixed pytree (paged attention
+    pages next to per-row SSM rings) without if/else chains over leaves."""
+    return {"blocks": [fn(c) for c in cache["blocks"]],
+            "rem": [fn(c) for c in cache["rem"]]}
 
 
 def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:

@@ -6,9 +6,15 @@ Layers:
                        allocator, copy-on-write branch forks, rollback-aware
                        reclamation; plus a paged backing store (swap space)
                        read back through the Pallas paged-gather kernel.
+  * decode_state     — composable per-row decode-state backend (DESIGN.md
+                       §7.8): dense rows, paged attention tables and SSM
+                       checkpoint rings behind one alloc/bind/prefill/
+                       rollback/snapshot/fork/pack interface, mixed freely
+                       per config (hybrid serves on the paged backend).
   * batched_engine   — multi-row decoder + batched SpS / SpecBranch engines
                        (draft steps and the target verify call batched over
-                       requests; per-request rollback via page reclamation).
+                       requests; per-request rollback via page reclamation;
+                       batched bucketed prefill at admission).
   * batch_scheduler  — continuous batching: step-granularity admission and
                        retirement, FIFO fairness, pool-pressure preemption,
                        per-request streaming callbacks.
@@ -19,6 +25,8 @@ from repro.serving.batch_scheduler import (ContinuousBatchScheduler,
                                            ServeRequest)
 from repro.serving.batched_engine import (BatchedDecoder, BatchedSpSEngine,
                                           BatchedSpecBranchEngine)
+from repro.serving.decode_state import (DecodeState, DenseAttnState,
+                                        PagedAttnState, SSMRingState)
 from repro.serving.kv_pool import (PagedKVPool, PagedStore, PoolExhausted,
                                    PoolGroup)
 from repro.serving.metrics import ServingMetrics, percentile
@@ -26,6 +34,7 @@ from repro.serving.metrics import ServingMetrics, percentile
 __all__ = [
     "ContinuousBatchScheduler", "ServeRequest",
     "BatchedDecoder", "BatchedSpSEngine", "BatchedSpecBranchEngine",
+    "DecodeState", "DenseAttnState", "PagedAttnState", "SSMRingState",
     "PagedKVPool", "PagedStore", "PoolExhausted", "PoolGroup",
     "ServingMetrics", "percentile",
 ]

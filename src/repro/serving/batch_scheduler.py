@@ -97,15 +97,24 @@ class ContinuousBatchScheduler:
                 max(0, req.max_new_tokens - resumed))
 
     def _admit(self, queue: deque) -> None:
+        """Admit the longest admissible FIFO prefix as ONE group: requests
+        are reserved (rows + pool bookkeeping) one by one, then the whole
+        group's prompts are ingested by batched bucketed prefill — one
+        forward per (decoder, prefill-ladder rung) per admission round
+        (DESIGN.md §7.8), not one per request."""
         eng = self.engine
+        admitted = 0
         while queue and queue[0].arrival <= eng.clock:
             req = queue[0]
             if not eng.can_admit(*self._admit_dims(req)):
                 break                      # FIFO: never admit around the head
             queue.popleft()
-            eng.admit(req.rid, req.prompt, req.max_new_tokens,
-                      on_token=req.on_token)
+            eng.reserve(req.rid, req.prompt, req.max_new_tokens,
+                        on_token=req.on_token)
             self.metrics.on_admit(req.rid, eng.clock)
+            admitted += 1
+        if admitted:
+            eng.commit_admissions()
 
     # -------------------------------------------------------------- report
     def report(self) -> dict:

@@ -33,7 +33,19 @@ adaptive chunk lengths never retrace the jitted step; and a SpecBranch
 round dispatches its target verification *before* running its draft ticks,
 so on an asynchronous-dispatch backend the drafting hides under the
 verification — the paper's branch parallelism realized at the dispatch
-layer.
+layer.  Within the draft phase the per-tick [token, conf] packet is
+double-buffered: tick t's computation is dispatched before tick t-1's
+packet is fetched, with stop decisions applied one tick late (a row that
+should have stopped pruned its one optimistically ingested token the same
+way any rollback does), so the draft loop's only blocking fetch overlaps
+drafting too.
+
+Admission runs **batched bucketed prefill** (DESIGN.md §7.8): requests
+admitted in the same round are grouped onto a prefill length ladder
+(multiples of a fixed quantum, sized inside the rings' slack margins so
+padding can never wrap live window or checkpoint state) and each bucket is
+ingested with ONE forward at a fixed lane count — killing both the
+per-request admission stall and the one-trace-per-prompt-length retrace.
 
 Cost accounting (Group SD, App. G.4): a round's draft steps are batched
 over rows and its target verify is ONE batched call, priced the same as a
@@ -52,14 +64,17 @@ length and the next forward resumes from the accept-point checkpoint,
 O(1), no replay.  Pad writes land on future checkpoint slots and are
 overwritten before any load, the recurrent twin of causally-masked pad KV.
 
-Storage backends: ``attn_backend="dense"`` keeps the N-row reference
-caches (and is the backend for SSM/hybrid configs — recurrent state is not
-positional KV and cannot be paged); ``"paged"`` stores KV physically
-scattered across per-decoder page pools (split id spaces, so each buffer
-is sized to its own pool) and attends in place through the page tables
-(Pallas paged-attention kernel, DESIGN.md §7.5) — same token streams, no
-gather, zero-copy branch forks and rollback, and preemption swap packed
-straight from the pages.
+Storage backends ride the DecodeState component layer (DESIGN.md §7.8):
+``attn_backend="dense"`` keeps the N-row reference caches; ``"paged"``
+stores attention KV physically scattered across per-decoder page pools
+(split id spaces, so each buffer is sized to its own pool) and attends in
+place through the page tables (Pallas paged-attention kernel, DESIGN.md
+§7.5) — same token streams, no gather, zero-copy branch forks and
+rollback, and preemption swap packed straight from the pages.  SSM/hybrid
+configs serve on BOTH backends: their mamba slots carry per-row checkpoint
+rings in a mixed pytree next to the (dense or paged) attention slots, and
+on the paged backend a preempted hybrid row swaps as paged token rows plus
+one explicit ring checkpoint.
 """
 from __future__ import annotations
 
@@ -79,12 +94,9 @@ from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel
 from repro.runtime.engines import EngineConfig, GenResult, GenStats
 from repro.serving import device_loop as DL
+from repro.serving.decode_state import DecodeState
 from repro.serving.kv_pool import (PagedKVPool, PagedStore, PoolExhausted,
                                    PoolGroup)
-
-
-def _has_ssm(cfg: ModelConfig) -> bool:
-    return any(m == "mamba" for m, _ in cfg.pattern)
 
 
 def _count_fetch(owner, arr) -> np.ndarray:
@@ -106,77 +118,55 @@ class BatchedDecoder:
     """One model + an N-row decode cache with per-row positions.
 
     The engine owns per-row logical lengths; the decoder is a thin compute
-    wrapper: ``step`` runs one batched forward at caller-supplied per-row
-    start positions and returns DEVICE logits (nothing is fetched — the
-    device-resident loop consumes them in place), ``prefill_row`` ingests a
-    prompt into a fresh row via a batch-1 forward scattered into the
-    batched cache (no full-batch compute at admission), ``copy_row``
-    implements branch forks.  ``xfer_bytes`` counts every byte this decoder
-    moves device -> host (swap packing, ring snapshots) for the serving
-    transfer metrics.
+    wrapper around a ``DecodeState`` (serving/decode_state.py): ``step``
+    runs one batched forward at caller-supplied per-row start positions and
+    returns DEVICE logits (nothing is fetched — the device-resident loop
+    consumes them in place), ``prefill_rows`` ingests a GROUP of prompts
+    into fresh rows with one forward per prefill-ladder bucket, and every
+    state operation — fork, bind, rollback, swap pack/unpack, ring
+    snapshot/restore — delegates to the state's components, so nothing
+    here branches on the storage layout.  ``xfer_bytes`` counts every byte
+    this decoder moves device -> host (swap packing, ring snapshots) for
+    the serving transfer metrics.
 
-    Two storage backends (DESIGN.md §7.5):
+    Storage layouts (DESIGN.md §7.5, §7.6, §7.8) are the DecodeState
+    components: dense N-row attention caches, physically paged attention
+    addressed through kv_pool page tables (``paged=pool``), and per-row
+    SSM checkpoint rings — mixed freely, so hybrid configs run on either
+    attention backend.
 
-      * dense (default) — an N-row cache from ``model.init_cache``; branch
-        forks copy whole rows, preemption swap packs/unpacks rows;
-      * paged (``paged=pool``) — KV lives physically scattered across the
-        pool's pages (``model.init_paged_cache``); every forward receives
-        the page-table view of its rows (``bind_row`` keeps row -> stream
-        key) and attends in place via the Pallas paged-attention kernel.
-        A branch fork copies NOTHING (the pool's COW fork shares pages); a
-        COW split is mirrored physically through ``copy_page`` (the pool's
-        cow_listeners); rollback frees pages with zero data movement.  The
-        pool is THIS decoder's own (split id space): the physical buffers
-        are sized to it, not to the union of every decoder's pages.
-
-    SSM/hybrid configs (``ssm_ring > 0``, dense backend only): mamba slots
-    carry the position-indexed checkpoint ring of DESIGN.md §7.6, which
-    makes per-row rollback positional for recurrent state too — the row's
-    next forward at its (shrunk) logical position resumes from that
-    position's snapshot.  ``snapshot``/``restore`` expose the ring
-    explicitly for the property tests; the serving engines never need them
-    because every forward restores implicitly through its start position.
+    Batched bucketed prefill: ``prefill_rows`` pads each admission group's
+    prompts up a fixed-quantum length ladder (``DL.prefill_bucket``) at a
+    fixed lane count, so admitting k same-bucket requests costs ONE
+    forward and ONE compiled trace.  Pad tokens land beyond a row's
+    logical length (causally masked / trash-paged until overwritten) and
+    the quantum is bounded by the rings' slack margins, so prefill padding
+    can never wrap live window or checkpoint state.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_rows: int,
                  max_len: int, paged: Optional[PagedKVPool] = None,
-                 ssm_ring: int = 0):
-        if paged is not None and _has_ssm(cfg):
-            raise ValueError(
-                "the paged backend stores positional KV only; serve "
-                "SSM/hybrid configs with attn_backend='dense' (checkpoint-"
-                "ring SSM cache)")
-        if _has_ssm(cfg) and ssm_ring <= 0:
-            raise ValueError(
-                "batched decoding of an SSM-bearing config needs a "
-                "checkpoint ring (ssm_ring > 0) for per-row rollback")
+                 ssm_ring: int = 0, prefill_lanes: int = 0,
+                 prefill_quantum: int = 8):
         self.params, self.cfg = params, cfg
         self.n_rows, self.max_len = n_rows, max_len
         self.paged = paged
         # checkpoint-ring depth for mamba slots AND window slack for local
-        # attention rings — both bound speculative overshoot per row
-        # (including bucket-ladder padding)
+        # attention rings — both bound how far ahead of a row's logical
+        # length writes may land (bucket-ladder padding, prefill padding)
         self.ssm_ring = max(0, ssm_ring)
-        self.free_rows: List[int] = list(range(n_rows - 1, -1, -1))
-        # per-row write head: idle rows in a batched call park HERE, so
-        # their pad writes land exactly where the row's next real write
-        # lands (causally masked until overwritten) — parking anywhere
-        # else would clobber live slots (pos 0 = the first prompt token!)
-        # (In paged mode any write at a position >= the row's pool length
-        # is routed to the trash page instead, same masking guarantee.)
-        self.row_pos = np.zeros(n_rows, np.int64)
+        self.state = DecodeState(cfg, n_rows=n_rows, max_len=max_len,
+                                 paged=paged, ssm_ring=self.ssm_ring)
+        self.prefill_lanes = prefill_lanes or DL.bucket(n_rows)
+        self.prefill_quantum = prefill_quantum
+        self.prefill_shapes: set = set()
         self.n_calls = 0
         self.n_call_tokens = 0
         self.xfer_bytes = 0
         self.xfer_fetches = 0
+        state = self.state
 
         if paged is not None:
-            self.cache = M.init_paged_cache(cfg, paged.num_pages,
-                                            paged.page_size)
-            self.n_table = paged.pages_for(max_len)
-            self.trash = paged.num_pages
-            self.row_key: Dict[int, Any] = {}
-
             # the paged buffers are pool-sized; donate them so a step (or
             # a single-page COW copy) updates in place instead of
             # materializing a full pool copy per call — self.cache is
@@ -190,24 +180,20 @@ class BatchedDecoder:
                     feature_mode="all", paged=(table, lens))
                 return logits, cache, aux["features"]
 
-            @functools.partial(jax.jit, donate_argnums=(0,))
-            def _copy_page(cache, src, dst):
-                def cp(a):     # page axis = 1 (after the layer-stack axis)
-                    r = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=1)
-                    return jax.lax.dynamic_update_slice_in_dim(a, r, dst,
-                                                               axis=1)
-                return jax.tree.map(cp, cache)
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def _prefill_paged(params, cache, tokens, table, lens, rows):
+                lanes, T = tokens.shape
+                sub = state.prefill_view(cache, lanes)
+                positions = jnp.broadcast_to(
+                    jnp.arange(T, dtype=jnp.int32)[None], (lanes, T))
+                logits, sub, aux = M.forward(
+                    params, cfg, tokens, cache=sub, positions=positions,
+                    feature_mode="all", paged=(table, lens))
+                return (logits, state.prefill_merge(cache, sub, rows),
+                        aux["features"])
 
-            self._fwd, self._copy_page = _fwd_paged, _copy_page
-            # swap space: pack/unpack straight from the pages (ROADMAP PR 2
-            # follow-up) — a row's token-rows are gathered page-by-page
-            # through its table, so preemption never densifies the cache.
-            self._init_swap_layout(self.cache)
-            self.swappable = True
+            self._fwd, self._prefill = _fwd_paged, _prefill_paged
             return
-
-        self.cache = M.init_cache(cfg, n_rows, max_len,
-                                  ssm_ring=self.ssm_ring)
 
         @jax.jit
         def _fwd(params, cache, tokens, pos):
@@ -218,42 +204,48 @@ class BatchedDecoder:
                 feature_mode="all")
             return logits, cache, aux["features"]
 
-        @jax.jit
-        def _set_row(cache, sub, row):
-            def put(a, b):
-                start = (0, row) + (0,) * (a.ndim - 2)
-                return jax.lax.dynamic_update_slice(a, b.astype(a.dtype),
-                                                    start)
-            return jax.tree.map(put, cache, sub)
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _prefill_dense(params, cache, tokens, rows):
+            lanes, T = tokens.shape
+            sub = state.prefill_view(cache, lanes)
+            positions = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[None], (lanes, T))
+            logits, sub, aux = M.forward(
+                params, cfg, tokens, cache=sub, positions=positions,
+                feature_mode="all")
+            return (logits, state.prefill_merge(cache, sub, rows),
+                    aux["features"])
 
-        @jax.jit
-        def _copy_row(cache, src, dst):
-            def cp(a):
-                r = jax.lax.dynamic_slice_in_dim(a, src, 1, axis=1)
-                return jax.lax.dynamic_update_slice_in_dim(a, r, dst, axis=1)
-            return jax.tree.map(cp, cache)
+        self._fwd, self._prefill = _fwd, _prefill_dense
 
-        self._fwd, self._set_row, self._copy_row = _fwd, _set_row, _copy_row
+    # -------------------------------------------------- state delegation
+    @property
+    def cache(self):
+        return self.state.cache
 
-        # swap-space layout: flatten one row's cache to (L, swap_dim) token
-        # rows.  Only exact when every leaf keeps the full sequence axis
-        # (global attention); sliding-window rings would fold positions and
-        # SSM checkpoint rings are position-indexed state, not token rows.
-        self._init_swap_layout(jax.eval_shape(
-            lambda: M.init_cache(cfg, 1, max_len, ssm_ring=self.ssm_ring)))
-        self.swappable = (not _has_ssm(cfg)
-                         and all(s[2] == max_len for s in self._leaf_shapes))
+    @cache.setter
+    def cache(self, value):
+        self.state.cache = value
 
-    def _init_swap_layout(self, tree) -> None:
-        """Derive the (L, swap_dim) token-row layout shared by pack_row /
-        unpack_row from a cache pytree: per token each leaf contributes
-        its stack * trailing dims (axes 1..2 are batch/page + seq/slot)."""
-        leaves = jax.tree.leaves(tree)
-        self._leaf_shapes = [tuple(a.shape) for a in leaves]
-        self._leaf_dtypes = [a.dtype for a in leaves]
-        self._treedef = jax.tree.structure(tree)
-        self.swap_dim = sum(s[0] * int(np.prod(s[3:], dtype=np.int64))
-                            for s in self._leaf_shapes)
+    @property
+    def free_rows(self) -> List[int]:
+        return self.state.free_rows
+
+    @property
+    def row_pos(self) -> np.ndarray:
+        return self.state.row_pos
+
+    @property
+    def swappable(self) -> bool:
+        return self.state.swappable
+
+    @property
+    def swap_dim(self) -> int:
+        return self.state.swap_dim
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.state.has_ssm
 
     def _fetch(self, arr) -> np.ndarray:
         """The decoder's device -> host gate (swap packing, snapshots)."""
@@ -264,36 +256,15 @@ class BatchedDecoder:
         """Attach a pool stream to a decoder row (paged backend only):
         every forward reads the row's page table and length live from the
         pool, so pool truncate/adopt are visible with no decoder call."""
-        if self.paged is not None:
-            self.row_key[row] = key
+        self.state.bind(row, key)
 
     def unbind_row(self, row: int) -> None:
-        if self.paged is not None:
-            self.row_key.pop(row, None)
+        self.state.unbind(row)
 
     def copy_page(self, src: int, dst: int) -> None:
         """Physical COW mirror: duplicate one page in every layer's paged
         buffer (hooked into the pool's cow_listeners by the engine)."""
-        self.cache = self._copy_page(self.cache, jnp.int32(src),
-                                     jnp.int32(dst))
-
-    def _table_view(self, rows: Optional[Sequence[int]] = None
-                    ) -> Tuple[np.ndarray, np.ndarray]:
-        """(table, lens) for a batched call: bound rows expose their pool
-        stream's pages; unbound rows are empty (lens 0 — every write they
-        make lands in the trash page, every read is masked)."""
-        n = self.n_rows if rows is None else len(rows)
-        tab = np.full((n, self.n_table), self.trash, np.int32)
-        lens = np.zeros(n, np.int32)
-        it = range(self.n_rows) if rows is None else rows
-        for i, row in enumerate(it):
-            key = self.row_key.get(row)
-            if key is None or not self.paged.is_open(key):
-                continue
-            t = self.paged.table(key)
-            tab[i, :len(t)] = t
-            lens[i] = self.paged.length(key)
-        return tab, lens
+        self.state.copy_page(src, dst)
 
     # -------------------------------------------------------------- compute
     def step(self, tokens, pos) -> Tuple[jax.Array, jax.Array]:
@@ -303,7 +274,7 @@ class BatchedDecoder:
         (n_rows, T, V), feats); nothing crosses to the host."""
         assert tokens.shape[0] == self.n_rows
         if self.paged is not None:
-            tab, lens = self._table_view()
+            tab, lens = self.state.table_view()
             logits, self.cache, feats = self._fwd(
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(pos, jnp.int32), jnp.asarray(tab),
@@ -316,187 +287,101 @@ class BatchedDecoder:
         self.n_call_tokens += int(np.prod(tokens.shape))
         return logits, feats
 
-    def prefill_row(self, row: int, tokens: Sequence[int]
-                    ) -> Tuple[jax.Array, jax.Array]:
-        """Ingest ``tokens`` into a fresh row.  Returns (logits, feats) of
-        the batch-1 prefill call — device arrays.
+    def prefill_rows(self, parts: Sequence[Tuple[int, Sequence[int]]]
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """Batched bucketed prefill: ingest each ``(row, tokens)`` prompt
+        into its fresh row with ONE forward at a fixed
+        ``(prefill_lanes, ladder-width)`` shape.  Lane i of the returned
+        device ``(logits, feats)`` belongs to ``parts[i]``; pad lanes (and
+        pad positions beyond a prompt's length) compute garbage that is
+        never scattered into a live row — dense/ring lanes carry an
+        out-of-bounds row id (dropped by the scatter), paged pad writes
+        land in the trash page.
 
-        Prefill runs at the EXACT prompt length (one trace per distinct
-        length): the bucket ladder is a decode-step device, and its pad
-        overshoot budget (sliding-window ``ring_slack``, SSM ring depth)
-        only covers decode widths — padding a long prompt up a power of
-        two could wrap a local-attention ring or an SSM checkpoint ring
-        past live state."""
-        assert len(tokens) >= 1
-        L = len(tokens)
+        The ladder quantum bounds pad overshoot to ``quantum - 1``
+        positions past a row's logical length, inside the
+        ring_slack/ssm_ring margins — the reason prompts ride a quantum
+        ladder instead of the power-of-two decode ladder, whose overshoot
+        would be unbounded."""
+        assert parts and len(parts) <= self.prefill_lanes
+        G = self.prefill_lanes
+        Tb = DL.prefill_bucket(max(len(t) for _, t in parts),
+                               self.prefill_quantum)
+        if Tb > self.max_len:
+            raise RuntimeError(
+                f"prefill bucket {Tb} overflows max_len={self.max_len}")
+        toks = np.zeros((G, Tb), np.int32)
+        rows = np.full(G, self.n_rows, np.int32)   # OOB lanes scatter-drop
+        for i, (row, t) in enumerate(parts):
+            L = len(t)
+            assert 1 <= L <= Tb
+            toks[i, :L] = t
+            if L < Tb:
+                toks[i, L:] = t[-1]
+            rows[i] = row
         if self.paged is not None:
-            # batch-1 forward writing straight into the shared paged
-            # buffers (the pool was extended by the caller already)
-            tab, lens = self._table_view([row])
-            logits, self.cache, feats = self._fwd(
-                self.params, self.cache,
-                jnp.asarray([list(tokens)], jnp.int32),
-                jnp.zeros((1,), jnp.int32), jnp.asarray(tab),
-                jnp.asarray(lens))
+            tab, lens = self.state.table_view(
+                [row for row, _ in parts] + [-1] * (G - len(parts)))
+            logits, self.cache, feats = self._prefill(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(tab), jnp.asarray(lens), jnp.asarray(rows))
         else:
-            tmp = M.init_cache(self.cfg, 1, self.max_len,
-                               ssm_ring=self.ssm_ring)
-            logits, tmp, feats = self._fwd(
-                self.params, tmp, jnp.asarray([list(tokens)], jnp.int32),
-                jnp.zeros((1,), jnp.int32))
-            self.cache = self._set_row(self.cache, tmp, jnp.int32(row))
-        self.row_pos[row] = L
+            logits, self.cache, feats = self._prefill(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(rows))
+        for row, t in parts:
+            self.state.row_pos[row] = len(t)
         self.n_calls += 1
-        self.n_call_tokens += L
+        self.n_call_tokens += sum(len(t) for _, t in parts)
+        self.prefill_shapes.add((G, Tb))
         return logits, feats
 
+    def prefill_row(self, row: int, tokens: Sequence[int]
+                    ) -> Tuple[jax.Array, jax.Array]:
+        """Singleton ``prefill_rows`` (direct decoder users and tests):
+        lane 0 of the returned device (logits, feats) is the row's."""
+        return self.prefill_rows([(row, list(tokens))])
+
     def copy_row(self, src: int, dst: int) -> None:
-        if self.paged is None:
-            self.cache = self._copy_row(self.cache, jnp.int32(src),
-                                        jnp.int32(dst))
-        # paged: nothing to copy — the fork is page-table sharing in the
-        # pool (the caller binds dst to the forked stream key)
-        self.row_pos[dst] = self.row_pos[src]
+        """Branch fork: row-axis state (dense KV, SSM rings) copies; paged
+        state copies nothing — the fork is page-table sharing in the pool
+        (the caller binds dst to the forked stream key)."""
+        self.state.fork(src, dst)
 
     # ----------------------------------------------------------- swap space
     def pack_row(self, row: int, length: int) -> np.ndarray:
-        """Flatten the first ``length`` KV slots of a row to (L, swap_dim)
-        float32 token-rows (pos leaves are exact in f32 for max_len < 2^24).
-
-        The flatten/concat runs on device and the result crosses the
-        boundary in ONE transfer (the PR 1 path issued one device_get per
-        cache leaf).
-
-        Paged backend: the rows are gathered page-by-page through the
-        row's bound page table — no densified intermediate cache — so a
-        preemption moves exactly the row's live pages (incl. a partial
-        tail page, trimmed to ``length``)."""
-        assert self.swappable
-        if self.paged is not None:
-            table = jnp.asarray(
-                np.asarray(self.paged.table(self.row_key[row]), np.int64))
-            parts = []
-            for lf in jax.tree.leaves(self.cache):
-                pg = lf[:, table]
-                # (stack, n, ps, KV, hd) -> token-major (n*ps, stack*KV*hd)
-                tok = jnp.moveaxis(
-                    pg.reshape(pg.shape[0], -1, *pg.shape[3:]), 1, 0)
-                parts.append(tok[:length].reshape(length, -1)
-                             .astype(jnp.float32))
-            return self._fetch(jnp.concatenate(parts, axis=1))
-        parts = [jnp.moveaxis(lf[:, row, :length], 1, 0)
-                 .reshape(length, -1).astype(jnp.float32)
-                 for lf in jax.tree.leaves(self.cache)]
-        return self._fetch(jnp.concatenate(parts, axis=1))
+        """Flatten the attention half of a row's first ``length`` slots to
+        (L, swap_dim) float32 token rows (pos leaves are exact in f32 for
+        max_len < 2^24); the flatten/concat runs on device and the result
+        crosses the boundary in ONE transfer.  Paged rows are gathered
+        page-by-page through the row's table (partial tail page trimmed to
+        ``length``) — preemption never densifies the cache.  Recurrent
+        ring state is NOT token rows; a hybrid row's ring rides the
+        preemption metadata as one explicit ``snapshot``."""
+        return self._fetch(self.state.pack_row(row, length))
 
     def unpack_row(self, row: int, rows: np.ndarray) -> None:
         """Restore a row from packed token-rows (inverse of pack_row);
-        slots beyond len(rows) are reset to empty (pos = -1).
-
-        Paged backend: the token-rows are scattered straight into the pages
-        of the row's (freshly re-extended) table; the stale tail of a
-        partial last page stays masked by the row's pool length."""
-        assert self.swappable
-        L = rows.shape[0]
-        if self.paged is not None:
-            key = self.row_key[row]
-            table = self.paged.table(key)
-            assert self.paged.length(key) == L, (self.paged.length(key), L)
-            ps = self.paged.page_size
-            n = len(table)
-            leaves, off = [], 0
-            for lf, shape in zip(jax.tree.leaves(self.cache),
-                                 self._leaf_shapes):
-                stack, tail = shape[0], shape[3:]
-                width = stack * int(np.prod(tail, dtype=np.int64))
-                seg = rows[:, off:off + width].reshape((L, stack) + tail)
-                off += width
-                pad = n * ps - L
-                if pad:
-                    seg = np.concatenate(
-                        [seg, np.zeros((pad, stack) + tail, seg.dtype)])
-                pages = np.moveaxis(seg.reshape((n, ps, stack) + tail), 2, 0)
-                leaves.append(lf.at[:, jnp.asarray(table)].set(
-                    jnp.asarray(pages, lf.dtype)))
-            self.cache = jax.tree.unflatten(self._treedef, leaves)
-            self.row_pos[row] = L
-            return
-        leaves, off = [], 0
-        for shape, dtype in zip(self._leaf_shapes, self._leaf_dtypes):
-            stack, tail = shape[0], shape[3:]
-            width = stack * int(np.prod(tail, dtype=np.int64))
-            seg = rows[:, off:off + width].reshape((L, stack) + tail)
-            off += width
-            fill = -1 if np.issubdtype(dtype, np.integer) else 0
-            full = np.full((stack, self.max_len) + tail, fill,
-                           dtype=dtype)
-            full[:, :L] = np.moveaxis(seg, 0, 1)
-            leaves.append(jnp.asarray(full)[:, None])    # add batch axis
-        sub = jax.tree.unflatten(self._treedef, leaves)
-        self.cache = self._set_row(self.cache, sub, jnp.int32(row))
-        self.row_pos[row] = L
+        dense slots beyond len(rows) are reset to empty (pos = -1), paged
+        rows scatter straight into the freshly re-extended table."""
+        self.state.unpack_row(row, rows)
 
     # ---------------------------------------------------- SSM checkpoints
-    def _ssm_slots(self, cache):
-        """The mamba slot caches of ``cache``, in stable order."""
-        return [c for c in cache["blocks"] + cache["rem"]
-                if c is not None and "h_ring" in c]
-
     def snapshot(self, row: int, step: int) -> List[Dict[str, np.ndarray]]:
-        """Host copy of one row's recurrent state at stream length ``step``
-        (one {h, conv} dict per mamba slot).  Symmetric to the paged
-        table views: the serving engines never call this — every forward
-        restores implicitly from its start position — but it pins the ring
-        contents for the rollback property tests.
-
-        All slots are flattened and concatenated on device so the copy
-        crosses the boundary in ONE transfer (the PR 1 path issued one
-        device_get per slot per field)."""
-        assert self.ssm_ring > 0, "snapshot needs a checkpoint-ring cache"
-        s = step % self.ssm_ring
-        slots = self._ssm_slots(self.cache)
-        flat = jnp.concatenate(
-            [jnp.concatenate([c["h_ring"][:, row, s].reshape(-1)
-                              .astype(jnp.float32),
-                              c["conv_ring"][:, row, s].reshape(-1)
-                              .astype(jnp.float32)])
-             for c in slots])
-        buf = self._fetch(flat)
-        out, off = [], 0
-        for c in slots:
-            h_shape = ((c["h_ring"].shape[0],) + c["h_ring"].shape[3:])
-            c_shape = ((c["conv_ring"].shape[0],) + c["conv_ring"].shape[3:])
-            hn = int(np.prod(h_shape))
-            cn = int(np.prod(c_shape))
-            out.append({
-                "h": buf[off:off + hn].reshape(h_shape),
-                "conv": buf[off + hn:off + hn + cn].reshape(c_shape)
-                .astype(c["conv_ring"].dtype),
-            })
-            off += hn + cn
-        return out
+        """Host copy of one row's recurrent state at stream length
+        ``step`` (one {h, conv} dict per mamba slot), flattened on device
+        and fetched in ONE transfer.  The serving engines use this as the
+        ring's swap side-channel (paged preemption) and the property tests
+        use it to pin ring contents; ordinary rollback never needs it —
+        every forward restores implicitly through its start position."""
+        buf = self._fetch(self.state.snapshot_flat(row, step))
+        return self.state.snapshot_split(buf)
 
     def restore(self, row: int, step: int,
                 snap: List[Dict[str, np.ndarray]]) -> None:
         """Write a ``snapshot`` back into the ring at ``step`` — after
         which a forward starting at position ``step`` resumes from it."""
-        assert self.ssm_ring > 0
-        s = step % self.ssm_ring
-        it = iter(snap)
-
-        def put(c):
-            if c is not None and isinstance(c, dict) and "h_ring" in c:
-                sn = next(it)
-                return dict(
-                    c,
-                    h_ring=c["h_ring"].at[:, row, s].set(
-                        jnp.asarray(sn["h"])),
-                    conv_ring=c["conv_ring"].at[:, row, s].set(
-                        jnp.asarray(sn["conv"], c["conv_ring"].dtype)))
-            return c
-
-        self.cache = {"blocks": [put(c) for c in self.cache["blocks"]],
-                      "rem": [put(c) for c in self.cache["rem"]]}
+        self.state.restore(row, step, snap)
 
 
 # ---------------------------------------------------------------------------
@@ -601,23 +486,32 @@ class BatchedEngineBase:
             "d": PagedKVPool(d_pages, page_size),
         }
         self.pool = PoolGroup(self.pools)      # aggregate metrics view
+        # prefill length-ladder quantum: admission groups pad prompts up
+        # to multiples of this, so the pad span (< quantum) must fit the
+        # same ring/slack margins that cover decode-bucket overshoot.
+        self._pq = 8
         # ring deep enough for one worst-case round of forward progress
         # (pending + chunk + branch continuation + batch-pad margin,
-        # including bucket-ladder overshoot) PLUS the rollback span back
-        # across it, with slack; ~KBs per row.
+        # including bucket-ladder overshoot AND prefill-ladder padding)
+        # PLUS the rollback span back across it, with slack; ~KBs per row.
         ssm_ring = (4 * (ecfg.gamma + ecfg.gamma_branch)
-                    + 2 * DL.bucket(ecfg.gamma + 2) + 16)
+                    + 2 * DL.bucket(ecfg.gamma + 2) + 16 + self._pq)
         paged = attn_backend == "paged"
+        lanes = DL.bucket(max_batch)   # admission groups are <= max_batch
         self.tgt_dec = BatchedDecoder(target_params, target_cfg,
                                       n_rows=max_batch, max_len=ecfg.max_len,
                                       paged=self.pools["t"] if paged else None,
-                                      ssm_ring=ssm_ring)
+                                      ssm_ring=ssm_ring,
+                                      prefill_lanes=lanes,
+                                      prefill_quantum=self._pq)
         self.dft_dec = BatchedDecoder(draft_params, draft_cfg,
                                       n_rows=max_batch
                                       * self.draft_rows_per_seq,
                                       max_len=ecfg.max_len,
                                       paged=self.pools["d"] if paged else None,
-                                      ssm_ring=ssm_ring)
+                                      ssm_ring=ssm_ring,
+                                      prefill_lanes=lanes,
+                                      prefill_quantum=self._pq)
         if paged:
             # accounting COW (pool) -> physical COW, each in its own buffer
             self.pools["t"].cow_listeners.append(self.tgt_dec.copy_page)
@@ -627,6 +521,7 @@ class BatchedEngineBase:
             self.swap = PagedStore(swap_pages, page_size,
                                    self.tgt_dec.swap_dim)
         self._swapped: Dict[int, dict] = {}      # rid -> swap metadata
+        self._pending_admits: List[Tuple[_Seq, List[int], bool]] = []
         self.cost = CostModel(c=ecfg.c)
         self.clock = 0.0
         self.timeline: List[Tuple[str, int, int]] = []
@@ -750,8 +645,9 @@ class BatchedEngineBase:
         one round of overshoot (chunk/bonus) plus a branch continuation
         plus bucket-ladder and batch-pad margin — rows must never come
         within a batched call's padding of max_len (see _batched)."""
-        return 2 * (DL.bucket(self.ecfg.gamma + 2)
-                    + DL.bucket(self.ecfg.gamma_branch + 2) + 4)
+        return (2 * (DL.bucket(self.ecfg.gamma + 2)
+                     + DL.bucket(self.ecfg.gamma_branch + 2) + 4)
+                + self._pq)          # prefill-ladder pad span
 
     def can_admit(self, prompt_len: int, max_new: int = 0) -> bool:
         if not self.tgt_dec.free_rows or len(self.active) >= self.max_batch:
@@ -783,9 +679,13 @@ class BatchedEngineBase:
         meta = self._swapped.get(rid)
         return len(meta["seq"].out) if meta is not None else 0
 
-    def admit(self, rid: int, prompt: Sequence[int], max_new: int,
-              on_token=None) -> _Seq:
-        """Admit (or re-admit after preemption) one request."""
+    def reserve(self, rid: int, prompt: Sequence[int], max_new: int,
+                on_token=None) -> _Seq:
+        """Admission bookkeeping for one request (rows, pool streams, swap
+        restore) with the prefill forward DEFERRED: the scheduler reserves
+        a whole admission group, then ``commit_admissions`` ingests it with
+        one batched bucketed prefill per (decoder, ladder rung) instead of
+        one batch-1 forward per request."""
         meta = self._swapped.pop(rid, None)
         if meta is not None:
             seq = meta["seq"]
@@ -811,24 +711,69 @@ class BatchedEngineBase:
         d_row = self.dft_dec.free_rows.pop()
         self.tgt_dec.bind_row(t_row, tk)
         self.dft_dec.bind_row(d_row, dk)
+        restored = False
         if meta is not None and meta.get("swap_key") is not None:
             rows = self.swap.get(meta["swap_key"])
             self.tgt_dec.unpack_row(t_row, rows)
+            if meta.get("ssm_snap") is not None:
+                # the ring's swap side-channel: recurrent state is not
+                # token rows — restore the packed-length checkpoint the
+                # preemption snapshotted (DESIGN.md §7.8)
+                self.tgt_dec.restore(t_row, L, meta["ssm_snap"])
             self.swap.drop(meta["swap_key"])
             seq.feats_last = meta["feats_last"]
-        else:
-            _, feats = self.tgt_dec.prefill_row(t_row, toks[:-1])
-            seq.feats_last = feats[:, 0:1, L - 1, :]
-            seq.stats.target_calls += 1      # swap restore runs no prefill
-        self.dft_dec.prefill_row(d_row, toks[:-1])
+            restored = True
         seq.tgt = _Stream(row=t_row, ing=L, pending=[toks[-1]])
         seq.dft = _Stream(row=d_row, ing=L, pending=[toks[-1]])
         seq.mode, seq.chunk, seq.chunk_q, seq.q_b = "draft", [], [], None
         seq.admit_order = self._admit_counter
         self._admit_counter += 1
         self.active.append(seq)
+        self._pending_admits.append((seq, toks[:-1], restored))
+        return seq
+
+    def commit_admissions(self) -> None:
+        """Run the deferred prefills of the current admission group: group
+        prompts onto the prefill length ladder and ingest each rung with
+        ONE forward per decoder (swap-restored target rows skip theirs).
+        One admission round therefore costs one forward per distinct
+        bucket, not one per request — and one compiled trace per bucket,
+        not one per distinct prompt length."""
+        pending, self._pending_admits = self._pending_admits, []
+        if not pending:
+            return
+        buckets: Dict[int, List[Tuple[_Seq, List[int], bool]]] = {}
+        for seq, toks, restored in pending:
+            width = DL.prefill_bucket(len(toks), self._pq)
+            buckets.setdefault(width, []).append((seq, toks, restored))
+        lanes = self.tgt_dec.prefill_lanes
+        for width in sorted(buckets):
+            grp = buckets[width]
+            for i in range(0, len(grp), lanes):
+                chunk = grp[i:i + lanes]
+                tparts = [(seq.tgt.row, toks)
+                          for seq, toks, restored in chunk if not restored]
+                if tparts:
+                    _, feats = self.tgt_dec.prefill_rows(tparts)
+                    lane = 0
+                    for seq, toks, restored in chunk:
+                        if restored:
+                            continue
+                        seq.feats_last = feats[:, lane:lane + 1,
+                                               len(toks) - 1, :]
+                        seq.stats.target_calls += 1   # restores skip this
+                        lane += 1
+                self.dft_dec.prefill_rows(
+                    [(seq.dft.row, toks) for seq, toks, _ in chunk])
         if self.debug_check:
             self.pool.check()
+
+    def admit(self, rid: int, prompt: Sequence[int], max_new: int,
+              on_token=None) -> _Seq:
+        """Admit (or re-admit after preemption) one request immediately —
+        a singleton admission group."""
+        seq = self.reserve(rid, prompt, max_new, on_token=on_token)
+        self.commit_admissions()
         return seq
 
     # ----------------------------------------------------------- preemption
@@ -839,7 +784,7 @@ class BatchedEngineBase:
         re-admission."""
         victim = max(self.active, key=lambda s: s.admit_order)
         self.active.remove(victim)
-        meta = {"seq": victim, "swap_key": None,
+        meta = {"seq": victim, "swap_key": None, "ssm_snap": None,
                 "feats_last": victim.feats_last}
         if self.swap is not None and victim.tgt.ing > 0:
             key = ("swap", victim.rid, victim.admit_order)
@@ -847,6 +792,11 @@ class BatchedEngineBase:
                 self.swap.put(key, self.tgt_dec.pack_row(victim.tgt.row,
                                                          victim.tgt.ing))
                 meta["swap_key"] = key
+                if self.tgt_dec.has_ssm:
+                    # recurrent state rides the metadata as one explicit
+                    # checkpoint at the packed length (paged hybrid swap)
+                    meta["ssm_snap"] = self.tgt_dec.snapshot(
+                        victim.tgt.row, victim.tgt.ing)
             except PoolExhausted:
                 pass
         tk, dk = self._pool_keys(victim.rid)
@@ -1306,78 +1256,130 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             last[st.row] = len(toks) - 1
         ticks = 1
 
-        serial_live = {s.rid: True for s in serial}
+        # Double-buffered tick pipeline (ROADMAP PR 4 remainder): tick t's
+        # sampling is DISPATCHED before tick t-1's [token, conf] packet is
+        # fetched, so the draft phase's one blocking fetch overlaps the
+        # device computing the next tick.  Stop decisions therefore land
+        # one tick late: epsilon stops are applied OPTIMISTICALLY — the
+        # row's sample is ingested as if it kept drafting, and when the
+        # packet says it should have stopped, the one over-ingested token
+        # is pruned exactly like any rollback (positional reset + page
+        # reclaim).  Deterministic stops (sig == 0, chunk length == gamma,
+        # branch tick counts) never over-ingest.  Uniform coordinates are
+        # staged from per-request bases (ctr0 + own tick index), identical
+        # to the resolved-counter consumption, so streams stay
+        # batch-composition independent.
+        live = {s.rid: True for s in serial}
+        reads = {s.rid: 0 for s in serial}     # ticks staged so far
+        ctr0 = {s.rid: s.ctr for s in serial}
+        b_ctr0 = {s.rid: s.ctr for s in branchers}
         branch_j = {s.rid: 0 for s in branchers}
-        while True:
-            # which rows need a read this tick?
-            readers = [s for s in serial if serial_live[s.rid]]
-            br_read = [s for s in branchers if branch_j[s.rid] <= gb]
-            if not readers and not br_read:
-                break
-            rids = np.zeros(n_d, np.int32)
-            ctrs = np.zeros(n_d, np.int32)
-            for s in readers:
-                rids[s.dft.row] = s.rid
-                ctrs[s.dft.row] = s.ctr
-            for s in br_read:
-                for i, st in enumerate(bsets[s.rid].streams):
-                    rids[st.row] = s.rid
-                    # branch lane i draws uniform (rid, ctr + i): the
-                    # request's counter advances by its OWN k per tick
-                    ctrs[st.row] = s.ctr + i
-            toks_dev, qsl, packed = DL.tick_sample(
-                lg, jnp.asarray(last), jnp.asarray(rids), jnp.asarray(ctrs),
-                self._key, dtemp=self._dt, stemp=self._st)
-            pkt = self._fetch(packed)           # (n_d, 2) f32 — tiny
-            ingest_pairs = []
-            mask_any = False
-            # serial chunks: read -> stop? -> keep sample -> ingest
-            for s in readers:
+
+        def resolve(p) -> None:
+            """Apply one fetched tick packet: keep/stop serial chunks
+            (pruning an optimistic over-ingest on epsilon stops), record
+            branch continuations."""
+            _, qsl_p, packed_p, srd, brd = p
+            pkt = self._fetch(packed_p)         # (n_d, 2) f32 — tiny
+            for s, i in srd:
+                if not live[s.rid]:
+                    continue            # trailing read past its own stop
                 row = s.dft.row
                 conf = float(pkt[row, 1])
-                stop = False
-                if sig[s.rid] == 0:
-                    stop = True
+                over = False
+                if sig[s.rid] == 0 or i >= g:
+                    stop = True                  # deterministic: no ingest
                 elif sig[s.rid] == 1 and conf < self.ecfg.epsilon:
                     stop = True
-                elif len(s.chunk) >= g:
-                    stop = True
+                    over = True                  # token i rode optimism
+                else:
+                    stop = False
                 if stop:
-                    s.q_b = qsl[row]
+                    s.q_b = qsl_p[row]
                     s.q_b_conf = conf
                     s.stats.draft_tokens += len(s.chunk) + 1
-                    serial_live[s.rid] = False
+                    live[s.rid] = False
+                    if over:
+                        # rollback-aware un-ingest of the speculative token
+                        self.pools["d"].truncate(("d", s.rid),
+                                                 s.dft.ing - 1, "prune")
+                        s.dft.ing -= 1
+                        self.dft_dec.row_pos[s.dft.row] = s.dft.ing
                     continue
                 s.chunk.append(int(pkt[row, 0]))
-                s.chunk_q.append(qsl[row])
+                s.chunk_q.append(qsl_p[row])
                 s.ctr += 1
-                ingest_pairs.append((s.dft, ("d", s.rid)))
-                mask_any = True
-            # branch continuations: read -> record -> ingest
-            for s in br_read:
-                j = branch_j[s.rid]
+            for s, j in brd:
                 bset = bsets[s.rid]
                 if j == gb:
                     for i, st in enumerate(bset.streams):
-                        bset.final_sig[i] = qsl[st.row]
+                        bset.final_sig[i] = qsl_p[st.row]
                         bset.final_conf[i] = float(pkt[st.row, 1])
-                    branch_j[s.rid] = gb + 1
                     continue
                 for i, st in enumerate(bset.streams):
                     row = st.row
                     bset.conts[i].append(int(pkt[row, 0]))
-                    bset.cont_q[i].append(qsl[row])
+                    bset.cont_q[i].append(qsl_p[row])
                     bset.confs[i].append(float(pkt[row, 1]))
-                    ingest_pairs.append((st, self._bkey(s.rid, i)))
-                    mask_any = True
                 s.stats.draft_tokens += 1
                 s.ctr += len(bset.streams)
+
+        pend = None        # the dispatched-but-unresolved tick
+        while True:
+            # which rows read a tick now?  (live lags one tick for epsilon
+            # stops — the extra read samples garbage the resolve skips)
+            readers = [s for s in serial
+                       if live[s.rid] and reads[s.rid] <= g
+                       and not (sig[s.rid] == 0 and reads[s.rid] >= 1)]
+            br_read = [s for s in branchers if branch_j[s.rid] <= gb]
+            if not readers and not br_read:
+                if pend is not None:
+                    resolve(pend)               # drain the pipeline
+                    pend = None
+                    continue
+                break
+            rids = np.zeros(n_d, np.int32)
+            ctrs = np.zeros(n_d, np.int32)
+            srd = []
+            for s in readers:
+                i = reads[s.rid]
+                rids[s.dft.row] = s.rid
+                ctrs[s.dft.row] = ctr0[s.rid] + i
+                srd.append((s, i))
+                reads[s.rid] = i + 1
+            brd = []
+            for s in br_read:
+                j = branch_j[s.rid]
+                k_s = len(bsets[s.rid].streams)
+                for i, st in enumerate(bsets[s.rid].streams):
+                    rids[st.row] = s.rid
+                    # branch lane i draws uniform (rid, base + j*k + i):
+                    # the request consumes its OWN k per tick
+                    ctrs[st.row] = b_ctr0[s.rid] + j * k_s + i
+                brd.append((s, j))
                 branch_j[s.rid] = j + 1
-            if not mask_any:
-                continue
-            lg, _ = self._ingest_dev(self.dft_dec, ingest_pairs, toks_dev)
-            last[:] = 0
-            ticks += 1
+            toks_dev, qsl, packed = DL.tick_sample(
+                lg, jnp.asarray(last), jnp.asarray(rids), jnp.asarray(ctrs),
+                self._key, dtemp=self._dt, stemp=self._st)
+            # fetch the PREVIOUS tick's packet while this tick computes
+            if pend is not None:
+                resolve(pend)
+            pend = (toks_dev, qsl, packed, srd, brd)
+            # optimistic ingest: every row still (believed) drafting
+            # chains its sample straight into the next forward
+            ingest_pairs = []
+            for s, i in srd:
+                if live[s.rid] and sig[s.rid] != 0 and i < g:
+                    ingest_pairs.append((s.dft, ("d", s.rid)))
+            for s, j in brd:
+                if j < gb:
+                    for i, st in enumerate(bsets[s.rid].streams):
+                        ingest_pairs.append((st, self._bkey(s.rid, i)))
+            if ingest_pairs:
+                lg, _ = self._ingest_dev(self.dft_dec, ingest_pairs,
+                                         toks_dev)
+                last[:] = 0
+                ticks += 1
 
         # ---- PHASE B: fetch the verdict packet, commit per brancher ----
         committed: Dict[int, int] = {}

@@ -39,9 +39,9 @@ import jax.numpy as jnp
 from repro.kernels import verify_accept as _va
 from repro.runtime import sampling as S
 
-__all__ = ["bucket", "kernel_route", "tick_sample", "masked_token_column",
-           "compose_verify_tokens", "sps_verify", "draw_cands",
-           "branch_verify"]
+__all__ = ["bucket", "prefill_bucket", "kernel_route", "tick_sample",
+           "masked_token_column", "compose_verify_tokens", "sps_verify",
+           "draw_cands", "branch_verify"]
 
 
 def bucket(n: int) -> int:
@@ -51,6 +51,19 @@ def bucket(n: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def prefill_bucket(n: int, quantum: int) -> int:
+    """Prefill length ladder: round a prompt length up to a multiple of
+    ``quantum``.  Decode widths ride the power-of-two ``bucket`` ladder,
+    but prompt lengths are unbounded — power-of-two padding could overshoot
+    by max_len/2, far past the ring_slack / checkpoint-ring margins that
+    make ahead-of-length pad writes safe.  A fixed quantum bounds the pad
+    span to ``quantum - 1`` (a margin the serving engines add to their
+    rings) while still collapsing arbitrary prompt lengths onto one
+    compiled trace per rung instead of one per distinct length."""
+    assert quantum > 0
+    return max(quantum, -(-n // quantum) * quantum)
 
 
 def kernel_route(ttemp: float, dtemp: float) -> bool:

@@ -20,12 +20,15 @@ of Eq. (8):
     attribute reclamation.
 
 The pool is the serving scheduler's admission/preemption authority
-(``has_room`` / ``would_need``): the reference CPU decoder keeps dense
-per-row caches, but every slot it writes is accounted here, so pool
-exhaustion and preemption behave exactly as they would with physically
-paged storage.  ``PagedStore`` adds physically paged storage (used as the
-preemption swap space) read back through the Pallas paged-gather kernel
-(kernels/paged.py).
+(``has_room`` / ``would_need``) for BOTH storage backends: on the default
+paged backend the tables are the physical layout (decode_state's
+``PagedAttnState`` registers the decoders' buffers on ``cow_listeners``,
+so an accounting COW split is mirrored by a physical page copy before the
+next forward), while the dense reference decoder keeps N-row caches whose
+every written slot is accounted here — pool exhaustion and preemption
+behave identically either way.  ``PagedStore`` adds standalone paged
+storage (used as the preemption swap space) read back through the Pallas
+paged-gather kernel (kernels/paged.py).
 """
 from __future__ import annotations
 

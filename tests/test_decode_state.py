@@ -1,0 +1,268 @@
+"""DecodeState backend layer (DESIGN.md §7.8).
+
+Three pins on the composable decode-state layer:
+
+  * swappable matrix — which (backend, config) pairs may pack token rows
+    for preemption swap: paged attention packs (hybrid rings ride a
+    snapshot), dense hybrid stays the recompute oracle, window rings fold
+    positions and never pack, attention-free configs have nothing to pack;
+  * paged-hybrid rollback property (hypothesis) — random accept/reject/
+    rollback/preempt scripts over random hybrid configs on the PAGED
+    backend (mixed pytree: paged attention slots + per-row mamba rings)
+    are equivalent to sequential replay from scratch, including full
+    pack/snapshot -> close -> reopen-at-a-different-physical-layout ->
+    unpack/restore preemption roundtrips;
+  * batched bucketed prefill — one admission round's prefills cost ONE
+    decoder forward and ONE compiled trace per prefill-ladder bucket, not
+    one per request / per distinct prompt length.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, dense_pattern
+from repro.runtime.engines import EngineConfig
+from repro.serving.batched_engine import BatchedDecoder, BatchedSpSEngine
+from repro.serving.decode_state import DecodeState
+from repro.serving.kv_pool import PagedKVPool
+
+VOCAB = 61
+
+
+def _hybrid_cfg(pattern, d=32, N=8, Cv=4, window=0, vocab=VOCAB):
+    return ModelConfig(name="ds", family="hybrid", num_layers=len(pattern),
+                       d_model=d, num_heads=2, num_kv_heads=1, d_ff=2 * d,
+                       vocab_size=vocab, pattern=pattern, ssm_state=N,
+                       ssm_conv=Cv, sliding_window=window, dtype="float32")
+
+
+def _dense_cfg(name="ds-dense", layers=2, d=32, window=0, pattern=None):
+    return ModelConfig(name=name, family="dense", num_layers=layers,
+                       d_model=d, num_heads=2, num_kv_heads=1, d_ff=2 * d,
+                       vocab_size=VOCAB, sliding_window=window,
+                       pattern=pattern or dense_pattern(0), dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# swappable matrix
+# ---------------------------------------------------------------------------
+
+def test_swappable_matrix():
+    hyb = _hybrid_cfg((("mamba", "dense"), ("attn", "dense")))
+    ssm = _hybrid_cfg((("mamba", "none"),))
+    loc = _dense_cfg(window=8, pattern=(("local", "dense"),))
+    glb = _dense_cfg()
+
+    def pool():
+        return PagedKVPool(32, 4)
+
+    def state(cfg, paged=None, ring=0):
+        return DecodeState(cfg, n_rows=2, max_len=64, paged=paged,
+                           ssm_ring=ring)
+
+    # dense global attention: token rows pack exactly
+    assert state(glb).swappable
+    # window rings fold positions -> cannot be reconstructed from rows
+    assert not state(loc).swappable
+    # dense hybrid: deliberately the recompute-at-readmission oracle
+    assert not state(hyb, ring=8).swappable
+    # paged hybrid: attention packs from pages, rings ride the snapshot
+    s = state(hyb, paged=pool(), ring=8)
+    assert s.swappable and s.has_ssm and s.swap_dim > 0
+    # paged local: every position is physically stored, packs exactly
+    assert state(loc, paged=pool()).swappable
+    # attention-free: nothing token-shaped to pack
+    assert not state(ssm, paged=pool(), ring=8).swappable
+    # SSM without a checkpoint ring cannot batch at all
+    with pytest.raises(ValueError, match="ring"):
+        state(ssm, paged=pool(), ring=0)
+
+
+# ---------------------------------------------------------------------------
+# paged-hybrid rollback/preempt property (hypothesis)
+# ---------------------------------------------------------------------------
+
+PATTERNS = [
+    (("mamba", "dense"), ("attn", "dense")),                  # jamba-ish
+    (("mamba", "dense"), ("local", "dense"), ("attn", "dense")),
+]
+
+
+def _call(dec, pool, keys, parts):
+    """Mirror of BatchedEngineBase._batched with pool accounting: listed
+    rows extend their stream and ingest from their start position, idle
+    rows tick in place at their own write head."""
+    T = max(len(t) for _, t, _ in parts)
+    toks = np.zeros((dec.n_rows, T), np.int32)
+    pos = np.minimum(dec.row_pos, dec.max_len - T).astype(np.int32)
+    for row, t, p0 in parts:
+        pool.extend(keys[row], p0 + len(t) - pool.length(keys[row]))
+        toks[row, :len(t)] = t
+        if len(t) < T:
+            toks[row, len(t):] = t[-1]
+        pos[row] = p0
+    logits, _ = dec.step(toks, pos)
+    for row, t, p0 in parts:
+        dec.row_pos[row] = p0 + len(t)
+    return np.asarray(logits)
+
+
+def _preempt_roundtrip(dec, pool, keys, row, length, rng):
+    """Engine-shaped paged preemption: pack the attention half + snapshot
+    the ring, free the stream, churn the free list so re-admission lands
+    on a DIFFERENT physical layout, then unpack + restore."""
+    packed = dec.pack_row(row, length)
+    snap = dec.snapshot(row, length)
+    pool.close(keys[row], "preempt")
+    dec.unbind_row(row)
+    pad = ("pad", row)
+    pool.open(pad)
+    pool.extend(pad, int(rng.integers(1, 9)))
+    key2 = (keys[row], "re")
+    pool.open(key2)
+    pool.extend(key2, length)
+    pool.close(pad, "retire")
+    dec.bind_row(row, key2)
+    dec.unpack_row(row, packed)
+    dec.restore(row, length, snap)
+    keys[row] = key2
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_paged_hybrid_rollback_equals_replay_from_scratch(seed):
+    """THE mixed-pytree rollback invariant: drive a paged-hybrid decoder
+    with a random accept/reject/rollback/preempt script — rows speculating
+    different spans, rolling back to random accept points, being preempted
+    (pack + ring snapshot) and re-admitted at a different physical page
+    layout, idling through other rows' rounds — and the surviving streams
+    must equal a fresh decoder that ingests the committed tokens once,
+    sequentially, with no speculation at all."""
+    rng = np.random.default_rng(seed)
+    cfg = _hybrid_cfg(PATTERNS[int(rng.integers(len(PATTERNS)))],
+                      d=int(rng.choice([16, 32])),
+                      N=int(rng.choice([4, 8])),
+                      Cv=int(rng.choice([2, 4])),
+                      window=16)
+    params = M.init_params(jax.random.PRNGKey(int(rng.integers(1 << 16))),
+                           cfg)
+    ring = int(rng.choice([12, 16]))
+    pool = PagedKVPool(96, 4)
+    dec = BatchedDecoder(params, cfg, n_rows=2, max_len=96, paged=pool,
+                         ssm_ring=ring)
+    pool.cow_listeners.append(dec.copy_page)
+    assert dec.swappable
+
+    committed, keys = {}, {}
+    for row in (0, 1):
+        r = dec.free_rows.pop()
+        committed[r] = list(map(int, rng.integers(0, VOCAB,
+                                                  int(rng.integers(4, 8)))))
+        keys[r] = ("s", r)
+        pool.open(keys[r])
+        pool.extend(keys[r], len(committed[r]))
+        dec.bind_row(r, keys[r])
+        dec.prefill_row(r, committed[r])
+
+    rows = sorted(committed)
+    for _ in range(5):
+        active = [r for r in rows if rng.random() < 0.8] or [rows[0]]
+        parts, drafts = [], {}
+        for r in active:
+            k = int(rng.integers(1, 5))
+            drafts[r] = list(map(int, rng.integers(0, VOCAB, k)))
+            parts.append((r, drafts[r], len(committed[r])))
+        _call(dec, pool, keys, parts)
+        for r in active:
+            # verdict: accept a random prefix, reject the rest; rollback
+            # is positional — pages truncate, the ring resumes from the
+            # accept-point checkpoint, the write head follows the reset
+            n_acc = int(rng.integers(0, len(drafts[r]) + 1))
+            committed[r] += drafts[r][:n_acc]
+            pool.truncate(keys[r], len(committed[r]), "rollback")
+            dec.row_pos[r] = len(committed[r])
+        if rng.random() < 0.5:
+            r = rows[int(rng.integers(len(rows)))]
+            _preempt_roundtrip(dec, pool, keys, r, len(committed[r]), rng)
+        pool.check()
+
+    probe = int(rng.integers(0, VOCAB))
+    got = _call(dec, pool, keys,
+                [(r, [probe], len(committed[r])) for r in rows])
+
+    pool2 = PagedKVPool(96, 4)
+    fresh = BatchedDecoder(params, cfg, n_rows=2, max_len=96, paged=pool2,
+                           ssm_ring=ring)
+    pool2.cow_listeners.append(fresh.copy_page)
+    keys2 = {}
+    pool2.open("shift")
+    pool2.extend("shift", 3)            # different physical page layout
+    for r in rows:
+        fresh.free_rows.remove(r)
+        keys2[r] = ("f", r)
+        pool2.open(keys2[r])
+        pool2.extend(keys2[r], len(committed[r]))
+        fresh.bind_row(r, keys2[r])
+        fresh.prefill_row(r, committed[r])
+    want = _call(fresh, pool2, keys2,
+                 [(r, [probe], len(committed[r])) for r in rows])
+    for r in rows:
+        g, w = got[r, 0], want[r, 0]
+        # the SSM half is bitwise (checkpoint loads); attention K/V
+        # matmuls see different call chunkings between speculative decode
+        # and one-shot replay (XLA reduction order: ~1e-7 LSB noise) — the
+        # stream-level invariant is exact
+        assert int(g.argmax()) == int(w.argmax())
+        np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched bucketed prefill: one forward / one trace per bucket
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_prefill_one_forward_per_bucket(backend):
+    """An admission round's prefills are pinned to ONE decoder call per
+    (decoder, prefill-ladder bucket) — not one per request — and to one
+    compiled shape per bucket — not one per distinct prompt length."""
+    tcfg = _dense_cfg("pf-t", layers=2, d=64)
+    dcfg = _dense_cfg("pf-d", layers=1, d=32)
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    ecfg = EngineConfig(gamma=3, c=4.0, temperature=0.0, epsilon=0.4,
+                        signal_temperature=0.5, k_max=2, max_len=128)
+    eng = BatchedSpSEngine(dp, dcfg, tp, tcfg, ecfg, max_batch=4,
+                           page_size=4, attn_backend=backend)
+    rng = np.random.default_rng(7)
+    q = eng.tgt_dec.prefill_quantum
+
+    # one admission round, three DIFFERENT prompt lengths, same bucket
+    for rid, plen in enumerate((4, 6, 8)):          # L = plen - 1 <= q
+        eng.reserve(rid, list(map(int, rng.integers(0, VOCAB, plen))), 4)
+    t0, d0 = eng.tgt_dec.n_calls, eng.dft_dec.n_calls
+    eng.commit_admissions()
+    assert eng.tgt_dec.n_calls - t0 == 1            # ONE forward, 3 rows
+    assert eng.dft_dec.n_calls - d0 == 1
+    assert eng.tgt_dec.prefill_shapes == {(4, q)}   # ONE trace for the rung
+    assert eng.dft_dec.prefill_shapes == {(4, q)}
+
+    # a later admission on the next rung adds exactly one more shape
+    eng.reserve(3, list(map(int, rng.integers(0, VOCAB, q + 3))), 4)
+    t0 = eng.tgt_dec.n_calls
+    eng.commit_admissions()
+    assert eng.tgt_dec.n_calls - t0 == 1
+    assert eng.tgt_dec.prefill_shapes == {(4, q), (4, 2 * q)}
+
+    # mixed-bucket group: one forward per rung, shapes reused
+    for seq in list(eng.active):
+        seq.done = True
+    eng.retire_done()
+    for rid, plen in enumerate((5, q + 2)):
+        eng.reserve(10 + rid,
+                    list(map(int, rng.integers(0, VOCAB, plen))), 4)
+    t0 = eng.tgt_dec.n_calls
+    eng.commit_admissions()
+    assert eng.tgt_dec.n_calls - t0 == 2            # two rungs touched
+    assert eng.tgt_dec.prefill_shapes == {(4, q), (4, 2 * q)}

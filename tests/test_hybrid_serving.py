@@ -1,10 +1,13 @@
-"""Batched hybrid (SSM-bearing) serving equivalence (DESIGN.md §7.6).
+"""Batched hybrid (SSM-bearing) serving equivalence (DESIGN.md §7.6, §7.8).
 
 The continuous-batching engines must serve falcon-mamba- and jamba-shaped
 configs losslessly through the checkpoint-ring SSM cache: token-for-token
 against the autoregressive reference AND the sequential engines (greedy),
 batch-composition independent under temp-1 sampling (same per-request
-seeds), and exact through mid-stream preemption."""
+seeds), and exact through mid-stream preemption — on the dense backend AND
+on the paged backend, where the DecodeState layer mixes paged attention
+slots with per-row mamba rings in one pytree (and preemption swaps a
+hybrid row as paged token rows plus one explicit ring checkpoint)."""
 import jax
 import numpy as np
 import pytest
@@ -56,14 +59,16 @@ def _serve(pair_, cls, rids=range(N_REQ), on_token=None, **ekw):
     return eng, res
 
 
+@pytest.mark.parametrize("backend", ["dense", "paged"])
 @pytest.mark.parametrize("cls", [BatchedSpSEngine, BatchedSpecBranchEngine])
-def test_hybrid_batched_greedy_lossless(pair, cls):
-    """Batched serving of an SSM-bearing config == the AR reference: every
-    rejection rolled the recurrent state back to its accept point."""
+def test_hybrid_batched_greedy_lossless(pair, cls, backend):
+    """Batched serving of an SSM-bearing config == the AR reference on
+    BOTH storage backends: every rejection rolled the recurrent state back
+    to its accept point (and, paged, reclaimed the attention pages)."""
     kind, _, _, _, _, _, refs = pair
-    eng, res = _serve(pair, cls)
+    eng, res = _serve(pair, cls, attn_backend=backend)
     for i, want in enumerate(refs):
-        assert res[i].tokens == want, (kind, i)
+        assert res[i].tokens == want, (kind, backend, i)
     assert eng.pool.pages_in_use == 0
     eng.pool.check()
 
@@ -81,17 +86,20 @@ def test_hybrid_batched_equals_sequential_engine(pair):
             assert r.tokens == res[i].tokens == refs[i], (kind, cls.name, i)
 
 
-def test_hybrid_temp1_solo_equals_batched(pair):
-    """Sampled (temp-1) streams are batch-composition independent: the
-    per-request RNG sees identical logits whether the request rides solo
-    or with batchmates speculating/rolling back around it."""
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_hybrid_temp1_solo_equals_batched(pair, backend):
+    """Sampled (temp-1) streams are batch-composition independent on both
+    backends: the per-request RNG sees identical logits whether the
+    request rides solo or with batchmates speculating/rolling back around
+    it — including the fixed-lane bucketed prefill (pad lanes must be
+    bitwise inert)."""
     kind = pair[0]
     _, batch = _serve(pair, BatchedSpecBranchEngine,
-                      ecfg={"temperature": 1.0})
+                      ecfg={"temperature": 1.0}, attn_backend=backend)
     for i in range(N_REQ):
         _, solo = _serve(pair, BatchedSpecBranchEngine, rids=[i],
-                         ecfg={"temperature": 1.0})
-        assert solo[i].tokens == batch[i].tokens, (kind, i)
+                         ecfg={"temperature": 1.0}, attn_backend=backend)
+        assert solo[i].tokens == batch[i].tokens, (kind, backend, i)
 
 
 def test_hybrid_midstream_preemption_exact(pair):
@@ -141,10 +149,27 @@ def test_sequential_specbranch_ssm_long_branch_lossless(pair):
         assert r.tokens == ref, (kind, i)
 
 
-def test_hybrid_rejects_paged_backend(pair):
-    """Recurrent state is not positional KV: the paged backend must refuse
-    SSM-bearing configs with an actionable error, not corrupt streams."""
-    _, dp, dcfg, tp, tcfg, _, _ = pair
-    with pytest.raises(ValueError, match="dense"):
-        BatchedSpSEngine(dp, dcfg, tp, tcfg, _ecfg(), max_batch=2,
-                         page_size=4, attn_backend="paged")
+@pytest.mark.parametrize("swap_pages", [0, 64])
+def test_hybrid_paged_preemption_exact(pair, swap_pages):
+    """Paged-backend preemption of hybrid rows stays exact, with and
+    without the swap store.  With swap, an attention-bearing hybrid row
+    parks as paged token rows PLUS one explicit ring checkpoint (the
+    recurrent half of the §7.8 swap path); attention-free configs fall
+    back to prefix recompute (nothing token-shaped to pack)."""
+    kind, dp, dcfg, tp, tcfg, prompts, refs = pair
+    eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, _ecfg(),
+                                  max_batch=N_REQ, page_size=2,
+                                  pool_pages=44, swap_pages=swap_pages,
+                                  attn_backend="paged", debug_check=True)
+    has_attn = tcfg.has_attention()
+    assert eng.tgt_dec.swappable == has_attn
+    assert (eng.swap is not None) == (has_attn and swap_pages > 0)
+    sched = ContinuousBatchScheduler(eng)
+    res = sched.run([ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
+                     for i, p in enumerate(prompts)])
+    assert sched.metrics.preemptions > 0
+    for i, want in enumerate(refs):
+        assert res[i].tokens == want, (kind, swap_pages, i)
+    assert eng.pool.pages_in_use == 0
+    if eng.swap is not None:
+        assert eng.swap.pool.pages_in_use == 0
