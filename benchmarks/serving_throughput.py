@@ -43,6 +43,8 @@ import jax  # noqa: E402
 
 from repro.data.synthetic import ZipfMarkov  # noqa: E402
 from repro.models import model as M  # noqa: E402
+from repro.obs import (NULL_RECORDER, TraceRecorder,  # noqa: E402
+                       write_metrics, write_trace)
 from repro.models.config import ModelConfig, dense_pattern  # noqa: E402
 from repro.runtime.cost_model import CostModel  # noqa: E402
 from repro.runtime.engines import EngineConfig  # noqa: E402
@@ -81,10 +83,11 @@ def run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
 
 
 def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
-                max_batch, attn_backend="paged") -> dict:
+                max_batch, attn_backend="paged", rec=NULL_RECORDER) -> dict:
     eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
                                   max_batch=max_batch, page_size=16,
                                   attn_backend=attn_backend)
+    eng.set_recorder(rec)
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=n_new,
                          arrival=i * interval)
@@ -100,6 +103,46 @@ def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
              "step_wall_p95")} | {
         "reclaimed_speculative_pages":
             rep["pool"]["reclaimed_speculative_pages"]}
+
+
+def overhead_gate(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, max_batch,
+                  attn_backend) -> TraceRecorder:
+    """Tracing-overhead gate (ISSUE 6 satellite 5): after a jit warm-up
+    run, interleave untraced (NullRecorder) and traced runs and compare
+    best-of-2 wall clocks — fail (exit 1) if tracing costs >10%.  The
+    modeled tokens_per_cost must be bit-identical between the two paths
+    (the recorder must never change scheduling decisions).  Returns the
+    last traced recorder so its trace/metrics can be dumped as CI
+    artifacts without an extra run."""
+    def one(rec):
+        t0 = time.time()
+        rep = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, 0.0,
+                          max_batch, attn_backend=attn_backend, rec=rec)
+        return time.time() - t0, rep["tokens_per_cost"]
+
+    one(NULL_RECORDER)                      # jit warm-up, discarded
+    walls_off, walls_on = [], []
+    rec = NULL_RECORDER
+    tpc_off = tpc_on = None
+    for _ in range(2):                       # interleaved: fair vs drift
+        w, tpc_off = one(NULL_RECORDER)
+        walls_off.append(w)
+        rec = TraceRecorder()
+        w, tpc_on = one(rec)
+        walls_on.append(w)
+    best_off, best_on = min(walls_off), min(walls_on)
+    ratio = best_on / max(best_off, 1e-9)
+    print(f"overhead gate: untraced {best_off:.3f}s vs traced "
+          f"{best_on:.3f}s (x{ratio:.3f}, {len(rec.events)} events)")
+    if tpc_on != tpc_off:
+        print(f"  FAIL: tracing changed the modeled schedule "
+              f"(tokens_per_cost {tpc_on} != {tpc_off})")
+        sys.exit(1)
+    if ratio > 1.10:
+        print("  FAIL: tracing-enabled run >10% slower than untraced")
+        sys.exit(1)
+    print("overhead gate passed")
+    return rec
 
 
 def main() -> None:
@@ -127,6 +170,16 @@ def main() -> None:
                     help="diff per-step host-transfer bytes against this "
                     "committed baseline; exit 1 on >2x regression or on "
                     "losing the >=10x reduction vs the pre-PR host loop")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto trace.json from a traced run "
+                    "of the first sweep cell")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the traced run's metrics registry "
+                    "(.json -> JSON, else plain text)")
+    ap.add_argument("--overhead-gate", action="store_true",
+                    help="interleave traced/untraced runs of the first "
+                    "cell and exit 1 if tracing costs >10% wall or "
+                    "changes the modeled schedule")
     args = ap.parse_args()
 
     if args.hybrid and args.pair != "random":
@@ -193,6 +246,24 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, default=float)
     print(f"wrote {args.out} ({len(grid)} cells)")
+
+    if args.overhead_gate or args.trace or args.metrics_out:
+        mb0 = args.batch_sizes[0]
+        if args.overhead_gate:
+            rec = overhead_gate(dp, dcfg, tp, tcfg, ecfg, prompts,
+                                args.new_tokens, mb0, args.attn_backend)
+        else:
+            rec = TraceRecorder()
+            run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
+                        args.new_tokens, 0.0, mb0,
+                        attn_backend=args.attn_backend, rec=rec)
+        if args.trace:
+            write_trace(rec, args.trace)
+            print(f"trace written to {args.trace} ({len(rec.events)} "
+                  f"events)")
+        if args.metrics_out:
+            write_metrics(rec.registry, args.metrics_out)
+            print(f"metrics written to {args.metrics_out}")
 
     if args.check_baseline:
         with open(args.check_baseline) as f:

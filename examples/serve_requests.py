@@ -2,7 +2,17 @@
 the full SpecBranch stack (H-RAD + branch parallelism), plus the per-request
 and aggregate serving report.
 
-  PYTHONPATH=src python examples/serve_requests.py [n_requests]
+  PYTHONPATH=src python examples/serve_requests.py [n_requests] [trace.json]
+
+Pass a second argument to record a speculation-aware trace
+(DESIGN.md §7.9): per-request rows with admit->finish spans and per-round
+spec events (gamma, accepted, rolled-back tokens, rollback cause, H-RAD
+signal).  Open the written file at https://ui.perfetto.dev (or
+chrome://tracing) — the request rows show which rounds rolled back and
+why.  The serving CLI exposes the same recorder on both modes:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode batched \
+      --pair jamba-shaped --trace trace.json --metrics-out metrics.json
 """
 import os
 import sys
@@ -14,6 +24,7 @@ import jax  # noqa: E402
 
 from benchmarks.common import default_ecfg, hrad_for_pair  # noqa: E402
 from repro.data.synthetic import ZipfMarkov  # noqa: E402
+from repro.obs import NULL_RECORDER, TraceRecorder, write_trace  # noqa: E402
 from repro.runtime.cost_model import CostModel  # noqa: E402
 from repro.runtime.scheduler import Request, Scheduler  # noqa: E402
 from repro.runtime.specbranch import SpecBranchEngine  # noqa: E402
@@ -22,11 +33,14 @@ from repro.training.pairs import VOCAB, get_pair  # noqa: E402
 
 def main() -> None:
     n_req = int(sys.argv[1]) if len(sys.argv) > 1 else 4
+    trace_path = sys.argv[2] if len(sys.argv) > 2 else None
     kind = "misaligned"
     dp, dcfg, tp, tcfg = get_pair(kind)
     ecfg = default_ecfg(kind)
     hrad = hrad_for_pair(kind)
     engine = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg, hrad_params=hrad)
+    rec = TraceRecorder() if trace_path else NULL_RECORDER
+    engine.set_recorder(rec)
 
     zm = ZipfMarkov(vocab=VOCAB, seed=7)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=32)
@@ -43,6 +57,10 @@ def main() -> None:
               f"{r.wall_s:7.2f}")
     agg = sched.aggregate(done, cost)
     print(f"\naggregate: {agg}")
+    if trace_path:
+        write_trace(rec, trace_path)
+        print(f"trace written to {trace_path} ({len(rec.events)} events); "
+              f"open it at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

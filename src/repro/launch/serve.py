@@ -36,6 +36,8 @@ import time
 import jax
 
 from repro.data.synthetic import ZipfMarkov
+from repro.obs import (NULL_RECORDER, TraceRecorder, profiler_session,
+                       write_metrics, write_trace)
 from repro.runtime.cost_model import CostModel
 from repro.runtime.engines import (AdaEDLEngine, AutoregressiveEngine,
                                    EngineConfig, LookaheadEngine, PEARLEngine,
@@ -81,8 +83,9 @@ def build_engine(name: str, ecfg: EngineConfig, pair_kind: str = "misaligned",
     return cls(dp, dcfg, tp, tcfg, ecfg)
 
 
-def run_sequential(args, ecfg, prompts) -> dict:
+def run_sequential(args, ecfg, prompts, rec=NULL_RECORDER) -> dict:
     engine = build_engine(args.engine, ecfg, args.pair)
+    engine.set_recorder(rec)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens)
             for i, p in enumerate(prompts)]
     sched = Scheduler(engine)
@@ -109,7 +112,7 @@ def run_sequential(args, ecfg, prompts) -> dict:
     return agg
 
 
-def run_batched(args, ecfg, prompts) -> dict:
+def run_batched(args, ecfg, prompts, rec=NULL_RECORDER) -> dict:
     if args.engine not in BATCHED_ENGINES:
         raise SystemExit(
             f"--mode batched supports {sorted(BATCHED_ENGINES)}; "
@@ -122,6 +125,7 @@ def run_batched(args, ecfg, prompts) -> dict:
         pool_pages=args.pool_pages,
         swap_pages=args.swap_pages,
         attn_backend=args.attn_backend)
+    eng.set_recorder(rec)        # before the scheduler grabs engine.rec
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=args.new_tokens,
                          arrival=i * args.arrival_interval)
@@ -198,6 +202,17 @@ def main() -> None:
                     "headroom), min 512")
     ap.add_argument("--json", default=None,
                     help="write the aggregate report to this path")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json of the run "
+                    "(open at https://ui.perfetto.dev): draft/verify/"
+                    "commit lanes, per-round spans, per-request "
+                    "speculation + rollback-attribution events")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the metrics registry (counters/gauges/"
+                    "histograms); .json -> JSON, else plain text")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="also run a jax.profiler trace into DIR and "
+                    "annotate dispatch ranges (TensorBoard/Perfetto)")
     args = ap.parse_args()
     if args.mode is None:
         args.mode = ("batched" if args.engine in BATCHED_ENGINES
@@ -213,10 +228,23 @@ def main() -> None:
         max_len = max(512, 1 << (need - 1).bit_length())
     ecfg = EngineConfig(gamma=args.gamma, c=args.c,
                         temperature=args.temperature, max_len=max_len)
-    if args.mode == "sequential":
-        rep = run_sequential(args, ecfg, prompts)
-    else:
-        rep = run_batched(args, ecfg, prompts)
+    tracing = bool(args.trace or args.metrics_out or args.profile_dir)
+    rec = TraceRecorder() if tracing else NULL_RECORDER
+    if args.profile_dir:
+        from repro.serving import device_loop as DL
+        DL.set_trace_annotations(True)
+    with profiler_session(args.profile_dir):
+        if args.mode == "sequential":
+            rep = run_sequential(args, ecfg, prompts, rec)
+        else:
+            rep = run_batched(args, ecfg, prompts, rec)
+    if args.trace:
+        write_trace(rec, args.trace)
+        print(f"trace written to {args.trace} "
+              f"({len(rec.events)} events; open at https://ui.perfetto.dev)")
+    if args.metrics_out:
+        write_metrics(rec.registry, args.metrics_out)
+        print(f"metrics written to {args.metrics_out}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rep, f, indent=2, default=float)

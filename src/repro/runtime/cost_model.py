@@ -21,13 +21,23 @@ Round = Tuple[str, int, int]
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100], fractional ok); 0.0 on
-    empty input."""
+    """Linear-interpolation percentile, Hyndman-Fan type 7 (the numpy /
+    Excel default): rank r = q/100 * (n-1), value = lerp between the
+    neighboring order statistics.  Pinned here so small-sample p50/p95
+    (tens of requests in a serving sweep) are stable, documented numbers
+    rather than whatever a nearest-rank index rounds to.  q in [0, 100],
+    clamped; 0.0 on empty input.
+    """
     if not xs:
         return 0.0
     ys = sorted(xs)
-    rank = max(1, math.ceil(q * len(ys) / 100.0))
-    return float(ys[min(rank, len(ys)) - 1])
+    if len(ys) == 1:
+        return float(ys[0])
+    r = (min(max(q, 0.0), 100.0) / 100.0) * (len(ys) - 1)
+    lo = int(math.floor(r))
+    hi = min(lo + 1, len(ys) - 1)
+    frac = r - lo
+    return float(ys[lo] * (1.0 - frac) + ys[hi] * frac)
 
 
 @dataclasses.dataclass

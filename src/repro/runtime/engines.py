@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.obs.trace import NULL_RECORDER
 from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel, Round
 from repro.runtime.runner import ModelRunner
@@ -146,6 +147,11 @@ class _Ctx:
 
 class Engine:
     name = "base"
+    # observability (obs/trace.py): class-level NULL_RECORDER keeps every
+    # hook a no-op; the sequential scheduler installs a live recorder and
+    # sets trace_rid before each request so spec events carry request ids.
+    rec = NULL_RECORDER
+    trace_rid = 0
 
     def __init__(self, draft_params, draft_cfg: Optional[ModelConfig],
                  target_params, target_cfg: ModelConfig,
@@ -156,10 +162,17 @@ class Engine:
         self.hrad_params = hrad_params
         self._q_stack: Optional[jax.Array] = None
 
+    def set_recorder(self, rec, rid: int = 0) -> None:
+        self.rec = rec
+        self.trace_rid = rid
+
     def _new_runners(self) -> Tuple[Optional[ModelRunner], ModelRunner]:
-        d = (ModelRunner(self.dp, self.dcfg, max_len=self.ecfg.max_len)
+        recorder = self.rec if self.rec.enabled else None
+        d = (ModelRunner(self.dp, self.dcfg, max_len=self.ecfg.max_len,
+                         recorder=recorder, trace_role="draft")
              if self.dcfg is not None else None)
-        t = ModelRunner(self.tp, self.tcfg, max_len=self.ecfg.max_len)
+        t = ModelRunner(self.tp, self.tcfg, max_len=self.ecfg.max_len,
+                        recorder=recorder, trace_role="target")
         return d, t
 
     def _tprobs(self, logits: jax.Array) -> jax.Array:
@@ -304,6 +317,11 @@ class SpSEngine(Engine):
                 ctx.stats.run_extend(g + 1)   # bonus continues the run
                 target.pending = [nxt]
                 draft.pending = [drafted[-1], nxt]
+                if self.rec.enabled:
+                    self.rec.spec(rid=self.trace_rid,
+                                  round=len(ctx.timeline) - 1, stage="sps",
+                                  committed=g + 1, accepted=g, drafted=g,
+                                  cause="accept", gamma=g, bonus=True)
             else:
                 ctx.out.extend(drafted[:n] + [nxt])
                 ctx.stats.emitted += n + 1
@@ -312,6 +330,12 @@ class SpSEngine(Engine):
                 ctx.stats.rollback_tokens += g - n
                 self._reset_lineage(target, plen, ctx)
                 self._reset_lineage(draft, plen, ctx)
+                if self.rec.enabled:
+                    self.rec.spec(rid=self.trace_rid,
+                                  round=len(ctx.timeline) - 1, stage="sps",
+                                  committed=n + 1, accepted=n, drafted=g,
+                                  rolled_back=g - n, cause="chunk-reject",
+                                  gamma=g)
         ctx.stats.finish()
         return GenResult(ctx.out[:n_new], ctx.stats, ctx.timeline)
 
@@ -384,6 +408,15 @@ class LookaheadEngine(Engine):
             ctx.stats.run_extend(n_ok)
             ctx.stats.run_break()
             ctx.stats.rollback_tokens += len(guess) - n_ok
+            if self.rec.enabled:
+                self.rec.spec(rid=self.trace_rid,
+                              round=len(ctx.timeline) - 1, stage="sps",
+                              committed=len(emitted), accepted=n_ok,
+                              drafted=len(guess),
+                              rolled_back=len(guess) - n_ok,
+                              cause=("accept" if n_ok == len(guess)
+                                     else "chunk-reject"),
+                              gamma=len(guess))
             self._reset_lineage(target, plen, ctx)
             hist.extend(emitted)
             update_pool(hist)
@@ -433,11 +466,23 @@ class PEARLEngine(SpSEngine):
                     ctx.stats.emitted += 1
                     self._reset_lineage(target, plen, ctx)
                     self._reset_lineage(draft, plen, ctx)
+                    if self.rec.enabled:
+                        self.rec.spec(rid=self.trace_rid,
+                                      round=len(ctx.timeline) - 1,
+                                      stage="sps", committed=1, accepted=0,
+                                      drafted=len(cur),
+                                      rolled_back=len(cur),
+                                      cause="chunk-reject", gamma=1)
                     cur = []
                     continue
                 ctx.out.append(cur[0])
                 ctx.stats.emitted += 1
                 ctx.stats.run_extend(1)
+                if self.rec.enabled:
+                    self.rec.spec(rid=self.trace_rid,
+                                  round=len(ctx.timeline) - 1, stage="sps",
+                                  committed=1, accepted=1,
+                                  drafted=len(cur), cause="accept", gamma=1)
                 rest, rest_q = cur[1:], cur_q[1:]
             else:
                 rest, rest_q = cur, cur_q
@@ -451,6 +496,12 @@ class PEARLEngine(SpSEngine):
                 ctx.out.extend(rest)
                 ctx.stats.emitted += len(rest)
                 ctx.stats.run_extend(len(rest))
+                if self.rec.enabled:
+                    self.rec.spec(rid=self.trace_rid,
+                                  round=len(ctx.timeline) - 1, stage="sps",
+                                  committed=len(rest), accepted=len(rest),
+                                  drafted=len(nxt_chunk), cause="accept",
+                                  gamma=max(len(rest), 1))
                 cur, cur_q = nxt_chunk, nxt_q   # pipeline rolls on
             else:
                 ctx.out.extend(rest[:n] + [nxt])
@@ -461,6 +512,15 @@ class PEARLEngine(SpSEngine):
                 ctx.stats.rollback_tokens += (len(rest) - n) + len(nxt_chunk)
                 self._reset_lineage(target, plen, ctx)
                 self._reset_lineage(draft, plen, ctx)
+                if self.rec.enabled:
+                    self.rec.spec(rid=self.trace_rid,
+                                  round=len(ctx.timeline) - 1, stage="sps",
+                                  committed=n + 1, accepted=n,
+                                  drafted=len(nxt_chunk),
+                                  rolled_back=(len(rest) - n)
+                                  + len(nxt_chunk),
+                                  cause="chunk-reject",
+                                  gamma=max(len(rest), 1))
                 cur = []
         ctx.stats.finish()
         return GenResult(ctx.out[:n_new], ctx.stats, ctx.timeline)

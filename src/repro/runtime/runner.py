@@ -52,10 +52,15 @@ class ModelRunner:
 
     MAX_CHECKPOINTS = 8
 
-    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096):
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096,
+                 recorder=None, trace_role: str = ""):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
+        # optional obs/trace.py recorder: model_call events per forward
+        # (sequential path only — the batched engines trace at round level)
+        self.rec = recorder
+        self.trace_role = trace_role
         self.batch = 1
         self.has_ssm = _has_ssm(cfg)
         self.cache = M.init_cache(cfg, 1, max_len)
@@ -108,6 +113,9 @@ class ModelRunner:
         self.n_call_tokens += len(toks)
         self.last_logits = logits[:, -1]
         self.last_features = feats
+        if self.rec is not None and self.rec.enabled:
+            self.rec.model_call(role=self.trace_role, tokens=len(toks),
+                                batch=1, pos=self.pos)
         return logits
 
     def forward_embeds(self, embeds: jax.Array) -> jax.Array:
@@ -137,6 +145,10 @@ class ModelRunner:
         self.n_call_tokens += int(np.prod(token_rows.shape))
         self.last_logits = logits[:, -1]
         self.last_features = feats
+        if self.rec is not None and self.rec.enabled:
+            self.rec.model_call(role=self.trace_role,
+                                tokens=int(np.prod(token_rows.shape)),
+                                batch=self.batch, pos=self.pos)
         return logits
 
     def prefill(self, prompt: Sequence[int]) -> None:

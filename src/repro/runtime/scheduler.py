@@ -48,13 +48,23 @@ class Scheduler:
         self.engine = engine
 
     def run(self, requests: List[Request], key) -> List[Request]:
+        rec = self.engine.rec
         for req in requests:
             key, sub = jax.random.split(key)
+            self.engine.trace_rid = req.rid   # tag this request's spec events
+            if rec.enabled:
+                rec.request("admit", req.rid, prompt_len=len(req.prompt),
+                            max_new=req.max_new_tokens)
             t0 = time.time()
             req.result = self.engine.generate(
                 list(req.prompt), req.max_new_tokens, sub,
                 embeds=req.embeds)
             req.wall_s = time.time() - t0
+            if rec.enabled:
+                st = req.result.stats
+                rec.finish(req.rid, emitted=st.emitted,
+                           rollback_tokens=st.rollback_tokens,
+                           pruned_tokens=st.pruned_tokens)
         return requests
 
     def aggregate(self, requests: List[Request], cost: CostModel) -> dict:

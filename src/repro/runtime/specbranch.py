@@ -171,6 +171,13 @@ class SpecBranchEngine(Engine):
                 s = self._hrad_signal(feats, e_t, ctx)
                 chunk, chunk_q, q_b = self._serial_draft(draft, ctx, s)
                 ctx.timeline.append(("serial", len(chunk) + 1, 0))
+                if self.rec.enabled:
+                    self.rec.spec(
+                        rid=self.trace_rid, round=len(ctx.timeline) - 1,
+                        stage="draft", drafted=len(chunk) + 1,
+                        gamma=self.ecfg.gamma,
+                        eps_stop=(s == 1 and len(chunk) < self.ecfg.gamma),
+                        hrad=(s if self.ecfg.use_hrad else None))
                 mode = "branch"
                 continue
 
@@ -194,6 +201,14 @@ class SpecBranchEngine(Engine):
                 ctx.stats.run_extend(n)
                 ctx.stats.run_break()
                 ctx.stats.rollback_tokens += (len(chunk) - n) + gb
+                if self.rec.enabled:
+                    self.rec.spec(
+                        rid=self.trace_rid, round=len(ctx.timeline) - 1,
+                        stage="branch", committed=n + 1, accepted=n,
+                        drafted=len(chunk),
+                        rolled_back=(len(chunk) - n) + gb,
+                        cause="chunk-reject", gamma=max(len(chunk), 1),
+                        k=len(cands))
                 draft.unfork()
                 self._reset_lineage(target, plen, ctx)
                 self._reset_lineage(draft, plen, ctx)
@@ -210,6 +225,13 @@ class SpecBranchEngine(Engine):
                 ctx.stats.run_extend(len(chunk))
                 ctx.stats.run_break()
                 ctx.stats.rollback_tokens += gb
+                if self.rec.enabled:
+                    self.rec.spec(
+                        rid=self.trace_rid, round=len(ctx.timeline) - 1,
+                        stage="branch", committed=len(chunk) + 1,
+                        accepted=len(chunk), drafted=len(chunk),
+                        rolled_back=gb, cause="branch-miss",
+                        gamma=max(len(chunk), 1), k=len(cands))
                 draft.unfork()
                 self._reset_lineage(target, plen, ctx)
                 self._reset_lineage(draft, plen, ctx)
@@ -218,6 +240,7 @@ class SpecBranchEngine(Engine):
 
             i = verdict.accepted_branch
             tok_b = verdict.token
+            n_acc = len(chunk)            # committed chunk length (pre-swap)
             ctx.out.extend(chunk + [tok_b])
             ctx.stats.emitted += len(chunk) + 1
             ctx.stats.run_extend(len(chunk) + 1)
@@ -231,6 +254,7 @@ class SpecBranchEngine(Engine):
             cont_i = [int(t) for t in conts[i]]
             q_i = [cq[i] for cq in cont_q]
             sig_i = [cs[i] for cs in cont_sig]
+            pruned = 0
             if s == 2:
                 chunk, chunk_q = cont_i, q_i
                 q_b = self._qsignal(draft.last_logits[0])
@@ -239,6 +263,7 @@ class SpecBranchEngine(Engine):
                 # prune the whole continuation; branch at its first token
                 chunk, chunk_q = [], []
                 q_b = sig_i[0]
+                pruned = gb
                 ctx.stats.pruned_tokens += gb
                 draft.reset_to(plen + len(ctx.out))   # lineage incl. tok_b
             else:
@@ -250,8 +275,17 @@ class SpecBranchEngine(Engine):
                 else:
                     chunk, chunk_q = cont_i[:j], q_i[:j]
                     q_b = sig_i[j]
+                    pruned = gb - j
                     ctx.stats.pruned_tokens += gb - j
                     draft.reset_to(plen + len(ctx.out) + j)
+            if self.rec.enabled:
+                self.rec.spec(
+                    rid=self.trace_rid, round=len(ctx.timeline) - 1,
+                    stage="branch", committed=n_acc + 1,
+                    accepted=n_acc + 1, drafted=n_acc,
+                    pruned=pruned, cause="branch-adopt",
+                    gamma=max(n_acc, 1), k=len(cands),
+                    hrad=(s if self.ecfg.use_hrad else None))
             mode = "branch"
 
         ctx.stats.finish()

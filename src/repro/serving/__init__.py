@@ -19,7 +19,14 @@ Layers:
                        retirement, FIFO fairness, pool-pressure preemption,
                        per-request streaming callbacks.
   * metrics          — throughput / TTFT / inter-token-latency percentiles,
-                       pool occupancy and reclamation accounting.
+                       pool occupancy and reclamation accounting; re-exports
+                       the repro.obs registry types and mirrors aggregates
+                       into an attached registry.
+
+Speculation-aware tracing (per-round spec events, rollback attribution,
+Perfetto export) lives in ``repro.obs`` (DESIGN.md §7.9): build a
+``TraceRecorder``, pass it to ``engine.set_recorder(rec)`` before
+constructing the scheduler, then ``repro.obs.write_trace(rec, path)``.
 """
 from repro.serving.batch_scheduler import (ContinuousBatchScheduler,
                                            ServeRequest)

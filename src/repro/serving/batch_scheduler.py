@@ -47,17 +47,31 @@ class ContinuousBatchScheduler:
     def __init__(self, engine, metrics: Optional[ServingMetrics] = None):
         self.engine = engine
         self.metrics = metrics if metrics is not None else ServingMetrics()
+        # observability: pick up whatever recorder the engine carries
+        # (NULL_RECORDER by default) and mirror scheduler-side aggregates
+        # into its registry so one dump carries both layers.
+        self.rec = getattr(engine, "rec", None)
+        if self.rec is not None and self.rec.enabled:
+            self.metrics.attach_registry(self.rec.registry)
 
     # ------------------------------------------------------------------ run
     def run(self, requests: List[ServeRequest]) -> Dict[int, GenResult]:
         eng = self.engine
         queue = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        rec = self.rec if (self.rec is not None and self.rec.enabled) \
+            else None
         for r in queue:
             self.metrics.on_arrival(r.rid, r.arrival)
+            if rec is not None:
+                rec.request("arrival", r.rid, t=r.arrival,
+                            prompt_len=len(r.prompt),
+                            max_new=r.max_new_tokens)
         results: Dict[int, GenResult] = {}
 
         while queue or eng.active:
             self._admit(queue)
+            if rec is not None:
+                rec.sample("queue_depth", len(queue), t=eng.clock)
             if not eng.active:
                 # idle server: jump the clock to the next arrival
                 assert queue, "scheduler stuck with an empty batch"
@@ -87,6 +101,9 @@ class ContinuousBatchScheduler:
                 results[seq.rid] = res
                 self.metrics.on_finish(seq.rid, now)
             self.metrics.on_round(eng.pool.occupancy, step_wall=step_wall)
+            if rec is not None:
+                rec.sample("pool_occupancy", eng.pool.occupancy,
+                           t=eng.clock)
         return results
 
     # ------------------------------------------------------------ admission

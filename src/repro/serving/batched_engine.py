@@ -90,6 +90,7 @@ from repro.core import hrad as H
 from repro.kernels.ops import _default_interpret as _ops_default_interpret
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.obs.trace import NULL_RECORDER
 from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel
 from repro.runtime.engines import EngineConfig, GenResult, GenStats
@@ -527,6 +528,22 @@ class BatchedEngineBase:
         self.timeline: List[Tuple[str, int, int]] = []
         self.active: List[_Seq] = []
         self._admit_counter = 0
+        # observability (obs/trace.py): NULL_RECORDER keeps every hook a
+        # no-op; every event an enabled recorder sees is built from values
+        # already host-resident, so tracing adds zero device syncs.
+        self.rec = NULL_RECORDER
+
+    def set_recorder(self, rec) -> None:
+        """Install a trace recorder.  An enabled recorder additionally taps
+        the page pools' reclaim listeners for per-cause attribution."""
+        self.rec = rec
+        if rec.enabled:
+            for which, pool in self.pools.items():
+                pool.reclaim_listeners.append(
+                    functools.partial(self._on_reclaim, which))
+
+    def _on_reclaim(self, which: str, reason: str, freed: int) -> None:
+        self.rec.reclaim(which, reason, freed)
 
     def _pool_of(self, key: Any) -> PagedKVPool:
         """Route a stream key to its id space: target streams ("t", rid)
@@ -540,10 +557,20 @@ class BatchedEngineBase:
         confidences, verdicts) — never logits."""
         return _count_fetch(self, arr)
 
+    def _count_staged(self, nbytes: int) -> None:
+        """Admission-side host boundary crossings (prefill token frames,
+        swap readback, ring restore) — tallied on the ENGINE so the
+        decoders' fetch counters keep meaning 'device -> host packet
+        fetches' (tests pin that)."""
+        self.xfer_bytes += int(nbytes)
+        self.xfer_fetches += 1
+
     @property
     def host_transfer_bytes(self) -> int:
-        """Total device -> host bytes this engine has moved (packets +
-        swap packing + ring snapshots)."""
+        """Total bytes this engine has moved across the host boundary:
+        device -> host packets, swap packing and ring snapshots (PR 4's
+        decode-loop tally) plus admission traffic — prefill token-frame
+        staging, swap readback and ring restore."""
         return (self.xfer_bytes + self.tgt_dec.xfer_bytes
                 + self.dft_dec.xfer_bytes)
 
@@ -714,12 +741,15 @@ class BatchedEngineBase:
         restored = False
         if meta is not None and meta.get("swap_key") is not None:
             rows = self.swap.get(meta["swap_key"])
+            self._count_staged(rows.nbytes)
             self.tgt_dec.unpack_row(t_row, rows)
             if meta.get("ssm_snap") is not None:
                 # the ring's swap side-channel: recurrent state is not
                 # token rows — restore the packed-length checkpoint the
                 # preemption snapshotted (DESIGN.md §7.8)
                 self.tgt_dec.restore(t_row, L, meta["ssm_snap"])
+                self._count_staged(sum(a.nbytes for d in meta["ssm_snap"]
+                                       for a in d.values()))
             self.swap.drop(meta["swap_key"])
             seq.feats_last = meta["feats_last"]
             restored = True
@@ -730,6 +760,11 @@ class BatchedEngineBase:
         self._admit_counter += 1
         self.active.append(seq)
         self._pending_admits.append((seq, toks[:-1], restored))
+        if self.rec.enabled:
+            self.rec.request("admit", rid, prompt_len=len(toks),
+                             restored=restored, t=self.clock)
+            if restored:
+                self.rec.request("swap_in", rid, t=self.clock)
         return seq
 
     def commit_admissions(self) -> None:
@@ -755,6 +790,9 @@ class BatchedEngineBase:
                           for seq, toks, restored in chunk if not restored]
                 if tparts:
                     _, feats = self.tgt_dec.prefill_rows(tparts)
+                    # the staged (lanes, width) int32 token frame crosses
+                    # host -> device once per prefill forward
+                    self._count_staged(lanes * width * 4)
                     lane = 0
                     for seq, toks, restored in chunk:
                         if restored:
@@ -763,8 +801,19 @@ class BatchedEngineBase:
                                                len(toks) - 1, :]
                         seq.stats.target_calls += 1   # restores skip this
                         lane += 1
+                    if self.rec.enabled:
+                        self.rec.prefill(
+                            width=width, lanes=lanes, used=len(tparts),
+                            tokens=sum(len(t) for _, t in tparts),
+                            t=self.clock)
                 self.dft_dec.prefill_rows(
                     [(seq.dft.row, toks) for seq, toks, _ in chunk])
+                self._count_staged(lanes * width * 4)
+                if self.rec.enabled:
+                    self.rec.prefill(
+                        width=width, lanes=lanes, used=len(chunk),
+                        tokens=sum(len(t) for _, t, _ in chunk),
+                        t=self.clock)
         if self.debug_check:
             self.pool.check()
 
@@ -810,6 +859,11 @@ class BatchedEngineBase:
         victim.mode, victim.chunk, victim.chunk_q = "draft", [], []
         victim.q_b = None
         self._swapped[victim.rid] = meta
+        if self.rec.enabled:
+            self.rec.request("preempt", victim.rid, t=self.clock,
+                             swapped=meta["swap_key"] is not None)
+            if meta["swap_key"] is not None:
+                self.rec.request("swap_out", victim.rid, t=self.clock)
         return victim
 
     def _make_room(self, seqs: List[_Seq],
@@ -870,6 +924,11 @@ class BatchedEngineBase:
             self.tgt_dec.free_rows.append(seq.tgt.row)
             self.dft_dec.free_rows.append(seq.dft.row)
             seq.stats.finish()
+            if self.rec.enabled:
+                self.rec.finish(seq.rid, emitted=seq.stats.emitted,
+                                rollback_tokens=seq.stats.rollback_tokens,
+                                pruned_tokens=seq.stats.pruned_tokens,
+                                t=self.clock)
             out.append((seq, GenResult(seq.out[:seq.max_new], seq.stats,
                                        [])))
         if self.debug_check:
@@ -921,6 +980,9 @@ class BatchedSpSEngine(BatchedEngineBase):
         if not seqs:
             return {"committed": {}, "preempted": []}
         g = self.ecfg.gamma
+        rec = self.rec
+        wall0 = rec.now()
+        rnd_idx = len(self.timeline)
 
         def fits(ss):
             return (self.pools["d"].has_room(
@@ -967,6 +1029,7 @@ class BatchedSpSEngine(BatchedEngineBase):
                 last[:] = 0
         tok_stack = jnp.stack(tok_ticks)          # (g, n_d) device
         q_stack = jnp.stack(q_ticks)              # (g, n_d, V) device
+        wall_draft = rec.now()
 
         # ---- verify stage: ONE batched target call + fused device verdict
         pends = {s.rid: list(s.tgt.pending) for s in seqs}
@@ -1005,14 +1068,17 @@ class BatchedSpSEngine(BatchedEngineBase):
         for s in seqs:
             s.tgt.ing += len(pends[s.rid]) + g
             self.tgt_dec.row_pos[s.tgt.row] = s.tgt.ing
-        packet_dev = DL.sps_verify(
-            tlg, q_stack, tok_stack, jnp.asarray(trows), jnp.asarray(drows),
-            jnp.asarray(npend), jnp.asarray(rid_l), jnp.asarray(ctr_l),
-            self._key, g=g, ttemp=self._tt, dtemp=self._dt,
-            kernel=self._use_kernel, interpret=self._kernel_interpret)
+        with DL.annotate("sps_verify"):
+            packet_dev = DL.sps_verify(
+                tlg, q_stack, tok_stack, jnp.asarray(trows),
+                jnp.asarray(drows), jnp.asarray(npend), jnp.asarray(rid_l),
+                jnp.asarray(ctr_l), self._key, g=g, ttemp=self._tt,
+                dtemp=self._dt, kernel=self._use_kernel,
+                interpret=self._kernel_interpret)
         for s in seqs:
             s.ctr += g + 1
         pk = self._fetch(packet_dev)       # the round's ONLY host fetch
+        wall_verify = rec.now()
         now = self.clock + self.cost.round_cost(("serial", g, 1))
         committed: Dict[int, int] = {}
         for i, s in enumerate(seqs):
@@ -1029,13 +1095,31 @@ class BatchedSpSEngine(BatchedEngineBase):
                 s.stats.run_extend(g + 1)
                 s.tgt.pending = [nxt]
                 s.dft.pending = [dr[-1], nxt]
+                if rec.enabled:
+                    rec.spec(rid=s.rid, round=rnd_idx, stage="sps",
+                             committed=g + 1, accepted=g, drafted=g,
+                             cause="accept", gamma=g, bonus=True, t=now)
             else:
                 self._commit(s, dr[:n] + [nxt], now)
                 s.stats.run_extend(n)
                 s.stats.run_break()
                 s.stats.rollback_tokens += g - n
                 self._rollback_streams(s)
+                if rec.enabled:
+                    rec.spec(rid=s.rid, round=rnd_idx, stage="sps",
+                             committed=n + 1, accepted=n, drafted=g,
+                             rolled_back=g - n, cause="chunk-reject",
+                             gamma=g, t=now)
             committed[s.rid] = min(len(s.out), s.max_new) - before
+        if rec.enabled:
+            wall1 = rec.now()
+            rec.span("draft", wall0, wall_draft, engine=self.name)
+            rec.span("verify", wall_draft, wall_verify, engine=self.name,
+                     batch=len(seqs))
+            rec.span("commit", wall_verify, wall1, engine=self.name)
+            rec.round(engine=self.name, index=rnd_idx, mode="serial",
+                      draft_steps=g, target_calls=1, batch=len(seqs),
+                      wall0=wall0, wall1=wall1, t0=self.clock, t1=now)
         self._finish_round("serial", g, 1)
         return {"committed": committed, "preempted": preempted}
 
@@ -1120,6 +1204,9 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             return {"committed": {}, "preempted": []}
         g, gb = self.ecfg.gamma, self.ecfg.gamma_branch
         K, CH = self._K, self._CH
+        rec = self.rec
+        wall0 = rec.now()
+        rnd_idx = len(self.timeline)
 
         # has_room can't price not-yet-forked branch streams; count their
         # worst case (suffix pages + one COW tail copy each) by hand.
@@ -1219,16 +1306,19 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 ct_rows.append(ct)
             cq_rows += [zero_q] * (B - len(branchers))
             ct_rows += [np.zeros(CH, np.int32)] * (B - len(branchers))
-            packet_dev = DL.branch_verify(
-                tlg, jnp.asarray(trows), jnp.asarray(npend_l),
-                jnp.asarray(gch_l), jnp.stack(cq_rows),
-                jnp.asarray(np.stack(ct_rows)), jnp.asarray(cands),
-                jnp.asarray(ks_l), qb_stack, jnp.asarray(rid_l),
-                jnp.asarray(ctr_v), self._key, CH=CH, K=K,
-                ttemp=self._tt, dtemp=self._dt, stemp=self._st,
-                kernel=self._use_kernel, interpret=self._kernel_interpret)
+            with DL.annotate("branch_verify"):
+                packet_dev = DL.branch_verify(
+                    tlg, jnp.asarray(trows), jnp.asarray(npend_l),
+                    jnp.asarray(gch_l), jnp.stack(cq_rows),
+                    jnp.asarray(np.stack(ct_rows)), jnp.asarray(cands),
+                    jnp.asarray(ks_l), qb_stack, jnp.asarray(rid_l),
+                    jnp.asarray(ctr_v), self._key, CH=CH, K=K,
+                    ttemp=self._tt, dtemp=self._dt, stemp=self._st,
+                    kernel=self._use_kernel,
+                    interpret=self._kernel_interpret)
             for s in branchers:
                 s.ctr += self._W
+        wall_disp = rec.now()
 
         # ---- PHASE A: all draft-model work, interleaved batched ticks ----
         # H-RAD prior signal decides each DRAFT-mode request's stop rule.
@@ -1305,6 +1395,13 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                                                  s.dft.ing - 1, "prune")
                         s.dft.ing -= 1
                         self.dft_dec.row_pos[s.dft.row] = s.dft.ing
+                    if rec.enabled:
+                        rec.spec(rid=s.rid, round=rnd_idx, stage="draft",
+                                 drafted=len(s.chunk) + 1, gamma=g,
+                                 eps_stop=over,
+                                 hrad=(sig[s.rid] if self.ecfg.use_hrad
+                                       else None),
+                                 t=self.clock)
                     continue
                 s.chunk.append(int(pkt[row, 0]))
                 s.chunk_q.append(qsl_p[row])
@@ -1382,13 +1479,16 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 ticks += 1
 
         # ---- PHASE B: fetch the verdict packet, commit per brancher ----
+        wall_draft1 = rec.now()
         committed: Dict[int, int] = {}
         n_target = 1 if branchers else 0
         kind = "parallel" if (branchers and self.ecfg.use_branch) \
             else "serial"
         now = self.clock + self.cost.round_cost((kind, ticks, n_target))
+        wall_vfetch = wall_draft1
         if branchers:
             pk = self._fetch(packet_dev)
+            wall_vfetch = rec.now()
             for i, s in enumerate(branchers):
                 s.tgt.pending = []
                 before = min(len(s.out), s.max_new)
@@ -1397,6 +1497,21 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 committed[s.rid] = min(len(s.out), s.max_new) - before
         for s in serial:
             s.mode = "branch"
+        if rec.enabled:
+            wall1 = rec.now()
+            rec.span("draft", wall_disp, wall_draft1, engine=self.name,
+                     ticks=ticks)
+            if branchers:
+                # dispatched before the draft phase, fetched after it: the
+                # verify span overlapping the draft span is the paper's
+                # hidden verification, visible in Perfetto
+                rec.span("verify", wall0, wall_vfetch, engine=self.name,
+                         batch=len(branchers))
+                rec.span("commit", wall_vfetch, wall1, engine=self.name)
+            rec.round(engine=self.name, index=rnd_idx, mode=kind,
+                      draft_steps=ticks, target_calls=n_target,
+                      batch=len(seqs), wall0=wall0, wall1=wall1,
+                      t0=self.clock, t1=now)
         self._finish_round(kind, ticks, n_target)
         return {"committed": committed, "preempted": preempted}
 
@@ -1421,6 +1536,13 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             s.stats.rollback_tokens += (gchunk - n_acc) + gb
             self._free_branches(s, bset, "rollback")
             self._rollback_streams(s)
+            if self.rec.enabled:
+                self.rec.spec(rid=s.rid, round=len(self.timeline),
+                              stage="branch", committed=n_acc + 1,
+                              accepted=n_acc,
+                              rolled_back=(gchunk - n_acc) + gb,
+                              cause="chunk-reject", gamma=gchunk,
+                              k=len(bset.streams), t=now)
             s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
             return
 
@@ -1432,6 +1554,12 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             s.stats.rollback_tokens += gb
             self._free_branches(s, bset, "branch")
             self._rollback_streams(s)
+            if self.rec.enabled:
+                self.rec.spec(rid=s.rid, round=len(self.timeline),
+                              stage="branch", committed=gchunk + 1,
+                              accepted=gchunk, rolled_back=gb,
+                              cause="branch-miss", gamma=gchunk,
+                              k=len(bset.streams), t=now)
             s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
             return
 
@@ -1455,6 +1583,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         sgn = (self._hrad_signal(s, tok_b) if self.ecfg.use_hrad else 1)
         cont, q_i = bset.conts[i], bset.cont_q[i]
         confs = bset.confs[i]
+        pruned = 0
         if sgn == 2:
             s.chunk, s.chunk_q = list(cont), list(q_i)
             s.q_b = bset.final_sig[i]
@@ -1465,6 +1594,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             s.q_b = q_i[0]
             s.q_b_conf = confs[0]
             s.stats.pruned_tokens += gb
+            pruned = gb
             self._prune_draft(s, s.committed)
         else:
             j = next((jj for jj in range(gb)
@@ -1478,8 +1608,16 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 s.q_b = q_i[j]
                 s.q_b_conf = confs[j]
                 s.stats.pruned_tokens += gb - j
+                pruned = gb - j
                 self._prune_draft(s, s.committed + j)
         s.mode = "branch"
+        if self.rec.enabled:
+            self.rec.spec(rid=s.rid, round=len(self.timeline),
+                          stage="branch", committed=gchunk + 1,
+                          accepted=gchunk + 1, pruned=pruned,
+                          cause="branch-adopt", gamma=gchunk,
+                          k=len(bset.streams),
+                          hrad=sgn if self.ecfg.use_hrad else None, t=now)
 
     def _prune_draft(self, s: _Seq, keep: int) -> None:
         """H-RAD pre-verify pruning: positional reset of the draft stream."""

@@ -30,6 +30,7 @@ Design rules:
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -41,7 +42,27 @@ from repro.runtime import sampling as S
 
 __all__ = ["bucket", "prefill_bucket", "kernel_route", "tick_sample",
            "masked_token_column", "compose_verify_tokens", "sps_verify",
-           "draw_cands", "branch_verify"]
+           "draw_cands", "branch_verify", "set_trace_annotations",
+           "annotate"]
+
+# jax.profiler named-range annotations around the loop's dispatch sites.
+# Off by default — ``annotate`` returns a nullcontext, so the hot path pays
+# one module-global read.  launch/serve.py turns them on with
+# ``--profile-dir`` so the device profile's ranges line up with the
+# host-side trace.json lanes (obs/export.py).
+_ANNOTATE = False
+
+
+def set_trace_annotations(on: bool) -> None:
+    global _ANNOTATE
+    _ANNOTATE = bool(on)
+
+
+def annotate(name: str):
+    """Named profiler range when annotations are on; free otherwise."""
+    if _ANNOTATE:
+        return jax.profiler.TraceAnnotation(name)
+    return contextlib.nullcontext()
 
 
 def bucket(n: int) -> int:

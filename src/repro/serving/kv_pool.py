@@ -100,6 +100,10 @@ class PagedKVPool:
         # here: a COW is a *data* copy for them, not just accounting, and
         # the copy must land before the next forward reads the new page.
         self.cow_listeners: List[Callable[[int, int], None]] = []
+        # observability taps: called as fn(reason, freed) whenever a release
+        # physically frees pages, so the trace recorder can attribute
+        # reclamation per cause without polling PoolStats.
+        self.reclaim_listeners: List[Callable[[str, int], None]] = []
 
     # ------------------------------------------------------------- queries
     def pages_for(self, n_tokens: int) -> int:
@@ -179,6 +183,9 @@ class PagedKVPool:
                 self._free.append(p)
                 freed += 1
         setattr(self.stats, field, getattr(self.stats, field) + freed)
+        if freed:
+            for fn in self.reclaim_listeners:
+                fn(reason, freed)
 
     def extend(self, seq: SeqId, n_tokens: int) -> None:
         """Append ``n_tokens`` KV slots to ``seq``.  Raises PoolExhausted

@@ -17,10 +17,16 @@ decoding rather than a smoothed rate.
 
 Host-transfer accounting (DESIGN.md §7.7): the device-resident loop's
 engines tally every device -> host byte they move (verdict/token packets,
-swap packing, ring snapshots — never logits).  The scheduler samples the
-counter per round and ``summary`` reports totals, per-step bytes and
-wall-clock step-latency percentiles; benchmarks/serving_throughput.py
-gates CI on the per-step byte count.
+prefill token staging, swap packing, ring snapshots — never logits).  The
+scheduler samples the counter per round and ``summary`` reports totals,
+per-step bytes and wall-clock step-latency percentiles;
+benchmarks/serving_throughput.py gates CI on the per-step byte count.
+
+The named-metric layer lives in obs/registry.py (re-exported here);
+``attach_registry`` mirrors this class's scheduler-side aggregates into a
+registry under ``serving_*`` names so a single metrics dump carries both
+the engine-level speculation totals (written by the trace recorder) and
+the scheduler-level serving signals.
 """
 from __future__ import annotations
 
@@ -28,9 +34,12 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
+from repro.obs.registry import (Counter, Gauge, Histogram,  # noqa: F401
+                                MetricsRegistry)
 from repro.runtime.cost_model import percentile
 
-__all__ = ["ServingMetrics", "RequestTrace", "percentile"]
+__all__ = ["ServingMetrics", "RequestTrace", "percentile",
+           "MetricsRegistry", "Counter", "Gauge", "Histogram"]
 
 
 @dataclasses.dataclass
@@ -66,6 +75,12 @@ class ServingMetrics:
         self.preemptions = 0
         self.step_walls: List[float] = []          # wall seconds per round
         self._wall0 = time.time()
+        self._reg: Optional[MetricsRegistry] = None
+
+    def attach_registry(self, reg: Optional[MetricsRegistry]) -> None:
+        """Mirror scheduler-side aggregates into ``reg`` (serving_* names)
+        as events arrive.  Pass None to detach."""
+        self._reg = reg
 
     # ------------------------------------------------------------- events
     def on_arrival(self, rid: int, t: float) -> None:
@@ -79,14 +94,24 @@ class ServingMetrics:
 
     def on_tokens(self, rid: int, n: int, t: float) -> None:
         self.traces[rid].token_times.extend([t] * n)
+        if self._reg is not None:
+            self._reg.counter("serving_tokens_total").inc(n)
 
     def on_finish(self, rid: int, t: float) -> None:
-        self.traces[rid].finished = t
-        self.traces[rid].wall_finished = time.time()
+        tr = self.traces[rid]
+        tr.finished = t
+        tr.wall_finished = time.time()
+        if self._reg is not None:
+            if tr.ttft is not None:
+                self._reg.histogram("serving_ttft").observe(tr.ttft)
+            for d in tr.itls:
+                self._reg.histogram("serving_itl").observe(d)
 
     def on_preempt(self, rid: int) -> None:
         self.traces[rid].preemptions += 1
         self.preemptions += 1
+        if self._reg is not None:
+            self._reg.counter("serving_preemptions_total").inc()
 
     def on_round(self, occupancy: float,
                  step_wall: Optional[float] = None) -> None:
@@ -94,6 +119,11 @@ class ServingMetrics:
         self.occupancy_samples.append(occupancy)
         if step_wall is not None:
             self.step_walls.append(step_wall)
+        if self._reg is not None:
+            self._reg.counter("serving_rounds_total").inc()
+            self._reg.histogram("serving_pool_occupancy").observe(occupancy)
+            if step_wall is not None:
+                self._reg.histogram("serving_step_wall_s").observe(step_wall)
 
     # ------------------------------------------------------------ summary
     def summary(self, total_cost: float, pool_stats: Optional[dict] = None,

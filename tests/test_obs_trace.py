@@ -1,0 +1,197 @@
+"""Observability subsystem (DESIGN.md §7.9): trace/metrics reconciliation.
+
+Pins:
+
+  * registry unit behaviour — counters/gauges/histograms, type-7
+    percentile summaries, text + JSON dumps;
+  * NullRecorder contract — disabled recorder never allocates events and
+    ``now()`` returns 0.0 (the zero-overhead hot-path guarantee);
+  * replay reconciliation (hypothesis) — a random batched serving run's
+    trace-event sums (committed / rolled-back / pruned tokens per
+    request) equal BOTH the engine's GenStats and the metrics-registry
+    totals, exactly;
+  * the sequential engines reconcile the same way through the
+    round-robin scheduler;
+  * the Perfetto export is loadable JSON with named draft/verify/commit
+    lanes.
+"""
+import functools
+import json
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import ZipfMarkov
+from repro.models import model as M
+from repro.models.config import ModelConfig, dense_pattern
+from repro.obs import (NULL_RECORDER, MetricsRegistry, NullRecorder,
+                       TraceRecorder, perfetto_trace, write_metrics)
+from repro.runtime.engines import EngineConfig, SpSEngine
+from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.specbranch import SpecBranchEngine
+from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
+                           ContinuousBatchScheduler, ServeRequest)
+
+VOCAB = 61
+
+
+@functools.lru_cache(maxsize=1)
+def _pair():
+    def cfg(name, layers, d):
+        return ModelConfig(name=name, family="dense", num_layers=layers,
+                           d_model=d, num_heads=2, num_kv_heads=1,
+                           d_ff=2 * d, vocab_size=VOCAB,
+                           pattern=dense_pattern(0), dtype="float32")
+    tcfg = cfg("obs-t", 2, 32)
+    dcfg = cfg("obs-d", 1, 32)
+    return (M.init_params(jax.random.PRNGKey(1), dcfg), dcfg,
+            M.init_params(jax.random.PRNGKey(0), tcfg), tcfg)
+
+
+def _prompts(n, seed):
+    zm = ZipfMarkov(vocab=VOCAB, seed=7)
+    return [list(map(int, p)) for p in zm.prompts(n, 6, seed=seed)]
+
+
+def _reconcile(rec, results):
+    """Per-request trace sums == GenStats == registry totals, exactly."""
+    tot = rec.request_totals()
+    for rid, res in results.items():
+        t = tot.get(rid, {"committed": 0, "rolled_back": 0, "pruned": 0})
+        assert t["committed"] == res.stats.emitted, rid
+        assert t["rolled_back"] == res.stats.rollback_tokens, rid
+        assert t["pruned"] == res.stats.pruned_tokens, rid
+    c = rec.registry.as_dict()["counters"]
+    assert c.get("tokens_committed_total", 0) == \
+        sum(t["committed"] for t in tot.values())
+    assert c.get("rollback_tokens_total", 0) == \
+        sum(t["rolled_back"] for t in tot.values())
+    assert c.get("pruned_tokens_total", 0) == \
+        sum(t["pruned"] for t in tot.values())
+    # rollback attribution is a partition of the rollback total
+    causes = sum(v for k, v in c.items()
+                 if k.startswith("rollback_tokens_") and
+                 k != "rollback_tokens_total")
+    assert causes == c.get("rollback_tokens_total", 0)
+
+
+# ---------------------------------------------------------------------------
+# registry units
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_histograms(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(4)
+    reg.gauge("g").set(2.5)
+    for v in range(1, 11):
+        reg.histogram("h").observe(float(v))
+    d = reg.as_dict()
+    assert d["counters"]["a"] == 5
+    assert d["gauges"]["g"] == 2.5
+    s = d["histograms"]["h"]
+    assert s["count"] == 10 and s["sum"] == 55.0
+    assert s["p50"] == 5.5                            # HF type 7
+    assert s["p95"] == pytest.approx(9.55)
+    txt = reg.render_text()
+    assert "a 5" in txt and "p95=9.55" in txt
+    out = tmp_path / "m.json"
+    write_metrics(reg, str(out))
+    assert json.loads(out.read_text())["counters"]["a"] == 5
+
+
+def test_null_recorder_is_inert():
+    rec = NullRecorder()
+    assert not rec.enabled and rec.now() == 0.0
+    rec.spec(rid=0, round=0, stage="sps", committed=3)
+    rec.request("admit", 0)
+    rec.finish(0, emitted=3, rollback_tokens=0)
+    rec.span("draft", 0.0, 1.0)
+    assert rec.events == [] and NULL_RECORDER.events == []
+
+
+# ---------------------------------------------------------------------------
+# replay reconciliation (hypothesis): batched serving
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 3), st.integers(2, 3), st.integers(0, 1),
+       st.integers(2, 3))
+def test_batched_trace_reconciles(seed, gamma, which, n_req):
+    dp, dcfg, tp, tcfg = _pair()
+    ecfg = EngineConfig(gamma=gamma, c=4.0, temperature=0.0, max_len=256)
+    cls = (BatchedSpSEngine, BatchedSpecBranchEngine)[which]
+    eng = cls(dp, dcfg, tp, tcfg, ecfg, max_batch=2, page_size=8)
+    rec = TraceRecorder()
+    eng.set_recorder(rec)
+    sched = ContinuousBatchScheduler(eng)
+    reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=6 + seed)
+            for i, p in enumerate(_prompts(n_req, seed + 11))]
+    results = sched.run(reqs)
+    assert len(results) == n_req
+    _reconcile(rec, results)
+    c = rec.registry.as_dict()["counters"]
+    assert c["requests_finished_total"] == n_req
+    assert c["admissions_total"] >= n_req     # re-admissions possible
+    # the scheduler mirrors its aggregates into the same registry
+    assert c["serving_tokens_total"] == \
+        sum(len(r.tokens) for r in results.values())
+    assert c["serving_rounds_total"] == c["rounds_total"]
+    if which == 0:          # SpS: every round verifies a gamma-chunk
+        h = rec.registry.as_dict()["histograms"]
+        assert h["acceptance_rate"]["count"] >= 2
+        assert "acceptance_rate_drift" in h
+
+
+# ---------------------------------------------------------------------------
+# sequential engines reconcile through the round-robin scheduler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("which", ["sps", "specbranch"])
+def test_sequential_trace_reconciles(which):
+    dp, dcfg, tp, tcfg = _pair()
+    ecfg = EngineConfig(gamma=2, c=4.0, temperature=0.0, max_len=256)
+    if which == "sps":
+        eng = SpSEngine(dp, dcfg, tp, tcfg, ecfg)
+    else:
+        eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+    rec = TraceRecorder()
+    eng.set_recorder(rec)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
+            for i, p in enumerate(_prompts(2, 5))]
+    done = Scheduler(eng).run(reqs, key=jax.random.PRNGKey(0))
+    _reconcile(rec, {r.rid: r.result for r in done})
+    kinds = {e["kind"] for e in rec.events}
+    assert {"admit", "finish", "spec", "model_call"} <= kinds
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_perfetto_export_structure():
+    dp, dcfg, tp, tcfg = _pair()
+    ecfg = EngineConfig(gamma=2, c=4.0, temperature=0.0, max_len=256)
+    eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg, max_batch=2,
+                                  page_size=8)
+    rec = TraceRecorder()
+    eng.set_recorder(rec)
+    sched = ContinuousBatchScheduler(eng)
+    reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(_prompts(2, 9))]
+    sched.run(reqs)
+    doc = perfetto_trace(rec)
+    blob = json.dumps(doc)                    # must be JSON-serializable
+    ev = json.loads(blob)["traceEvents"]
+    assert ev, "empty trace"
+    names = {e["args"]["name"] for e in ev
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"draft", "verify", "commit"} <= names
+    # every non-metadata event sits on a named process lane
+    pids = {e["pid"] for e in ev if e["ph"] != "M"}
+    assert pids <= {1, 2, 3}
+    # spans have non-negative integer timestamps/durations
+    for e in ev:
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 1

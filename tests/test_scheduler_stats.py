@@ -18,10 +18,13 @@ def _req(rid, wall, n_tokens, rounds):
     return r
 
 
-def test_percentile_nearest_rank():
+def test_percentile_type7_interpolation():
+    # Hyndman-Fan type 7 (numpy default): r = q/100 * (n-1), lerp.
     xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]
-    assert percentile(xs, 50) == 5.0
-    assert percentile(xs, 95) == 10.0
+    assert percentile(xs, 50) == pytest.approx(5.5)
+    assert percentile(xs, 95) == pytest.approx(9.55)
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 10.0
     assert percentile([7.0], 50) == 7.0
     assert percentile([], 95) == 0.0
 
@@ -30,8 +33,8 @@ def test_aggregate_reports_wall_percentiles():
     reqs = [_req(i, wall=float(i + 1), n_tokens=10, rounds=2)
             for i in range(10)]
     agg = Scheduler(engine=None).aggregate(reqs, CostModel(c=10.0))
-    assert agg["wall_p50"] == pytest.approx(5.0)
-    assert agg["wall_p95"] == pytest.approx(10.0)
+    assert agg["wall_p50"] == pytest.approx(5.5)
+    assert agg["wall_p95"] == pytest.approx(9.55)
     assert agg["wall_s"] == pytest.approx(sum(range(1, 11)))
     assert agg["total_tokens"] == 100
     # 2 rounds x (4*t + c*t) = 28 cost units per request
@@ -54,8 +57,8 @@ def test_serving_metrics_ttft_and_itl():
     s = m.summary(total_cost=21.0)
     assert s["total_tokens"] == 3
     assert s["ttft_p50"] == pytest.approx(11.0)
-    assert s["itl_p50"] == pytest.approx(0.0)     # same-burst tokens
-    assert s["itl_p95"] == pytest.approx(10.0)
+    assert s["itl_p50"] == pytest.approx(5.0)     # lerp([0, 10], 50)
+    assert s["itl_p95"] == pytest.approx(9.5)
     assert s["tokens_per_cost"] == pytest.approx(3 / 21.0)
     assert s["pool_occupancy_peak"] == pytest.approx(0.5)
 
