@@ -83,10 +83,11 @@ def run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
 
 
 def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
-                max_batch, attn_backend="paged", rec=NULL_RECORDER) -> dict:
+                max_batch, attn_backend="paged", rec=NULL_RECORDER,
+                mesh=None) -> dict:
     eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
                                   max_batch=max_batch, page_size=16,
-                                  attn_backend=attn_backend)
+                                  attn_backend=attn_backend, mesh=mesh)
     eng.set_recorder(rec)
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=n_new,
@@ -165,6 +166,12 @@ def main() -> None:
                     "serving default backend; dense is the reference "
                     "oracle).  Hybrid sweeps run SSM rings next to the "
                     "chosen attention backend")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="run the batched cells on a serving device mesh "
+                    "(DESIGN.md §7.10): TP-sharded verify + per-device "
+                    "KV-pool shards.  Needs DP*TP visible devices — on "
+                    "CPU set XLA_FLAGS=--xla_force_host_platform_device_"
+                    "count=N (the simulated-mesh CI tier does)")
     ap.add_argument("--out", default="serving_sweep.json")
     ap.add_argument("--check-baseline", default=None, metavar="JSON",
                     help="diff per-step host-transfer bytes against this "
@@ -196,6 +203,16 @@ def main() -> None:
     else:
         dp, dcfg, tp, tcfg = tiny_pair()
         vocab = tcfg.vocab_size
+    mesh = None
+    if args.mesh:
+        from repro.launch import mesh as MESH
+        try:
+            mdp, mtp = MESH.parse_mesh_arg(args.mesh)
+            MESH.validate_serving_mesh(mdp, mtp, configs=(dcfg, tcfg))
+        except ValueError as e:
+            raise SystemExit(str(e))
+        if (mdp, mtp) != (1, 1):
+            mesh = MESH.make_serving_mesh(mdp, mtp)
     ecfg = EngineConfig(gamma=args.gamma, c=args.c, temperature=0.0,
                         epsilon=0.4, signal_temperature=0.5, max_len=512)
     cost = CostModel(c=args.c)
@@ -213,7 +230,7 @@ def main() -> None:
             t0 = time.time()
             bat = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
                               args.new_tokens, interval, mb,
-                              attn_backend=args.attn_backend)
+                              attn_backend=args.attn_backend, mesh=mesh)
             bat["wall_s"] = time.time() - t0
             cell = {
                 "max_batch": mb,
@@ -236,6 +253,7 @@ def main() -> None:
         "pair": "jamba-shaped" if args.hybrid else args.pair,
         "hybrid": bool(args.hybrid),
         "attn_backend": args.attn_backend,
+        "mesh": args.mesh or "1,1",
         "target_pattern": [list(s) for s in tcfg.pattern],
         "requests": args.requests,
         "new_tokens": args.new_tokens,
@@ -266,6 +284,12 @@ def main() -> None:
             print(f"metrics written to {args.metrics_out}")
 
     if args.check_baseline:
+        if not os.path.exists(args.check_baseline):
+            # a missing baseline is a misconfigured gate, not a crash: say
+            # so in one line and fail the job cleanly
+            print(f"FAIL: --check-baseline file not found: "
+                  f"{args.check_baseline}")
+            sys.exit(1)
         with open(args.check_baseline) as f:
             base = json.load(f)
         base_intervals = base.get("sweep", {}).get("arrival_intervals")

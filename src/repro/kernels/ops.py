@@ -116,9 +116,24 @@ def paged_gather(pages, table, valid_len=None, *,
 
 def paged_attention(q, k_pages, v_pages, table, lens, q_start, *,
                     window: int = 0, cap: Optional[float] = None,
+                    backend: Optional[str] = None,
                     interpret: Optional[bool] = None):
     """Decode attention straight over paged KV through a page table.
-    See kernels.paged_attention."""
+    See kernels.paged_attention.
+
+    backend: "pallas" | "xla" | None.  None routes to the Pallas kernel
+    (interpret off-TPU) — the single-device fast path.  "xla" selects the
+    gather-based twin, which is plain HLO and therefore SPMD-partitionable:
+    the mesh serving path (DESIGN.md §7.10) uses it so the KV-head-sharded
+    page buffers stay collective-free per shard.  REPRO_PAGED_BACKEND
+    overrides a None backend.
+    """
+    if backend is None:
+        backend = os.environ.get("REPRO_PAGED_BACKEND") or "pallas"
+    if backend == "xla":
+        return _pa.paged_decode_attention_xla(
+            q, k_pages, v_pages, jnp.asarray(table), jnp.asarray(lens),
+            jnp.asarray(q_start), window=window, cap=cap)
     it = _default_interpret() if interpret is None else interpret
     return _pa.paged_decode_attention(
         q, k_pages, v_pages, jnp.asarray(table), jnp.asarray(lens),

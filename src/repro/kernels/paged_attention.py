@@ -97,6 +97,56 @@ def _kernel(table_ref, lens_ref, qstart_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
 
 
+@functools.partial(jax.jit, static_argnames=("window", "cap"))
+def paged_decode_attention_xla(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, table: jax.Array,
+                               lens: jax.Array, q_start: jax.Array, *,
+                               window: int = 0,
+                               cap: Optional[float] = None) -> jax.Array:
+    """Pure-XLA twin of ``paged_decode_attention`` (same shapes/masking).
+
+    Gathers the row's pages dense through the table, then runs masked
+    attention — unlike the Pallas kernel this is ordinary HLO, so GSPMD can
+    partition it: under the serving mesh (DESIGN.md §7.10) the page buffers
+    shard over the KV-head (else head_dim) axis, the gather indexes the
+    *unsharded* page axis, and the whole computation stays collective-free
+    per head shard.  The mesh serving path routes here off-TPU; the Pallas
+    kernel remains the single-device/TPU fast path (its custom-call cannot
+    be SPMD-partitioned).
+    """
+    B, T, H, hd = q.shape
+    _P, ps, KV, _ = k_pages.shape
+    n_max = table.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    S = n_max * ps
+
+    # (B, n_max, ps, KV, hd) -> (B, S, KV, hd); logical key position of
+    # table slot (j, o) is j*ps + o, matching the kernel's kpos iota.
+    k = k_pages[table].reshape(B, S, KV, hd).astype(jnp.float32)
+    v = v_pages[table].reshape(B, S, KV, hd).astype(jnp.float32)
+    qr = q.reshape(B, T, KV, G, hd).astype(jnp.float32) * scale
+
+    logits = jnp.einsum("btkgh,bskh->bkgts", qr, k)      # (B, KV, G, T, S)
+    if cap is not None:
+        logits = cap * jnp.tanh(logits / cap)
+
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    qpos = q_start[:, None] + jnp.arange(T, dtype=jnp.int32)   # (B, T)
+    mask = ((kpos[None, None] < lens[:, None, None])
+            & (kpos[None, None] <= qpos[:, :, None]))          # (B, T, S)
+    if window > 0:
+        mask &= (qpos[:, :, None] - kpos[None, None]) < window
+    maskb = mask[:, None, None]                                # (B,1,1,T,S)
+    logits = jnp.where(maskb, logits, NEG_INF)
+
+    m = logits.max(axis=-1)
+    p = jnp.where(maskb, jnp.exp(logits - m[..., None]), 0.0)
+    l = jnp.maximum(p.sum(axis=-1), 1e-20)
+    o = jnp.einsum("bkgts,bskh->bkgth", p, v) / l[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd).astype(q.dtype)
+
+
 def _pad_q(x, axis, mult):
     pad = (-x.shape[axis]) % mult
     if pad == 0:

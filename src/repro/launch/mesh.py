@@ -22,6 +22,71 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+# ---------------------------------------------------------------------------
+# serving meshes (DESIGN.md §7.10)
+# ---------------------------------------------------------------------------
+
+def parse_mesh_arg(arg: str):
+    """Parse a ``--mesh dp,tp`` CLI value into ``(dp, tp)``.
+
+    Raises ValueError with an actionable message on anything that isn't
+    two positive comma-separated integers (a bare ``tp`` is accepted as
+    shorthand for ``1,tp`` — tensor parallelism is the serving default
+    axis)."""
+    parts = [p.strip() for p in str(arg).split(",")]
+    try:
+        dims = [int(p) for p in parts]
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects 'dp,tp' (two comma-separated integers), "
+            f"got {arg!r}")
+    if len(dims) == 1:
+        dims = [1, dims[0]]
+    if len(dims) != 2 or any(d < 1 for d in dims):
+        raise ValueError(
+            f"--mesh expects 'dp,tp' with dp >= 1 and tp >= 1, got {arg!r}")
+    return dims[0], dims[1]
+
+
+def validate_serving_mesh(dp: int, tp: int, *, configs=(),
+                          n_devices: int = 0) -> None:
+    """Reject serving meshes that cannot shard losslessly.
+
+    ``configs``: ModelConfigs that will run under the mesh (target AND
+    draft) — ``tp`` must divide each one's attention-head count, or the
+    tensor-parallel verify would leave a ragged head shard.  ``n_devices``
+    (default: ``jax.device_count()``) must cover dp*tp.  Raises ValueError
+    with an actionable message; dp is never checked against the batch —
+    an odd batch degrades to replication, it doesn't break.
+    """
+    if n_devices <= 0:
+        n_devices = jax.device_count()
+    if dp * tp > n_devices:
+        raise ValueError(
+            f"--mesh {dp},{tp} needs {dp * tp} devices but only "
+            f"{n_devices} are visible; on CPU force a simulated mesh "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{dp * tp} (set before jax initializes)")
+    for cfg in configs:
+        heads = getattr(cfg, "num_heads", 0)
+        if heads and heads % tp != 0:
+            raise ValueError(
+                f"--mesh {dp},{tp}: tp={tp} does not divide "
+                f"{cfg.name!r}'s {heads} attention heads; pick tp in "
+                f"{[t for t in range(1, heads + 1) if heads % t == 0]}")
+
+
+def make_serving_mesh(dp: int, tp: int):
+    """(dp, tp) serving mesh over axes ("data", "model") on the first
+    dp*tp visible devices.  Unlike ``jax.make_mesh`` this does not require
+    the product to cover every device — a 2x2 serving mesh runs fine on
+    the CI tier's 8 forced host devices."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:dp * tp]).reshape(dp, tp)
+    return Mesh(devs, ("data", "model"))
+
+
 # TPU v5e hardware constants used by the roofline analysis (§Roofline)
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -36,6 +36,7 @@ import time
 import jax
 
 from repro.data.synthetic import ZipfMarkov
+from repro.launch import mesh as MESH
 from repro.obs import (NULL_RECORDER, TraceRecorder, profiler_session,
                        write_metrics, write_trace)
 from repro.runtime.cost_model import CostModel
@@ -118,13 +119,23 @@ def run_batched(args, ecfg, prompts, rec=NULL_RECORDER) -> dict:
             f"--mode batched supports {sorted(BATCHED_ENGINES)}; "
             f"run --engine {args.engine} with --mode sequential")
     dp, dcfg, tp, tcfg = load_pair(args.pair)
+    mesh = None
+    if args.mesh:
+        try:
+            mdp, mtp = MESH.parse_mesh_arg(args.mesh)
+            MESH.validate_serving_mesh(mdp, mtp, configs=(dcfg, tcfg))
+        except ValueError as e:
+            raise SystemExit(str(e))
+        if (mdp, mtp) != (1, 1):
+            mesh = MESH.make_serving_mesh(mdp, mtp)
     eng = BATCHED_ENGINES[args.engine](
         dp, dcfg, tp, tcfg, ecfg,
         max_batch=args.max_batch,
         page_size=args.page_size,
         pool_pages=args.pool_pages,
         swap_pages=args.swap_pages,
-        attn_backend=args.attn_backend)
+        attn_backend=args.attn_backend,
+        mesh=mesh)
     eng.set_recorder(rec)        # before the scheduler grabs engine.rec
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=args.new_tokens,
@@ -194,6 +205,16 @@ def main() -> None:
                     "kernel; SSM/hybrid configs ride per-row checkpoint "
                     "rings next to the pages).  dense keeps the N-row "
                     "reference caches — the equivalence oracle")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serving device mesh (batched mode): DP-way data "
+                    "parallelism over dense cache rows x TP-way tensor "
+                    "parallelism over attention heads / MLP hidden, with "
+                    "per-device shards of the paged KV pool (DESIGN.md "
+                    "§7.10).  TP must divide both models' head counts and "
+                    "DP*TP must fit the visible devices (on CPU force a "
+                    "simulated mesh with XLA_FLAGS=--xla_force_host_"
+                    "platform_device_count=N).  Default/1,1: today's "
+                    "single-device path, bit-for-bit")
     ap.add_argument("--arrival-interval", type=float, default=0.0,
                     help="modeled time units between request arrivals")
     ap.add_argument("--max-len", type=int, default=0,
@@ -217,6 +238,16 @@ def main() -> None:
     if args.mode is None:
         args.mode = ("batched" if args.engine in BATCHED_ENGINES
                      else "sequential")
+    if args.mesh:
+        if args.mode != "batched":
+            raise SystemExit("--mesh requires --mode batched")
+        try:
+            # fail fast (syntax + device count) BEFORE the pair loads;
+            # the head-divisibility check runs in run_batched once the
+            # model configs are known
+            MESH.validate_serving_mesh(*MESH.parse_mesh_arg(args.mesh))
+        except ValueError as e:
+            raise SystemExit(str(e))
 
     zm = ZipfMarkov(vocab=VOCAB, seed=7)
     prompts = [list(map(int, p))

@@ -169,7 +169,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               window: int = 0,
               kv_chunk: int = 2048,
               cache_mode: str = "append",
-              paged: Optional[Tuple[jax.Array, jax.Array]] = None
+              paged: Optional[Tuple[jax.Array, jax.Array]] = None,
+              paged_backend: Optional[str] = None
               ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention block (pre-norm, residual outside).
 
@@ -227,7 +228,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         cv = cache["v_pages"].at[page, off].set(
             v.astype(cache["v_pages"].dtype))
         out = _ops.paged_attention(q, ck, cv, table, lens, positions[:, 0],
-                                   window=window, cap=cfg.attn_softcap)
+                                   window=window, cap=cfg.attn_softcap,
+                                   backend=paged_backend)
         return (out.reshape(B, T, H * hd) @ p["wo"],
                 {"k_pages": ck, "v_pages": cv})
 

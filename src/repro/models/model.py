@@ -185,7 +185,7 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
 def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
                 positions: jax.Array, cache: Optional[Params],
                 kv_chunk: int, moe_specs=None, cache_mode: str = "append",
-                paged=None
+                paged=None, paged_backend=None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     mixer, ffn_kind = slot
     aux_loss = jnp.zeros((), jnp.float32)
@@ -193,7 +193,8 @@ def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
         mx, new_cache = L.attention(
             p["mixer"], x, cfg, positions=positions, cache=cache,
             window=_slot_window(cfg, mixer), kv_chunk=kv_chunk,
-            cache_mode=cache_mode, paged=paged)
+            cache_mode=cache_mode, paged=paged,
+            paged_backend=paged_backend)
     else:
         mx, new_cache = L.mamba(p["mixer"], x, cfg, cache=cache,
                                 positions=positions)
@@ -219,7 +220,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
             moe_specs=None,
             cache_mode: str = "append",
             onehot_embed: bool = False,
-            paged=None
+            paged=None,
+            paged_backend: Optional[str] = None
             ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
     """Run the model.
 
@@ -230,6 +232,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
              a cache from ``init_paged_cache`` additionally needs ``paged``.
     paged:   (table (B, n_max) int32, lens (B,) int32) page-table view for
              a physically paged cache — see layers.attention.
+    paged_backend: paged-attention backend override ("xla" for the
+             SPMD-partitionable twin under a serving mesh; None = Pallas).
     positions: (B, T_total) absolute positions; default arange.
 
     feature_mode: "last" -> aux["features"] is (n_points, B, d_model) (hidden
@@ -271,7 +275,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
                 slot_params[s], x, cfg, cfg.pattern[s],
                 positions=positions, cache=slot_caches[s],
                 kv_chunk=kv_chunk, moe_specs=moe_specs,
-                cache_mode=cache_mode, paged=paged)
+                cache_mode=cache_mode, paged=paged,
+                paged_backend=paged_backend)
             new_caches.append(nc)
             aux = aux + al
         feat = x[:, -1, :] if feature_mode == "last" else x
@@ -302,7 +307,7 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
             return _apply_slot(p_, x_, cfg, _slot, positions=pos_,
                                cache=_rc, kv_chunk=kv_chunk,
                                moe_specs=moe_specs, cache_mode=cache_mode,
-                               paged=paged)
+                               paged=paged, paged_backend=paged_backend)
 
         if remat:
             apply_r = jax.checkpoint(

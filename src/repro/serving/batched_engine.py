@@ -148,16 +148,42 @@ class BatchedDecoder:
     def __init__(self, params, cfg: ModelConfig, *, n_rows: int,
                  max_len: int, paged: Optional[PagedKVPool] = None,
                  ssm_ring: int = 0, prefill_lanes: int = 0,
-                 prefill_quantum: int = 8):
-        self.params, self.cfg = params, cfg
+                 prefill_quantum: int = 8, mesh=None):
+        self.cfg = cfg
         self.n_rows, self.max_len = n_rows, max_len
         self.paged = paged
+        self.mesh = mesh
+        # mesh-sharded serving (DESIGN.md §7.10): params shard
+        # tensor-parallel over "model" (replicated over "data" — tp_only
+        # keeps decode free of FSDP weight all-gathers), dense cache rows
+        # ride "data" when divisible, paged page buffers shard their KV
+        # heads only.  Activations/logits pin batch-over-"data" and stay
+        # head/vocab-UNsharded, so each forward's collective contract is
+        # the TP set alone (pinned by tests/test_sharded_serving.py).
+        act_spec = logits_spec = None
+        paged_backend = None
+        if mesh is not None:
+            from repro.sharding import rules as _rules
+            params = jax.device_put(
+                params, _rules.named(mesh, _rules.params_specs(
+                    mesh, cfg, params, tp_only=True)))
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            b_ax = (None if paged is not None
+                    else _rules._fit(mesh, n_rows, "data"))
+            act_spec = NamedSharding(mesh, P(b_ax, None, None))
+            logits_spec = NamedSharding(mesh, P(b_ax, None, None))
+            if _rules._axis_size(mesh, "model") > 1:
+                # the Pallas paged kernel is a custom call GSPMD cannot
+                # partition — route the paged forward to the XLA twin
+                paged_backend = "xla"
+        self.params = params
         # checkpoint-ring depth for mamba slots AND window slack for local
         # attention rings — both bound how far ahead of a row's logical
         # length writes may land (bucket-ladder padding, prefill padding)
         self.ssm_ring = max(0, ssm_ring)
         self.state = DecodeState(cfg, n_rows=n_rows, max_len=max_len,
-                                 paged=paged, ssm_ring=self.ssm_ring)
+                                 paged=paged, ssm_ring=self.ssm_ring,
+                                 mesh=mesh)
         self.prefill_lanes = prefill_lanes or DL.bucket(n_rows)
         self.prefill_quantum = prefill_quantum
         self.prefill_shapes: set = set()
@@ -178,7 +204,9 @@ class BatchedDecoder:
                     tokens.shape[1], dtype=jnp.int32)[None]
                 logits, cache, aux = M.forward(
                     params, cfg, tokens, cache=cache, positions=positions,
-                    feature_mode="all", paged=(table, lens))
+                    feature_mode="all", paged=(table, lens),
+                    act_spec=act_spec, logits_spec=logits_spec,
+                    paged_backend=paged_backend)
                 return logits, cache, aux["features"]
 
             @functools.partial(jax.jit, donate_argnums=(1,))
@@ -189,7 +217,9 @@ class BatchedDecoder:
                     jnp.arange(T, dtype=jnp.int32)[None], (lanes, T))
                 logits, sub, aux = M.forward(
                     params, cfg, tokens, cache=sub, positions=positions,
-                    feature_mode="all", paged=(table, lens))
+                    feature_mode="all", paged=(table, lens),
+                    act_spec=act_spec, logits_spec=logits_spec,
+                    paged_backend=paged_backend)
                 return (logits, state.prefill_merge(cache, sub, rows),
                         aux["features"])
 
@@ -202,7 +232,8 @@ class BatchedDecoder:
                 tokens.shape[1], dtype=jnp.int32)[None]
             logits, cache, aux = M.forward(
                 params, cfg, tokens, cache=cache, positions=positions,
-                feature_mode="all")
+                feature_mode="all", act_spec=act_spec,
+                logits_spec=logits_spec)
             return logits, cache, aux["features"]
 
         @functools.partial(jax.jit, donate_argnums=(1,))
@@ -213,7 +244,8 @@ class BatchedDecoder:
                 jnp.arange(T, dtype=jnp.int32)[None], (lanes, T))
             logits, sub, aux = M.forward(
                 params, cfg, tokens, cache=sub, positions=positions,
-                feature_mode="all")
+                feature_mode="all", act_spec=act_spec,
+                logits_spec=logits_spec)
             return (logits, state.prefill_merge(cache, sub, rows),
                     aux["features"])
 
@@ -442,7 +474,8 @@ class BatchedEngineBase:
                  swap_pages: int = 0,
                  hrad_params=None,
                  attn_backend: str = "dense",
-                 debug_check: bool = False):
+                 debug_check: bool = False,
+                 mesh=None):
         assert attn_backend in ("dense", "paged"), attn_backend
         self.dp, self.dcfg = draft_params, draft_cfg
         self.tp, self.tcfg = target_params, target_cfg
@@ -451,6 +484,11 @@ class BatchedEngineBase:
         self.max_batch = max_batch
         self.attn_backend = attn_backend
         self.debug_check = debug_check
+        # serving mesh (DESIGN.md §7.10): both decoders shard
+        # tensor-parallel over its "model" axis and the device-loop
+        # functions pin their host packets replicated over it; mesh=None
+        # is today's single-device path, bit-for-bit.
+        self.mesh = mesh
         # device-resident loop constants (DESIGN.md §7.7)
         self._key = jax.random.PRNGKey(ecfg.seed & 0x7FFFFFFF)
         self._tt = float(ecfg.temperature)
@@ -504,7 +542,7 @@ class BatchedEngineBase:
                                       paged=self.pools["t"] if paged else None,
                                       ssm_ring=ssm_ring,
                                       prefill_lanes=lanes,
-                                      prefill_quantum=self._pq)
+                                      prefill_quantum=self._pq, mesh=mesh)
         self.dft_dec = BatchedDecoder(draft_params, draft_cfg,
                                       n_rows=max_batch
                                       * self.draft_rows_per_seq,
@@ -512,7 +550,7 @@ class BatchedEngineBase:
                                       paged=self.pools["d"] if paged else None,
                                       ssm_ring=ssm_ring,
                                       prefill_lanes=lanes,
-                                      prefill_quantum=self._pq)
+                                      prefill_quantum=self._pq, mesh=mesh)
         if paged:
             # accounting COW (pool) -> physical COW, each in its own buffer
             self.pools["t"].cow_listeners.append(self.tgt_dec.copy_page)
@@ -1016,7 +1054,8 @@ class BatchedSpSEngine(BatchedEngineBase):
             toks, qsl, _ = DL.tick_sample(lg, jnp.asarray(last),
                                           jnp.asarray(rids),
                                           jnp.asarray(ctrs), self._key,
-                                          dtemp=self._dt, stemp=self._st)
+                                          dtemp=self._dt, stemp=self._st,
+                                          mesh=self.mesh)
             tok_ticks.append(toks)
             q_ticks.append(qsl)
             for s in seqs:
@@ -1074,7 +1113,7 @@ class BatchedSpSEngine(BatchedEngineBase):
                 jnp.asarray(drows), jnp.asarray(npend), jnp.asarray(rid_l),
                 jnp.asarray(ctr_l), self._key, g=g, ttemp=self._tt,
                 dtemp=self._dt, kernel=self._use_kernel,
-                interpret=self._kernel_interpret)
+                interpret=self._kernel_interpret, mesh=self.mesh)
         for s in seqs:
             s.ctr += g + 1
         pk = self._fetch(packet_dev)       # the round's ONLY host fetch
@@ -1257,7 +1296,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             cands = self._fetch(DL.draw_cands(
                 qb_stack, jnp.asarray(rid_l), jnp.asarray(ctr_l),
                 self._key, K=K, stemp=self._st,
-                mode=self.ecfg.branch_mode))
+                mode=self.ecfg.branch_mode, mesh=self.mesh))
             if self.ecfg.branch_mode != "topk":
                 for s in branchers:
                     s.ctr += ks[s.rid]
@@ -1315,7 +1354,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                     jnp.asarray(ctr_v), self._key, CH=CH, K=K,
                     ttemp=self._tt, dtemp=self._dt, stemp=self._st,
                     kernel=self._use_kernel,
-                    interpret=self._kernel_interpret)
+                    interpret=self._kernel_interpret, mesh=self.mesh)
             for s in branchers:
                 s.ctr += self._W
         wall_disp = rec.now()
@@ -1457,7 +1496,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 branch_j[s.rid] = j + 1
             toks_dev, qsl, packed = DL.tick_sample(
                 lg, jnp.asarray(last), jnp.asarray(rids), jnp.asarray(ctrs),
-                self._key, dtemp=self._dt, stemp=self._st)
+                self._key, dtemp=self._dt, stemp=self._st, mesh=self.mesh)
             # fetch the PREVIOUS tick's packet while this tick computes
             if pend is not None:
                 resolve(pend)

@@ -52,6 +52,7 @@ import numpy as np
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.kv_pool import PagedKVPool
+from repro.sharding import rules as _rules
 
 __all__ = ["DecodeState", "DenseAttnState", "PagedAttnState",
            "SSMRingState", "iter_slots"]
@@ -310,8 +311,10 @@ class DecodeState:
     """
 
     def __init__(self, cfg: ModelConfig, *, n_rows: int, max_len: int,
-                 paged: Optional[PagedKVPool] = None, ssm_ring: int = 0):
+                 paged: Optional[PagedKVPool] = None, ssm_ring: int = 0,
+                 mesh=None):
         self.cfg, self.n_rows, self.max_len = cfg, n_rows, max_len
+        self.mesh = mesh
         self.ssm_ring = max(0, ssm_ring)
         has_ssm = any(m == "mamba" for m, _ in cfg.pattern)
         if has_ssm and self.ssm_ring <= 0:
@@ -321,14 +324,27 @@ class DecodeState:
         self.paged: Optional[PagedAttnState] = None
         self.ssm: Optional[SSMRingState] = None
         if paged is not None:
+            # Sharded paged layout (DESIGN.md §7.10): the page axis stays
+            # unsharded and KV heads split over "model", so one logical
+            # page id p names the family of (device, p) per-head shards.
+            # The host-side pool accounting (tables, refcounts, COW) is
+            # device-agnostic and unchanged — every shard sees the same
+            # replicated page table and reads/writes only its head slice.
             self.paged = PagedAttnState(paged, max_len)
-            self.cache = M.init_paged_cache(
-                cfg, paged.num_pages, paged.page_size,
-                n_rows=n_rows if has_ssm else 0, ssm_ring=self.ssm_ring)
+            self.cache = self._init_cache(
+                lambda: M.init_paged_cache(
+                    cfg, paged.num_pages, paged.page_size,
+                    n_rows=n_rows if has_ssm else 0,
+                    ssm_ring=self.ssm_ring),
+                batch_axis="")
             self.attn: Any = self.paged
         else:
-            self.cache = M.init_cache(cfg, n_rows, max_len,
-                                      ssm_ring=self.ssm_ring)
+            # dense rows shard their batch axis over "data" (degrading to
+            # replication when the row count doesn't divide)
+            self.cache = self._init_cache(
+                lambda: M.init_cache(cfg, n_rows, max_len,
+                                     ssm_ring=self.ssm_ring),
+                batch_axis="data")
             self.attn = DenseAttnState(max_len)
         if has_ssm:
             self.ssm = SSMRingState(self.ssm_ring)
@@ -403,6 +419,18 @@ class DecodeState:
 
         self._copy_row_fn = _copy_row
         self._copy_page_fn = _copy_page
+
+    def _init_cache(self, init, *, batch_axis: str):
+        """Build the cache pytree, created directly under its mesh
+        shardings when a mesh is set (``jit`` + ``out_shardings``, so big
+        pools never materialize unsharded on one device)."""
+        if self.mesh is None:
+            return init()
+        specs = _rules.serving_cache_specs(
+            self.mesh, self.cfg, jax.eval_shape(init),
+            batch_axis=batch_axis)
+        return jax.jit(init,
+                       out_shardings=_rules.named(self.mesh, specs))()
 
     # --------------------------------------------------------------- rows
     @property

@@ -36,6 +36,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.kernels import verify_accept as _va
 from repro.runtime import sampling as S
@@ -63,6 +64,20 @@ def annotate(name: str):
     if _ANNOTATE:
         return jax.profiler.TraceAnnotation(name)
     return contextlib.nullcontext()
+
+
+def _replicated(tree, mesh):
+    """Pin host-packet outputs fully replicated on ``mesh`` (DESIGN.md
+    §7.10).  The serving loop's device -> host boundary is a handful of
+    tiny int32/f32 packets per round; replicating them makes the fetch a
+    local read on every shard and keeps GSPMD from threading a packet's
+    layout back into the verify partitioning.  ``mesh=None`` (the
+    single-device paths and every pre-mesh caller) is a no-op."""
+    if mesh is None:
+        return tree
+    s = NamedSharding(mesh, PartitionSpec())
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, s), tree)
 
 
 def bucket(n: int) -> int:
@@ -130,9 +145,10 @@ def _chain_via_kernel(p_lg: jax.Array, q_lg: jax.Array, toks: jax.Array,
     return n_acc, nxt, all_acc
 
 
-@functools.partial(jax.jit, static_argnames=("dtemp", "stemp"))
+@functools.partial(jax.jit, static_argnames=("dtemp", "stemp", "mesh"))
 def tick_sample(lg: jax.Array, last: jax.Array, rids: jax.Array,
-                ctrs: jax.Array, base_key, *, dtemp: float, stemp: float):
+                ctrs: jax.Array, base_key, *, dtemp: float, stemp: float,
+                mesh=None):
     """One fused draft-sampling tick over a batched forward's logits.
 
     All arrays are indexed BY DECODER ROW: lg (n_rows, T, V) logits,
@@ -153,6 +169,7 @@ def tick_sample(lg: jax.Array, last: jax.Array, rids: jax.Array,
     u = S.uniform_grid(base_key, rids, ctrs, 1)[:, 0]
     tok = S.categorical_from_uniform(qp, u)
     packed = jnp.stack([tok.astype(jnp.float32), sg.max(-1)], axis=-1)
+    tok, packed = _replicated((tok, packed), mesh)
     return tok, sl, packed
 
 
@@ -190,12 +207,12 @@ def compose_verify_tokens(pend: jax.Array, npend: jax.Array,
 
 @functools.partial(jax.jit,
                    static_argnames=("g", "ttemp", "dtemp", "kernel",
-                                    "interpret"))
+                                    "interpret", "mesh"))
 def sps_verify(tlg: jax.Array, q_stack: jax.Array, tok_stack: jax.Array,
                trows: jax.Array, drows: jax.Array, npend: jax.Array,
                rids: jax.Array, ctrs: jax.Array, base_key, *,
                g: int, ttemp: float, dtemp: float, kernel: bool = False,
-               interpret: bool = True):
+               interpret: bool = True, mesh=None):
     """Fused SpS verification: target-forward logits in, one small packet
     out.  tlg: (n_rows, Tb, V); q_stack: (g, n_draft_rows, V) raw draft
     logits from the ticks; tok_stack: (g, n_draft_rows).
@@ -230,35 +247,36 @@ def sps_verify(tlg: jax.Array, q_stack: jax.Array, tok_stack: jax.Array,
         n_acc, nxt, all_acc = S.verify_chain_device(
             S.probs_from_logits(pall[:, :g], ttemp),
             S.probs_from_logits(q_raw, dtemp), drafted, lens, ugrid, bonus)
-    return jnp.concatenate(
+    return _replicated(jnp.concatenate(
         [n_acc[:, None], nxt[:, None], all_acc.astype(jnp.int32)[:, None],
-         drafted], axis=1)
+         drafted], axis=1), mesh)
 
 
-@functools.partial(jax.jit, static_argnames=("K", "stemp", "mode"))
+@functools.partial(jax.jit, static_argnames=("K", "stemp", "mode", "mesh"))
 def draw_cands(qb_lg: jax.Array, rids: jax.Array, ctrs: jax.Array,
-               base_key, *, K: int, stemp: float, mode: str):
+               base_key, *, K: int, stemp: float, mode: str, mesh=None):
     """Branch-point candidates from the stored q_b signal logits (S, V).
     mode="sample": K i.i.d. inverse-CDF draws at counter offsets 0..K-1 (a
     row with adaptive k consumes only its first k); "topk": deterministic
     Top-K.  Returns (S, K) int32."""
     if mode == "topk":
         _, idx = jax.lax.top_k(qb_lg, K)
-        return idx.astype(jnp.int32)
+        return _replicated(idx.astype(jnp.int32), mesh)
     qb = S.probs_from_logits(qb_lg, stemp)
     ugrid = S.uniform_grid(base_key, rids, ctrs, K)
-    return S.categorical_from_uniform(qb[:, None, :], ugrid)
+    return _replicated(
+        S.categorical_from_uniform(qb[:, None, :], ugrid), mesh)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("CH", "K", "ttemp", "dtemp", "stemp",
-                                    "kernel", "interpret"))
+                                    "kernel", "interpret", "mesh"))
 def branch_verify(tlg: jax.Array, trows: jax.Array, npend: jax.Array,
                   gch: jax.Array, chunk_q: jax.Array, chunk_toks: jax.Array,
                   cands: jax.Array, ks: jax.Array, qb_lg: jax.Array,
                   rids: jax.Array, ctrs: jax.Array, base_key, *,
                   CH: int, K: int, ttemp: float, dtemp: float, stemp: float,
-                  kernel: bool = False, interpret: bool = True):
+                  kernel: bool = False, interpret: bool = True, mesh=None):
     """Fused SpecBranch verdict: chain-verify each request's chunk (ragged
     lengths gch <= CH) AND run Algorithm 2 over its branch candidates, all
     from one target forward's logits.
@@ -298,5 +316,5 @@ def branch_verify(tlg: jax.Array, trows: jax.Array, npend: jax.Array,
     qb_probs = S.probs_from_logits(qb_lg, stemp)
     acc_b, tok_b = S.branch_verdict_device(p_b, qb_probs, cands, ks,
                                            ugrid[:, CH + 1:])
-    return jnp.stack([n_acc, nxt, all_acc.astype(jnp.int32),
-                      acc_b, tok_b], axis=1)
+    return _replicated(jnp.stack([n_acc, nxt, all_acc.astype(jnp.int32),
+                                  acc_b, tok_b], axis=1), mesh)

@@ -29,6 +29,17 @@ every written slot is accounted here — pool exhaustion and preemption
 behave identically either way.  ``PagedStore`` adds standalone paged
 storage (used as the preemption swap space) read back through the Pallas
 paged-gather kernel (kernels/paged.py).
+
+Mesh sharding (DESIGN.md §7.10): on a (dp, tp) serving mesh the pool is
+unchanged — it is pure host accounting, and a page id names a *family* of
+per-device shards rather than one buffer.  The page-buffer arrays shard
+their KV-head (or head-dim) axis over "model" while the page axis stays
+unsharded, so logical page p is physically the set {(device, p)} with each
+device holding its head-shard of every page.  Page tables and lengths
+replicate to all devices (they are scalar-prefetch operands), which is why
+fork/COW/rollback need no cross-device traffic: a COW copy-page jit lowers
+to zero collectives — every device copies its own shard of the page
+(pinned by tests/test_sharded_serving.py).
 """
 from __future__ import annotations
 

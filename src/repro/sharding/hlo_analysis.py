@@ -109,6 +109,35 @@ def _line_collective_bytes(line: str, default_n: int) -> Tuple[str, float]:
     return kind, float(op_bytes)          # collective-permute
 
 
+def collective_counts(hlo: str, *, by_group: bool = True) -> Dict[str, int]:
+    """Static collective census of an HLO module: how many of each
+    collective op the program text contains, keyed ``kind@n`` where ``n``
+    is the participant-group size from ``replica_groups`` (``kind`` alone
+    when ``by_group=False`` or the groups are unparseable).
+
+    This is the *partitioning contract* pin for the sharded-serving CI
+    tier (DESIGN.md §7.10): unlike ``collective_bytes`` it is independent
+    of tensor sizes and loop trip counts, so a test can assert the exact
+    set — a regression that re-partitions a matmul (say, an extra
+    all-gather of the KV cache per step) changes the census even when the
+    byte estimate happens to stay in the same ballpark.  Async pairs
+    (``all-gather-start``/``-done``) count once, on the start op.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        kind = next((c for c in _COLLECTIVES if f" {c}(" in line
+                     or f"{c}-start(" in line), None)
+        if kind is None:
+            continue
+        if by_group:
+            n = _group_size(line, 0)
+            key = f"{kind}@{n}" if n else kind
+        else:
+            key = kind
+        out[key] = out.get(key, 0) + 1
+    return out
+
+
 def _trip_count(cond_text: str) -> Optional[int]:
     consts = [int(x) for x in re.findall(r"constant\((\d+)\)", cond_text)]
     consts = [c for c in consts if c > 1]

@@ -197,6 +197,68 @@ def tokens_spec(mesh: Mesh, batch: int) -> P:
     return P(_fit(mesh, batch, batch_axes(mesh), "data"), None)
 
 
+# ---------------------------------------------------------------------------
+# serving cache rules (decode_state component layouts)
+# ---------------------------------------------------------------------------
+
+def serving_cache_specs(mesh: Mesh, cfg: ModelConfig, cache_shape: Any,
+                        *, batch_axis: str = "") -> Any:
+    """Specs for a serving DecodeState cache pytree (DESIGN.md §7.10).
+
+    Unlike the training ``cache_specs`` (leaves are uniformly
+    (stack, B, S, ...)), a serving cache is a *mixed* component tree:
+
+      * dense attention rows ``k``/``v`` (stack, n_rows, S, KV, hd) and
+        ``pos`` (stack, n_rows, S): rows shard over ``batch_axis`` (the
+        dense backend's data parallelism), KV heads over "model"
+        (head_dim when the KV count doesn't divide);
+      * paged attention ``k_pages``/``v_pages`` (stack, num_pages + 1,
+        page_size, KV, hd): the page axis stays UNSHARDED — every device
+        holds the head-shard of every logical page, so a page id ``p``
+        names the (device, p) pair family and the host page tables
+        replicate verbatim.  KV heads (else head_dim) shard over "model";
+      * SSM checkpoint rings ``h_ring`` (stack, n_rows, ring, E, N) /
+        ``conv_ring`` (stack, n_rows, ring, Cv-1, E): rows over
+        ``batch_axis``, the expanded state dim E over "model" (matching
+        the tp params rules for in_proj/out_proj).
+
+    Every rule degrades through ``_fit``: an axis is used only when it
+    divides the dimension, so a 1x1 mesh (or an odd batch) shards nothing.
+    """
+
+    def heads_spec(shape):
+        kv = _fit(mesh, shape[3], "model")
+        hd = None if kv else _fit(mesh, shape[4], "model")
+        return kv, hd
+
+    def leaf(path, shape):
+        name = path[-1]
+        b = _fit(mesh, shape[1], batch_axis) if batch_axis else None
+        if name in ("k", "v"):               # (stack, B, S, KV, hd)
+            kv, hd = heads_spec(shape)
+            return P(None, b, None, kv, hd)
+        if name == "pos":                    # (stack, B, S)
+            return P(None, b, None)
+        if name in ("k_pages", "v_pages"):   # (stack, P+1, ps, KV, hd)
+            kv, hd = heads_spec(shape)
+            return P(None, None, None, kv, hd)
+        if name == "h_ring":                 # (stack, B, ring, E, N)
+            return P(None, b, None, _fit(mesh, shape[3], "model"), None)
+        if name == "conv_ring":              # (stack, B, ring, Cv-1, E)
+            return P(None, b, None, None, _fit(mesh, shape[4], "model"))
+        return P(*([None] * len(shape)))
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(v, path + (str(i),)) for i, v in enumerate(node))
+        return leaf(path, tuple(node.shape))
+
+    return walk(cache_shape, ())
+
+
 def named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

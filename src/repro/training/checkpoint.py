@@ -27,9 +27,20 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
 
 
 def save(path: str, params: Any) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
     flat = _flatten(params)
-    np.savez(path, **flat)
+    # write-then-rename so a concurrent reader (parallel pytest workers,
+    # a serving process hot-loading a trained draft) never sees a torn file
+    if not path.endswith(".npz"):
+        path += ".npz"        # np.savez appends it; keep tmp/final in sync
+    tmp = f"{path}.tmp.{os.getpid()}.npz"
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load(path: str, template: Any) -> Any:

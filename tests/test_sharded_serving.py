@@ -1,0 +1,247 @@
+"""Mesh-sharded serving (DESIGN.md §7.10): TP verify + sharded KV pool.
+
+Three contracts, in increasing strictness:
+
+  * mesh == 1 is LOSSLESS BITWISE: an engine built on a 1x1 mesh emits
+    streams identical to today's mesh=None path (greedy AND sampled) —
+    the mesh plumbing may not perturb a single numeric;
+  * mesh > 1 is LOSSLESS GREEDY: on a (dp, tp) mesh every request's
+    greedy stream equals the single-device autoregressive oracle
+    (reduction reordering may move float bits, argmax may not move);
+  * the COLLECTIVE CONTRACT is pinned: the compiled target forward's
+    static collective census (kind @ group size) per mesh config, the
+    paged COW page copy and the dp-only paged forward at exactly zero
+    collectives — a regression that re-partitions a matmul (an extra
+    KV all-gather per step, a cross-device page copy) fails the pin even
+    when outputs stay correct.
+
+The mesh > 1 cases need simulated devices; the CI ``mesh`` tier runs this
+file under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+flag must be set before jax initializes, so it is NOT set here — under
+the single-device tier-1 process those cases skip).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import mesh as MESH
+from repro.models import model as M
+from repro.models.config import ModelConfig, dense_pattern
+from repro.runtime.engines import EngineConfig
+from repro.runtime.runner import greedy_reference
+from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
+                           ContinuousBatchScheduler, ServeRequest)
+from repro.sharding.hlo_analysis import collective_counts
+
+N_NEW = 8
+N_REQ = 4
+VOCAB = 64
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (CI mesh tier forces 8 host devices)")
+
+
+def _cfg(name, layers, d, heads):
+    return ModelConfig(name=name, family="dense", num_layers=layers,
+                       d_model=d, num_heads=heads,
+                       num_kv_heads=max(1, heads // 2), d_ff=4 * d,
+                       vocab_size=VOCAB, pattern=dense_pattern(0),
+                       dtype="float32")
+
+
+def _ecfg(**kw):
+    kw.setdefault("gamma", 3)
+    kw.setdefault("c", 4.0)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("epsilon", 0.4)
+    kw.setdefault("signal_temperature", 0.5)
+    kw.setdefault("k_max", 3)
+    kw.setdefault("max_len", 128)
+    return EngineConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    tcfg = _cfg("shard-t", 2, 64, 2)
+    dcfg = _cfg("shard-d", 1, 32, 2)
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    rng = np.random.default_rng(3)
+    prompts = [list(map(int, rng.integers(0, VOCAB, size=6)))
+               for _ in range(N_REQ)]
+    refs = [greedy_reference(tp, tcfg, p, N_NEW, max_len=128)
+            for p in prompts]
+    return dp, dcfg, tp, tcfg, prompts, refs
+
+
+def _run(pair, cls, backend, mesh, temp=0.0, page_size=4):
+    dp, dcfg, tp, tcfg, prompts, _ = pair
+    eng = cls(dp, dcfg, tp, tcfg, _ecfg(temperature=temp),
+              max_batch=N_REQ, page_size=page_size, attn_backend=backend,
+              debug_check=True, mesh=mesh)
+    res = ContinuousBatchScheduler(eng).run(
+        [ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
+         for i, p in enumerate(prompts)])
+    return {i: res[i].tokens for i in res}, eng
+
+
+# ---------------------------------------------------------------------------
+# mesh == 1: bitwise against today's path (runs in tier 1, one device)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [BatchedSpSEngine, BatchedSpecBranchEngine])
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_mesh1_bitwise_vs_unmeshed(pair, cls, backend):
+    """A 1x1 mesh is today's engine, token-for-token — at temperature 1.0,
+    where any numeric drift in logits or uniforms changes the stream."""
+    base, _ = _run(pair, cls, backend, None, temp=1.0)
+    mesh = MESH.make_serving_mesh(1, 1)
+    got, eng = _run(pair, cls, backend, mesh, temp=1.0)
+    assert got == base
+    assert eng.pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# mesh > 1: greedy == single-device oracle
+# ---------------------------------------------------------------------------
+
+@multidevice
+@pytest.mark.parametrize("cls", [BatchedSpSEngine, BatchedSpecBranchEngine])
+@pytest.mark.parametrize("dims,backend", [((1, 2), "dense"),
+                                          ((2, 2), "paged")],
+                         ids=["tp2-dense", "dp2tp2-paged"])
+def test_meshN_greedy_equals_oracle(pair, cls, dims, backend):
+    _, _, _, _, _, refs = pair
+    mesh = MESH.make_serving_mesh(*dims)
+    got, eng = _run(pair, cls, backend, mesh)
+    for i, ref in enumerate(refs):
+        assert got[i] == ref, i
+    assert eng.pool.pages_in_use == 0
+    eng.pool.check()
+
+
+@multidevice
+def test_meshN_sharded_pool_cow_and_rollback(pair):
+    """The sharded paged pool keeps its invariants per shard: branch forks
+    COW-share, an untrained draft's rejections reclaim with reason tags,
+    and retirement drains the pool — same accounting as single-device
+    (the pool is host state; page ids name per-device shard families)."""
+    mesh = MESH.make_serving_mesh(2, 2)
+    _, eng = _run(pair, BatchedSpecBranchEngine, "paged", mesh, page_size=2)
+    st = eng.pool.stats
+    assert st.reclaimed_speculative_pages > 0
+    assert st.cow_copies > 0
+    assert eng.pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# collective contract (HLO census pins, jax pinned in CI)
+# ---------------------------------------------------------------------------
+
+# static census of the compiled target verify forward per mesh config,
+# keyed "kind@group_size" (sharding/hlo_analysis.collective_counts):
+# TP pays per-layer all-reduces (attention wo + MLP down contractions),
+# all-gathers around the batch/replicated boundaries and the final logits;
+# a dp-only paged forward is fully replicated — zero collectives.
+_FWD_CENSUS = {
+    ("dense", (1, 2)): {"collective-permute": 2, "all-reduce@2": 4,
+                        "all-gather@2": 7, "all-to-all@2": 1},
+    ("paged", (1, 2)): {"collective-permute": 2, "all-reduce@2": 4,
+                        "all-gather@2": 7},
+    ("dense", (2, 2)): {"collective-permute": 4, "all-reduce@2": 4,
+                        "all-gather@2": 13, "all-to-all@2": 1},
+    ("paged", (2, 2)): {"collective-permute": 4, "all-reduce@4": 1,
+                        "all-reduce@2": 4, "all-gather@2": 6},
+    ("dense", (2, 1)): {"all-gather@2": 6},
+    ("paged", (2, 1)): {},
+}
+
+
+def _target_fwd_hlo(pair, backend, mesh):
+    dp, dcfg, tp, tcfg, _, _ = pair
+    eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, _ecfg(),
+                                  max_batch=N_REQ, page_size=4,
+                                  attn_backend=backend, mesh=mesh)
+    dec = eng.tgt_dec
+    toks = jnp.zeros((dec.n_rows, 4), jnp.int32)
+    pos = jnp.zeros((dec.n_rows,), jnp.int32)
+    if backend == "paged":
+        tab, lens = dec.state.table_view()
+        low = dec._fwd.lower(dec.params, dec.cache, toks, pos,
+                             jnp.asarray(tab), jnp.asarray(lens))
+    else:
+        low = dec._fwd.lower(dec.params, dec.cache, toks, pos)
+    return low.compile().as_text(), eng
+
+
+@multidevice
+@pytest.mark.parametrize("backend,dims", sorted(_FWD_CENSUS),
+                         ids=lambda v: str(v))
+def test_collective_census_pinned(pair, backend, dims):
+    """The partitioning contract: the exact collective set (kind, count,
+    group axes) of the compiled verify forward per mesh config.  A diff
+    here means the sharding layout changed — update the pin only with a
+    measured byte/latency justification."""
+    hlo, _ = _target_fwd_hlo(pair, backend, MESH.make_serving_mesh(*dims))
+    assert collective_counts(hlo) == _FWD_CENSUS[(backend, dims)], \
+        (backend, dims)
+
+
+@multidevice
+@pytest.mark.parametrize("dims", [(1, 2), (2, 2)], ids=["1x2", "2x2"])
+def test_copy_page_zero_collectives(pair, dims):
+    """Physical COW stays device-local: the page-copy jit on a sharded
+    paged cache must compile to ZERO collectives — every device copies its
+    own head-shard of the page (the (device, page) id space contract)."""
+    _, eng = _target_fwd_hlo(pair, "paged", MESH.make_serving_mesh(*dims))
+    cp = eng.tgt_dec.state._copy_page_fn
+    hlo = cp.lower(eng.tgt_dec.cache, jnp.int32(0),
+                   jnp.int32(1)).compile().as_text()
+    assert collective_counts(hlo) == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI surface (launch.mesh validation + serve --mesh)
+# ---------------------------------------------------------------------------
+
+def test_parse_mesh_arg():
+    assert MESH.parse_mesh_arg("2,4") == (2, 4)
+    assert MESH.parse_mesh_arg(" 1 , 1 ") == (1, 1)
+    assert MESH.parse_mesh_arg("4") == (1, 4)       # bare tp shorthand
+    for bad in ("", "a,b", "2,", "1,2,3", "0,4", "-1,2"):
+        with pytest.raises(ValueError, match="--mesh"):
+            MESH.parse_mesh_arg(bad)
+
+
+def test_validate_serving_mesh_devices():
+    MESH.validate_serving_mesh(1, 2, n_devices=2)
+    with pytest.raises(ValueError, match="device_count=8"):
+        MESH.validate_serving_mesh(2, 4, n_devices=4)
+
+
+def test_validate_serving_mesh_heads():
+    cfg = _cfg("v", 1, 32, 4)
+    MESH.validate_serving_mesh(1, 2, configs=(cfg,), n_devices=8)
+    with pytest.raises(ValueError, match=r"pick tp in \[1, 2, 4\]"):
+        MESH.validate_serving_mesh(1, 3, configs=(cfg,), n_devices=8)
+
+
+def test_serve_cli_rejects_oversized_mesh(monkeypatch, capsys):
+    """--mesh validation fails fast (before any model loads) with the
+    actionable device-count message."""
+    from repro.launch import serve
+    monkeypatch.setattr("sys.argv",
+                        ["serve", "--mode", "batched", "--mesh", "9,9"])
+    with pytest.raises(SystemExit) as e:
+        serve.main()
+    assert "xla_force_host_platform_device_count=81" in str(e.value)
+
+
+def test_serve_cli_rejects_mesh_outside_batched(monkeypatch):
+    from repro.launch import serve
+    monkeypatch.setattr("sys.argv",
+                        ["serve", "--mode", "sequential", "--mesh", "1,2"])
+    with pytest.raises(SystemExit, match="batched"):
+        serve.main()

@@ -7,7 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import ARCH_IDS, get_config
 from repro.launch import steps
 from repro.sharding import rules
-from repro.sharding.hlo_analysis import collective_bytes
+from repro.sharding.hlo_analysis import collective_bytes, collective_counts
 
 
 class FakeMesh:
@@ -108,3 +108,56 @@ def test_collective_bytes_parsing():
 def test_collective_bytes_empty():
     out = collective_bytes("ENTRY %m (a: f32[4]) -> f32[4] { ROOT %c = f32[4] copy(%a) }")
     assert out["total"] == 0
+
+
+def test_collective_counts_census():
+    """Static census: kinds keyed by replica-group size, loop trips
+    ignored (the census is the partitioning contract, not a byte
+    estimate)."""
+    out = collective_counts(HLO)
+    assert out == {"all-gather@16": 1, "all-reduce@4": 1}
+    flat = collective_counts(HLO, by_group=False)
+    assert flat == {"all-gather": 1, "all-reduce": 1}
+
+
+def test_collective_counts_async_pairs_count_once():
+    hlo = """
+ENTRY %m (a: f32[64]) -> f32[64] {
+  %s = f32[64] all-gather-start(f32[32] %a), replica_groups={{0,1}}
+  %d = f32[64] all-gather-done(%s)
+  %p = f32[64] collective-permute(f32[64] %d), source_target_pairs={{0,1}}
+  ROOT %r = f32[64] copy(%p)
+}
+"""
+    out = collective_counts(hlo)
+    assert out == {"all-gather@2": 1, "collective-permute": 1}
+    assert collective_counts("ENTRY %m () -> f32[] { }") == {}
+
+
+@pytest.mark.parametrize("mesh", MESHES, ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("arch", ["gemma2-27b", "jamba-1.5-large-398b"])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_serving_cache_specs_divisible(mesh, arch, paged):
+    """Serving DecodeState cache specs (DESIGN.md §7.10) must divide their
+    dims on the production meshes — and the paged page axis must stay
+    unsharded (page ids name per-device shard families; the host tables
+    replicate)."""
+    import jax
+    from repro.models import model as M
+    cfg = get_config(arch)
+    if paged:
+        cshape = jax.eval_shape(
+            lambda: M.init_paged_cache(cfg, 64, 16, n_rows=8, ssm_ring=32))
+    else:
+        cshape = jax.eval_shape(
+            lambda: M.init_cache(cfg, 8, 2048, ssm_ring=32))
+    spec = rules.serving_cache_specs(mesh, cfg, cshape,
+                                     batch_axis="" if paged else "data")
+    for s, leaf in _leaves_with_shapes(spec, cshape):
+        for i, (dim, axes) in enumerate(zip(leaf.shape, tuple(s))):
+            if axes is None:
+                continue
+            assert dim % rules._axis_size(mesh, axes) == 0, (arch, leaf.shape,
+                                                             s)
+            if paged:
+                assert i != 1, f"page axis must stay unsharded: {s}"
