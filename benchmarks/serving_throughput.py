@@ -25,6 +25,14 @@ and exits non-zero when the loop regresses to >2x the committed post-PR
 bytes or loses the >=10x reduction over the recorded pre-PR host loop —
 the CI bench-smoke gate.
 
+``--spec-predictor on|off|oracle`` threads the acceptance-history
+speculation controller (runtime/predictor.py, DESIGN.md §7.11) through
+the sweep cells; ``--predictor-sweep OUT.json`` additionally runs the
+first batch-size cell with the predictor off/on/oracle and reports
+rollback tokens/request per mode, and ``--predictor-gate`` turns that
+into the CI smoke gate (predictor-on must reduce rollback tokens/request
+without losing throughput).
+
 Usage:
   PYTHONPATH=src python benchmarks/serving_throughput.py \
       --out serving_sweep.json [--check-baseline benchmarks/baselines/...]
@@ -146,6 +154,79 @@ def overhead_gate(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, max_batch,
     return rec
 
 
+def predictor_sweep(dp, dcfg, tp, tcfg, args, prompts, out_path: str,
+                    gate: bool = False, tol: float = 0.05) -> None:
+    """Rollback sweep (ISSUE 8 / DESIGN.md §7.11): the same request set
+    through the batched SpecBranch engine with the acceptance-history
+    predictor off / on / oracle.  Per mode: rollback tokens per finished
+    request (trace-registry totals — the same host packets the engine
+    consumes) and modeled tokens-per-cost.  With ``gate``: exit 1 unless
+    predictor-on keeps throughput within ``tol`` of predictor-off AND
+    strictly reduces rollback tokens/request — the CI bench-smoke gate."""
+    mb = args.batch_sizes[0]
+    modes = {}
+    for mode in ("off", "on", "oracle"):
+        ecfg = EngineConfig(gamma=args.gamma, c=args.c, temperature=0.0,
+                            epsilon=0.4, signal_temperature=0.5,
+                            spec_predictor=mode, max_len=512)
+        rec = TraceRecorder()
+        t0 = time.time()
+        rep = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
+                          args.new_tokens, 0.0, mb, rec=rec,
+                          attn_backend=args.attn_backend)
+        reg = rec.registry
+        n_req = max(reg.counter("requests_finished_total").value, 1)
+        rb = reg.counter("rollback_tokens_total").value
+        modes[mode] = {
+            "tokens_per_cost": rep["tokens_per_cost"],
+            "rollback_tokens_total": rb,
+            "rollback_tokens_per_request": rb / n_req,
+            "drafted_tokens_total":
+                reg.counter("tokens_drafted_total").value,
+            "pred_decisions": reg.counter("pred_decisions_total").value,
+            "requests_finished": n_req,
+            "wall_s": time.time() - t0,
+        }
+        print(f"predictor={mode:6s}: {rep['tokens_per_cost']:.3f} tok/cost  "
+              f"rollback/req {modes[mode]['rollback_tokens_per_request']:.2f}"
+              f"  drafted {modes[mode]['drafted_tokens_total']}")
+    off, on = modes["off"], modes["on"]
+    report = {
+        "engine": "specbranch", "mode": "batched", "max_batch": mb,
+        "pair": "trained-misaligned" if args.pair == "trained" else args.pair,
+        "requests": args.requests, "new_tokens": args.new_tokens,
+        "gamma": args.gamma, "c": args.c, "gate_tol": tol,
+        "modes": modes,
+        "rollback_reduction_per_request":
+            off["rollback_tokens_per_request"]
+            - on["rollback_tokens_per_request"],
+        "throughput_ratio_on_vs_off":
+            on["tokens_per_cost"] / max(off["tokens_per_cost"], 1e-9),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, default=float)
+    print(f"wrote {out_path}")
+    if gate:
+        ok = True
+        if on["tokens_per_cost"] < (1.0 - tol) * off["tokens_per_cost"]:
+            print(f"  FAIL: predictor-on throughput "
+                  f"{on['tokens_per_cost']:.3f} regressed >"
+                  f"{tol:.0%} below off {off['tokens_per_cost']:.3f}")
+            ok = False
+        if (on["rollback_tokens_per_request"]
+                >= off["rollback_tokens_per_request"]):
+            print(f"  FAIL: predictor-on rollback/req "
+                  f"{on['rollback_tokens_per_request']:.2f} did not reduce "
+                  f"off {off['rollback_tokens_per_request']:.2f}")
+            ok = False
+        if not ok:
+            sys.exit(1)
+        print("predictor gate passed: rollback/req "
+              f"{off['rollback_tokens_per_request']:.2f} -> "
+              f"{on['rollback_tokens_per_request']:.2f} at "
+              f"{report['throughput_ratio_on_vs_off']:.3f}x throughput")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", default="random", choices=["random", "trained"])
@@ -160,6 +241,19 @@ def main() -> None:
                     default=[0.0, 10.0])
     ap.add_argument("--gamma", type=int, default=3)
     ap.add_argument("--c", type=float, default=4.0)
+    ap.add_argument("--spec-predictor", default="off",
+                    choices=["off", "on", "oracle"],
+                    help="acceptance-history speculation controller for "
+                    "the main sweep cells (runtime/predictor.py); off is "
+                    "today's static knobs, bit-for-bit")
+    ap.add_argument("--predictor-sweep", default=None, metavar="JSON",
+                    help="also run the rollback sweep: the first "
+                    "batch-size cell with the predictor off/on/oracle, "
+                    "reporting rollback tokens/request per mode to JSON")
+    ap.add_argument("--predictor-gate", action="store_true",
+                    help="with --predictor-sweep: exit 1 unless "
+                    "predictor-on holds throughput within 5%% of off AND "
+                    "reduces rollback tokens/request (CI smoke gate)")
     ap.add_argument("--attn-backend", default="paged",
                     choices=["dense", "paged"],
                     help="batched-cell KV storage (default: paged, the "
@@ -214,7 +308,8 @@ def main() -> None:
         if (mdp, mtp) != (1, 1):
             mesh = MESH.make_serving_mesh(mdp, mtp)
     ecfg = EngineConfig(gamma=args.gamma, c=args.c, temperature=0.0,
-                        epsilon=0.4, signal_temperature=0.5, max_len=512)
+                        epsilon=0.4, signal_temperature=0.5,
+                        spec_predictor=args.spec_predictor, max_len=512)
     cost = CostModel(c=args.c)
     zm = ZipfMarkov(vocab=vocab, seed=7)
     prompts = [list(map(int, p))
@@ -282,6 +377,10 @@ def main() -> None:
         if args.metrics_out:
             write_metrics(rec.registry, args.metrics_out)
             print(f"metrics written to {args.metrics_out}")
+
+    if args.predictor_sweep:
+        predictor_sweep(dp, dcfg, tp, tcfg, args, prompts,
+                        args.predictor_sweep, gate=args.predictor_gate)
 
     if args.check_baseline:
         if not os.path.exists(args.check_baseline):

@@ -13,6 +13,15 @@ why.  The serving CLI exposes the same recorder on both modes:
 
   PYTHONPATH=src python -m repro.launch.serve --mode batched \
       --pair jamba-shaped --trace trace.json --metrics-out metrics.json
+
+Add ``--spec-predictor on`` (or ``oracle``) to either serve mode to let
+the acceptance-history controller (runtime/predictor.py, DESIGN.md §7.11)
+pick gamma / branch cap / epsilon per request per round from past verify
+outcomes; the recorded spec events then carry its ``pred`` decisions.
+The default ``off`` keeps today's static knobs bit-for-bit:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode batched \
+      --spec-predictor on --trace trace.json
 """
 import os
 import sys

@@ -61,7 +61,7 @@ def build_feature(features: jax.Array, embed: jax.Array, k_layers: int
     sel = features[n - k:]                       # (k, B, D)
     if k < k_layers:                             # pad by repeating deepest
         sel = jnp.concatenate(
-            [jnp.repeat(sel[:1], k_layers - k, axis=0), sel], axis=0)
+            [jnp.repeat(sel[-1:], k_layers - k, axis=0), sel], axis=0)
     z = jnp.concatenate(
         [sel.transpose(1, 0, 2).reshape(embed.shape[0], -1),
          embed], axis=-1)
@@ -143,6 +143,16 @@ def _smote(x: np.ndarray, y: np.ndarray, seed: int = 0,
     return np.concatenate(xs), np.concatenate(ys)
 
 
+def clip_by_global_norm(g, max_norm: float = 1.0):
+    """Scale a gradient pytree so its global L2 norm is at most
+    ``max_norm`` (E.4).  Applied to the RAW gradient before it enters the
+    Adam moments — clipping the bias-corrected moment instead would let
+    unbounded raw gradients poison m/v."""
+    gnorm = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(g)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-8))
+    return jax.tree.map(lambda a: scale * a, g)
+
+
 def train_mlp(z: np.ndarray, labels: np.ndarray, cfg: HRADConfig,
               verbose: bool = False) -> Tuple[Params, Dict[str, float]]:
     """Offline H-RAD training.  z: (N, d_in) float32; labels: (N,) in {0,1,2}.
@@ -158,7 +168,10 @@ def train_mlp(z: np.ndarray, labels: np.ndarray, cfg: HRADConfig,
     zv, yv = z[:n_val], labels[:n_val]
     zt, yt = z[n_val:], labels[n_val:]
 
-    # standardize (SMOTE in standardized space, per E.4)
+    # standardize (SMOTE in standardized space, per E.4); keep the real
+    # pre-SMOTE training rows aside so train_acc is measured on actual
+    # samples, not synthetic interpolations
+    zt_real, yt_real = zt, yt
     mu, sd = zt.mean(0), zt.std(0) + 1e-6
     zt_s = (zt - mu) / sd
     zt_s, yt = _smote(zt_s, yt, seed=cfg.seed)
@@ -180,17 +193,15 @@ def train_mlp(z: np.ndarray, labels: np.ndarray, cfg: HRADConfig,
 
     @jax.jit
     def step(p, m, v, zb, yb, dk, t, lr):
-        g = jax.grad(loss_fn)(p, zb, yb, dk)
+        g = clip_by_global_norm(jax.grad(loss_fn)(p, zb, yb, dk))
         b1, b2, e = 0.9, 0.999, 1e-8
         m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
         v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
         mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
         vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
-        # decoupled weight decay + gradient clipping (E.4)
-        gnorm = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(mh)))
-        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-8))
+        # decoupled weight decay (E.4)
         p = jax.tree.map(
-            lambda a, mm, vv: a - lr * (scale * mm / (jnp.sqrt(vv) + e)
+            lambda a, mm, vv: a - lr * (mm / (jnp.sqrt(vv) + e)
                                         + cfg.weight_decay * a),
             p, mh, vh)
         return p, m, v
@@ -227,8 +238,9 @@ def train_mlp(z: np.ndarray, labels: np.ndarray, cfg: HRADConfig,
         recalls[f"recall_{c}"] = float((pred_v[m] == c).mean()) if m.any() else float("nan")
     metrics = {"val_acc": best_val, **recalls,
                "train_acc": float(np.mean(
-                   np.asarray(predict(params, jnp.asarray(zt[:2048]))) ==
-                   yt[:2048]))}
+                   np.asarray(predict(params,
+                                      jnp.asarray(zt_real[:2048]))) ==
+                   yt_real[:2048]))}
     return params, metrics
 
 

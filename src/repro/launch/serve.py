@@ -189,6 +189,17 @@ def main() -> None:
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--c", type=float, default=10.0)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--spec-predictor", default="off",
+                    choices=["off", "on", "oracle"],
+                    help="per-request acceptance-history speculation "
+                    "controller (runtime/predictor.py): 2-bit saturating "
+                    "counters + a global pattern-history table pick "
+                    "gamma/branch-cap/epsilon each round from past verify "
+                    "outcomes.  off (default): today's static knobs, "
+                    "bit-for-bit; on: the hardware-style predictor; "
+                    "oracle: exact per-request acceptance EMA (upper "
+                    "bound).  Lossless either way — the predictor never "
+                    "touches accept/reject decisions")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pool-pages", type=int, default=None,
@@ -258,7 +269,8 @@ def main() -> None:
                 + 4 * (args.gamma + int(args.c)))
         max_len = max(512, 1 << (need - 1).bit_length())
     ecfg = EngineConfig(gamma=args.gamma, c=args.c,
-                        temperature=args.temperature, max_len=max_len)
+                        temperature=args.temperature,
+                        spec_predictor=args.spec_predictor, max_len=max_len)
     tracing = bool(args.trace or args.metrics_out or args.profile_dir)
     rec = TraceRecorder() if tracing else NULL_RECORDER
     if args.profile_dir:

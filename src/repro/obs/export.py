@@ -89,6 +89,8 @@ def perfetto_trace(rec: TraceRecorder) -> dict:
             args = {k: e[k] for k in ("stage", "committed", "accepted",
                                       "drafted", "rolled_back", "pruned",
                                       "cause", "gamma", "k")}
+            if e.get("pred") is not None:   # history-predictor decision
+                args["pred"] = e["pred"]
             ev.append({"ph": "i", "pid": _PID_REQ, "tid": rid + 1, "s": "t",
                        "name": f"spec[{e['stage']}]"
                                + (f":{e['cause']}" if e["cause"] else ""),

@@ -148,20 +148,26 @@ class TraceRecorder(NullRecorder):
              accepted: int = 0, drafted: int = 0, rolled_back: int = 0,
              pruned: int = 0, cause: str = "", gamma: int = 0, k: int = 0,
              bonus: bool = False, eps_stop: bool = False,
-             hrad: Optional[int] = None, t: Optional[float] = None) -> None:
+             hrad: Optional[int] = None,
+             pred: Optional[Dict[str, Any]] = None,
+             t: Optional[float] = None) -> None:
         """One request's speculation outcome in one engine round.
 
         ``stage``: "sps" (vanilla SD verify), "draft" (SpecBranch DRAFT
         stage — chunk built, nothing verified yet), "branch" (SpecBranch
         BRANCH stage verdict).  ``gamma`` is the chunk length under
         verification, ``k`` the branch count, ``cause`` the rollback
-        attribution (module docstring).
+        attribution (module docstring).  ``pred`` carries the history
+        predictor's per-round decision (runtime/predictor.py
+        ``Decision.obs()``: chosen gamma / k_cap / epsilon + the score and
+        cold flag that produced them) — the controller is evaluated on the
+        same spec events it consumes.
         """
         self.event("spec", rid=rid, round=round, stage=stage,
                    committed=committed, accepted=accepted, drafted=drafted,
                    rolled_back=rolled_back, pruned=pruned, cause=cause,
                    gamma=gamma, k=k, bonus=bonus, eps_stop=eps_stop,
-                   hrad=hrad, t=t)
+                   hrad=hrad, pred=pred, t=t)
         reg = self.registry
         reg.counter("tokens_committed_total").inc(committed)
         reg.counter("tokens_accepted_total").inc(accepted)
@@ -177,6 +183,10 @@ class TraceRecorder(NullRecorder):
             reg.counter("eps_stops_total").inc()
         if hrad is not None:
             reg.counter(f"hrad_signal_{hrad}_total").inc()
+        if pred is not None:
+            reg.counter("pred_decisions_total").inc()
+            reg.histogram("pred_score").observe(float(pred["score"]))
+            reg.histogram("pred_gamma").observe(float(pred["gamma"]))
         if stage in ("sps", "branch") and gamma > 0:
             rate = min(accepted, gamma) / gamma
             reg.histogram("acceptance_rate").observe(rate)

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.obs.trace import NULL_RECORDER
+from repro.runtime import predictor as P
 from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel, Round
 from repro.runtime.runner import ModelRunner
@@ -61,6 +62,11 @@ class EngineConfig:
     use_hrad: bool = True          # ablation: SpecBranch w/o H-RAD
     use_branch: bool = True        # ablation: SpecBranch w/o branch
     gamma_branch_override: int = 0 # 0 = auto (speed-ratio-matched)
+    spec_predictor: str = "off"    # "off" | "on" | "oracle" — history-driven
+    #   speculation controller (runtime/predictor.py): per-request
+    #   acceptance-history state adapts gamma/k/epsilon per round.  "off"
+    #   keeps every engine path bitwise-identical to the predictor-less
+    #   build; "oracle" swaps the 2-bit counters for exact EMAs.
     max_len: int = 4096
     seed: int = 0
 
@@ -161,6 +167,11 @@ class Engine:
         self.ecfg = ecfg
         self.hrad_params = hrad_params
         self._q_stack: Optional[jax.Array] = None
+        # history-driven speculation controller (runtime/predictor.py);
+        # None when spec_predictor == "off" — call sites guard on that, so
+        # the off path runs exactly the predictor-less code.
+        self.predictor = P.make_predictor(
+            ecfg.spec_predictor, ecfg.gamma, ecfg.k_max, ecfg.epsilon)
 
     def set_recorder(self, rec, rid: int = 0) -> None:
         self.rec = rec

@@ -72,23 +72,29 @@ class SpecBranchEngine(Engine):
     def _embed_of(self, token: int) -> jax.Array:
         return self.tp["embed"][jnp.asarray([token])].astype(jnp.float32)
 
-    def _branch_k(self, q_b: jax.Array) -> int:
+    def _branch_k(self, q_b: jax.Array, k_cap: Optional[int] = None) -> int:
         if not self.ecfg.use_branch:
             return 1
+        cap = self.ecfg.k_max if k_cap is None \
+            else min(self.ecfg.k_max, max(1, k_cap))
         conf = float(jax.device_get(q_b.max()))
-        return min(self.ecfg.k_max,
-                   S.adaptive_k(conf, self.ecfg.k_max))
+        return min(cap, S.adaptive_k(conf, cap))
 
     # ----------------------------------------------------------- drafting
-    def _serial_draft(self, draft: ModelRunner, ctx: _Ctx, s: int
+    def _serial_draft(self, draft: ModelRunner, ctx: _Ctx, s: int,
+                      gamma: Optional[int] = None,
+                      epsilon: Optional[float] = None
                       ) -> Tuple[List[int], List[jax.Array], jax.Array]:
         """DRAFT-stage drafting per H_t (Eq. 6).
 
         Returns (chunk, q_list for the chunk, q_b at the branch point).
         Every drafted chunk token is ingested; q_b is the distribution at
-        the branch point (where candidates are spawned).
+        the branch point (where candidates are spawned).  ``gamma`` /
+        ``epsilon`` override the static knobs when the history predictor
+        is driving them.
         """
-        gamma = self.ecfg.gamma
+        gamma = self.ecfg.gamma if gamma is None else gamma
+        epsilon = self.ecfg.epsilon if epsilon is None else epsilon
         if draft.pending:
             draft.forward([])
         chunk, qs = [], []
@@ -99,7 +105,7 @@ class SpecBranchEngine(Engine):
             q = self._qprobs(draft.last_logits[0])
             q_sig = self._qsignal(draft.last_logits[0])
             conf = float(jax.device_get(q_sig.max()))
-            if s == 1 and conf < self.ecfg.epsilon:
+            if s == 1 and conf < epsilon:
                 ctx.stats.draft_tokens += 1
                 return chunk, qs, q_sig      # branch point found
             tok = int(jax.device_get(S.sample(ctx.split(), q)))
@@ -154,6 +160,10 @@ class SpecBranchEngine(Engine):
         plen = len(prompt) + (embeds.shape[1] if embeds is not None else 0)
         gb = self.ecfg.gamma_branch
         parallel = self.ecfg.use_branch
+        pred = self.predictor     # history-driven controller (may be None);
+        if pred is not None:      # keyed by rid so state survives preemption
+            pred.start(self.trace_rid)
+        dec = None
 
         mode = "draft"
         # BRANCH-stage carried state:
@@ -163,26 +173,32 @@ class SpecBranchEngine(Engine):
 
         while len(ctx.out) < n_new:
             draft.checkpoint(), target.checkpoint()
+            # refresh the per-round knobs from the acceptance history
+            dec = pred.decide(self.trace_rid) if pred is not None else None
+            gamma_t = dec.gamma if dec is not None else self.ecfg.gamma
+            eps_t = dec.epsilon if dec is not None else self.ecfg.epsilon
             if mode == "draft":
                 # ---------------- DRAFT stage (serial) ----------------
                 feats = self._feats_last(target)
                 e_t = self._embed_of(draft.pending[0] if draft.pending
                                      else target.pending[0])
                 s = self._hrad_signal(feats, e_t, ctx)
-                chunk, chunk_q, q_b = self._serial_draft(draft, ctx, s)
+                chunk, chunk_q, q_b = self._serial_draft(
+                    draft, ctx, s, gamma=gamma_t, epsilon=eps_t)
                 ctx.timeline.append(("serial", len(chunk) + 1, 0))
                 if self.rec.enabled:
                     self.rec.spec(
                         rid=self.trace_rid, round=len(ctx.timeline) - 1,
                         stage="draft", drafted=len(chunk) + 1,
-                        gamma=self.ecfg.gamma,
-                        eps_stop=(s == 1 and len(chunk) < self.ecfg.gamma),
-                        hrad=(s if self.ecfg.use_hrad else None))
+                        gamma=gamma_t,
+                        eps_stop=(s == 1 and len(chunk) < gamma_t),
+                        hrad=(s if self.ecfg.use_hrad else None),
+                        pred=(dec.obs() if dec is not None else None))
                 mode = "branch"
                 continue
 
             # ---------------- BRANCH stage (parallel) ----------------
-            k = self._branch_k(q_b)
+            k = self._branch_k(q_b, dec.k_cap if dec is not None else None)
             cands = np.asarray(jax.device_get(S.draw_branch_candidates(
                 ctx.split(), q_b, k, self.ecfg.branch_mode)))
             # draft k continuations || target verifies the chunk
@@ -193,6 +209,10 @@ class SpecBranchEngine(Engine):
             ctx.timeline.append(
                 ("parallel", gb + 1, 1) if parallel
                 else ("serial", gb + 1, 1))
+            if pred is not None and chunk:
+                # chunk-verify outcome, from the verdict already on host
+                pred.update(self.trace_rid, bool(all_acc),
+                            n / max(len(chunk), 1))
 
             if not all_acc:
                 # mid-chunk rejection: branches are doomed (Fig. 1a)
@@ -208,7 +228,8 @@ class SpecBranchEngine(Engine):
                         drafted=len(chunk),
                         rolled_back=(len(chunk) - n) + gb,
                         cause="chunk-reject", gamma=max(len(chunk), 1),
-                        k=len(cands))
+                        k=len(cands),
+                        pred=(dec.obs() if dec is not None else None))
                 draft.unfork()
                 self._reset_lineage(target, plen, ctx)
                 self._reset_lineage(draft, plen, ctx)
@@ -218,6 +239,9 @@ class SpecBranchEngine(Engine):
             # chunk fully accepted -> branch-point verification (Alg. 2)
             verdict = S.branch_spec_sample(
                 ctx.split(), p_b, jnp.asarray(cands, jnp.int32), q_b)
+            if pred is not None:
+                # branch-point verdict: did a hedge branch survive Alg. 2?
+                pred.update(self.trace_rid, verdict.accepted_branch >= 0)
             if verdict.accepted_branch < 0:
                 # no branch survives: emit the residual sample, rollback
                 ctx.out.extend(chunk + [verdict.token])
@@ -231,7 +255,8 @@ class SpecBranchEngine(Engine):
                         stage="branch", committed=len(chunk) + 1,
                         accepted=len(chunk), drafted=len(chunk),
                         rolled_back=gb, cause="branch-miss",
-                        gamma=max(len(chunk), 1), k=len(cands))
+                        gamma=max(len(chunk), 1), k=len(cands),
+                        pred=(dec.obs() if dec is not None else None))
                 draft.unfork()
                 self._reset_lineage(target, plen, ctx)
                 self._reset_lineage(draft, plen, ctx)
@@ -268,7 +293,7 @@ class SpecBranchEngine(Engine):
                 draft.reset_to(plen + len(ctx.out))   # lineage incl. tok_b
             else:
                 j = next((jj for jj in range(gb)
-                          if confs[i, jj] < self.ecfg.epsilon), gb)
+                          if confs[i, jj] < eps_t), gb)
                 if j == gb:
                     chunk, chunk_q = cont_i, q_i
                     q_b = self._qsignal(draft.last_logits[0])
@@ -285,7 +310,8 @@ class SpecBranchEngine(Engine):
                     accepted=n_acc + 1, drafted=n_acc,
                     pruned=pruned, cause="branch-adopt",
                     gamma=max(n_acc, 1), k=len(cands),
-                    hrad=(s if self.ecfg.use_hrad else None))
+                    hrad=(s if self.ecfg.use_hrad else None),
+                    pred=(dec.obs() if dec is not None else None))
             mode = "branch"
 
         ctx.stats.finish()

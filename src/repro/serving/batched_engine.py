@@ -91,6 +91,7 @@ from repro.kernels.ops import _default_interpret as _ops_default_interpret
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.obs.trace import NULL_RECORDER
+from repro.runtime import predictor as PRED
 from repro.runtime import sampling as S
 from repro.runtime.cost_model import CostModel
 from repro.runtime.engines import EngineConfig, GenResult, GenStats
@@ -450,6 +451,9 @@ class _Seq:
     chunk_q: List[jax.Array] = dataclasses.field(default_factory=list)
     q_b: Optional[jax.Array] = None          # (V,) signal LOGITS, device
     q_b_conf: float = 0.0                    # host copy of max signal prob
+    # this round's history-predictor decision (runtime/predictor.py);
+    # None whenever the predictor is off
+    pdec: Optional[Any] = None
 
     @property
     def committed(self) -> int:
@@ -497,6 +501,14 @@ class BatchedEngineBase:
         # chunk pad width: a carried chunk is a serial draft (<= gamma) OR
         # an adopted branch continuation (<= gamma_branch)
         self._CH = DL.bucket(max(1, ecfg.gamma, ecfg.gamma_branch))
+        # history-driven speculation controller (runtime/predictor.py):
+        # None when spec_predictor == "off", and every predictor branch in
+        # the round loops is guarded on that — the off path stays bitwise-
+        # identical to the predictor-less build.  Adjusted gammas stay on
+        # the bucket ladder <= ecfg.gamma, so _CH, the admission headroom
+        # and the jit trace set all keep their static bounds.
+        self.predictor = PRED.make_predictor(
+            ecfg.spec_predictor, ecfg.gamma, ecfg.k_max, ecfg.epsilon)
         self._K = max(1, ecfg.k_max)
         # fused verify route: the batched Pallas verify_accept kernel on
         # TPU (pre-scaled logits), the compiled XLA twin elsewhere
@@ -794,6 +806,10 @@ class BatchedEngineBase:
         seq.tgt = _Stream(row=t_row, ing=L, pending=[toks[-1]])
         seq.dft = _Stream(row=d_row, ing=L, pending=[toks[-1]])
         seq.mode, seq.chunk, seq.chunk_q, seq.q_b = "draft", [], [], None
+        if self.predictor is not None:
+            # keyed by rid: acceptance history survives preemption and
+            # re-admission (start is idempotent)
+            self.predictor.start(rid)
         seq.admit_order = self._admit_counter
         self._admit_counter += 1
         self.active.append(seq)
@@ -961,6 +977,8 @@ class BatchedEngineBase:
             self.dft_dec.unbind_row(seq.dft.row)
             self.tgt_dec.free_rows.append(seq.tgt.row)
             self.dft_dec.free_rows.append(seq.dft.row)
+            if self.predictor is not None:
+                self.predictor.drop(seq.rid)
             seq.stats.finish()
             if self.rec.enabled:
                 self.rec.finish(seq.rid, emitted=seq.stats.emitted,
@@ -1017,17 +1035,29 @@ class BatchedSpSEngine(BatchedEngineBase):
         seqs = [s for s in self.active if not s.done]
         if not seqs:
             return {"committed": {}, "preempted": []}
-        g = self.ecfg.gamma
+        pred = self.predictor
+        # per-request adaptive gamma from the acceptance history: each
+        # request drafts/verifies its OWN g_i <= ecfg.gamma (ladder-
+        # snapped); the round runs max(g_i) ticks with finished rows
+        # parked.  Predictor off: g_i == gamma for every row and the round
+        # below is byte-identical to the predictor-less code.
+        for s in seqs:
+            s.pdec = pred.decide(s.rid) if pred is not None else None
+        g_of = {s.rid: (s.pdec.gamma if s.pdec is not None
+                        else self.ecfg.gamma) for s in seqs}
+        g = self.ecfg.gamma if pred is None \
+            else max(g_of[s.rid] for s in seqs)
         rec = self.rec
         wall0 = rec.now()
         rnd_idx = len(self.timeline)
 
         def fits(ss):
             return (self.pools["d"].has_room(
-                        [(("d", s.rid), len(s.dft.pending) + g - 1)
+                        [(("d", s.rid),
+                          len(s.dft.pending) + g_of[s.rid] - 1)
                          for s in ss])
                     and self.pools["t"].has_room(
-                        [(("t", s.rid), len(s.tgt.pending) + g)
+                        [(("t", s.rid), len(s.tgt.pending) + g_of[s.rid])
                          for s in ss]))
 
         preempted = self._make_room(seqs, fits)
@@ -1049,7 +1079,10 @@ class BatchedSpSEngine(BatchedEngineBase):
             s.dft.pending = []
         tok_ticks, q_ticks = [], []
         for i in range(g):
-            rids, ctrs = self._by_row(self.dft_dec, seqs,
+            # rows whose own g_i is exhausted park (rid/ctr 0 — their lane
+            # computes garbage that glens masks out of the verify)
+            ticking = [s for s in seqs if g_of[s.rid] > i]
+            rids, ctrs = self._by_row(self.dft_dec, ticking,
                                       lambda s: s.dft.row)
             toks, qsl, _ = DL.tick_sample(lg, jnp.asarray(last),
                                           jnp.asarray(rids),
@@ -1058,14 +1091,15 @@ class BatchedSpSEngine(BatchedEngineBase):
                                           mesh=self.mesh)
             tok_ticks.append(toks)
             q_ticks.append(qsl)
-            for s in seqs:
+            for s in ticking:
                 s.ctr += 1
                 s.stats.draft_tokens += 1
             if i < g - 1:
-                lg, _ = self._ingest_dev(
-                    self.dft_dec,
-                    [(s.dft, ("d", s.rid)) for s in seqs], toks)
-                last[:] = 0
+                pairs = [(s.dft, ("d", s.rid)) for s in ticking
+                         if g_of[s.rid] > i + 1]
+                if pairs:
+                    lg, _ = self._ingest_dev(self.dft_dec, pairs, toks)
+                    last[:] = 0
         tok_stack = jnp.stack(tok_ticks)          # (g, n_d) device
         q_stack = jnp.stack(q_ticks)              # (g, n_d, V) device
         wall_draft = rec.now()
@@ -1078,6 +1112,7 @@ class BatchedSpSEngine(BatchedEngineBase):
         drows = np.zeros(B, np.int32)
         rid_l = np.zeros(B, np.int32)
         ctr_l = np.zeros(B, np.int32)
+        glens = np.zeros(B, np.int32)      # pad lanes: 0 (garbage, unread)
         for i, s in enumerate(seqs):
             p = pends[s.rid]
             npend[i] = len(p)
@@ -1086,7 +1121,9 @@ class BatchedSpSEngine(BatchedEngineBase):
             drows[i] = s.dft.row
             rid_l[i] = s.rid
             ctr_l[i] = s.ctr
-        Tb = DL.bucket(int(npend.max()) + g)
+            glens[i] = g_of[s.rid]
+        Tb = DL.bucket(int((npend + glens).max()) if pred is not None
+                       else int(npend.max()) + g)
         toks_full = DL.compose_verify_tokens(
             jnp.asarray(pend_arr), jnp.asarray(npend), tok_stack,
             jnp.asarray(drows), jnp.asarray(trows),
@@ -1098,57 +1135,67 @@ class BatchedSpSEngine(BatchedEngineBase):
                          self.tgt_dec.max_len - Tb).astype(np.int32)
         for s in seqs:
             self.pools["t"].extend(("t", s.rid),
-                                   len(pends[s.rid]) + g)
+                                   len(pends[s.rid]) + g_of[s.rid])
             if s.tgt.ing + Tb > self.tgt_dec.max_len:
                 raise RuntimeError(
                     f"row {s.tgt.row} overflows max_len")
             pos[s.tgt.row] = s.tgt.ing
         tlg, feats = self.tgt_dec.step(toks_full, pos)
         for s in seqs:
-            s.tgt.ing += len(pends[s.rid]) + g
+            s.tgt.ing += len(pends[s.rid]) + g_of[s.rid]
             self.tgt_dec.row_pos[s.tgt.row] = s.tgt.ing
         with DL.annotate("sps_verify"):
             packet_dev = DL.sps_verify(
                 tlg, q_stack, tok_stack, jnp.asarray(trows),
                 jnp.asarray(drows), jnp.asarray(npend), jnp.asarray(rid_l),
-                jnp.asarray(ctr_l), self._key, g=g, ttemp=self._tt,
+                jnp.asarray(ctr_l), self._key,
+                jnp.asarray(glens) if pred is not None else None,
+                g=g, ttemp=self._tt,
                 dtemp=self._dt, kernel=self._use_kernel,
                 interpret=self._kernel_interpret, mesh=self.mesh)
         for s in seqs:
-            s.ctr += g + 1
+            s.ctr += g_of[s.rid] + 1
         pk = self._fetch(packet_dev)       # the round's ONLY host fetch
         wall_verify = rec.now()
         now = self.clock + self.cost.round_cost(("serial", g, 1))
         committed: Dict[int, int] = {}
         for i, s in enumerate(seqs):
+            g_i = g_of[s.rid]
             n, nxt, all_acc = int(pk[i, 0]), int(pk[i, 1]), bool(pk[i, 2])
-            dr = [int(x) for x in pk[i, 3:3 + g]]
+            dr = [int(x) for x in pk[i, 3:3 + g_i]]
             npend_i = len(pends[s.rid])
             before = min(len(s.out), s.max_new)
             s.stats.target_calls += 1
             s.feats_last = feats[:, s.tgt.row:s.tgt.row + 1,
-                                 npend_i + g - 1, :]
+                                 npend_i + g_i - 1, :]
             s.tgt.pending = []
+            if pred is not None:
+                # update from the packet already on host: no extra syncs
+                pred.update(s.rid, all_acc, n / max(g_i, 1))
             if all_acc:
                 self._commit(s, dr + [nxt], now)
-                s.stats.run_extend(g + 1)
+                s.stats.run_extend(g_i + 1)
                 s.tgt.pending = [nxt]
                 s.dft.pending = [dr[-1], nxt]
                 if rec.enabled:
                     rec.spec(rid=s.rid, round=rnd_idx, stage="sps",
-                             committed=g + 1, accepted=g, drafted=g,
-                             cause="accept", gamma=g, bonus=True, t=now)
+                             committed=g_i + 1, accepted=g_i, drafted=g_i,
+                             cause="accept", gamma=g_i, bonus=True,
+                             pred=(s.pdec.obs() if s.pdec is not None
+                                   else None), t=now)
             else:
                 self._commit(s, dr[:n] + [nxt], now)
                 s.stats.run_extend(n)
                 s.stats.run_break()
-                s.stats.rollback_tokens += g - n
+                s.stats.rollback_tokens += g_i - n
                 self._rollback_streams(s)
                 if rec.enabled:
                     rec.spec(rid=s.rid, round=rnd_idx, stage="sps",
-                             committed=n + 1, accepted=n, drafted=g,
-                             rolled_back=g - n, cause="chunk-reject",
-                             gamma=g, t=now)
+                             committed=n + 1, accepted=n, drafted=g_i,
+                             rolled_back=g_i - n, cause="chunk-reject",
+                             gamma=g_i,
+                             pred=(s.pdec.obs() if s.pdec is not None
+                                   else None), t=now)
             committed[s.rid] = min(len(s.out), s.max_new) - before
         if rec.enabled:
             wall1 = rec.now()
@@ -1221,8 +1268,12 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
     def _branch_k(self, seq: _Seq) -> int:
         if not self.ecfg.use_branch:
             return 1
-        return min(self.ecfg.k_max,
-                   S.adaptive_k(seq.q_b_conf, self.ecfg.k_max))
+        # the history predictor caps the hedge count; Eq. 7's confidence-
+        # adaptive k still applies under the cap.  pdec None -> k_max cap,
+        # exactly the predictor-less rule.
+        cap = self.ecfg.k_max if seq.pdec is None \
+            else min(self.ecfg.k_max, max(1, seq.pdec.k_cap))
+        return min(cap, S.adaptive_k(seq.q_b_conf, cap))
 
     def _bkey(self, rid: int, i: int):
         return ("b", rid, i)
@@ -1243,6 +1294,18 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             return {"committed": {}, "preempted": []}
         g, gb = self.ecfg.gamma, self.ecfg.gamma_branch
         K, CH = self._K, self._CH
+        pred = self.predictor
+        # one history-predictor decision per request per round — DRAFT-mode
+        # rows use its gamma/epsilon for their stop rules, BRANCH-mode rows
+        # its k cap (via _branch_k) and epsilon (posterior continuation
+        # cut).  pdec stays None with the predictor off: every use below
+        # falls back to the static ecfg knobs, bitwise-identical.
+        for s in seqs:
+            s.pdec = pred.decide(s.rid) if pred is not None else None
+        g_of = {s.rid: (s.pdec.gamma if s.pdec is not None else g)
+                for s in seqs}
+        eps_of = {s.rid: (s.pdec.epsilon if s.pdec is not None
+                          else self.ecfg.epsilon) for s in seqs}
         rec = self.rec
         wall0 = rec.now()
         rnd_idx = len(self.timeline)
@@ -1254,7 +1317,8 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             pd = self.pools["d"]
             for s in ss:
                 if s.mode == "draft":
-                    d_ups.append((("d", s.rid), len(s.dft.pending) + g))
+                    d_ups.append((("d", s.rid),
+                                  len(s.dft.pending) + g_of[s.rid]))
                 else:
                     k = self._branch_k(s)
                     dlen = pd.length(("d", s.rid))
@@ -1416,9 +1480,9 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                 row = s.dft.row
                 conf = float(pkt[row, 1])
                 over = False
-                if sig[s.rid] == 0 or i >= g:
+                if sig[s.rid] == 0 or i >= g_of[s.rid]:
                     stop = True                  # deterministic: no ingest
-                elif sig[s.rid] == 1 and conf < self.ecfg.epsilon:
+                elif sig[s.rid] == 1 and conf < eps_of[s.rid]:
                     stop = True
                     over = True                  # token i rode optimism
                 else:
@@ -1436,9 +1500,12 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                         self.dft_dec.row_pos[s.dft.row] = s.dft.ing
                     if rec.enabled:
                         rec.spec(rid=s.rid, round=rnd_idx, stage="draft",
-                                 drafted=len(s.chunk) + 1, gamma=g,
+                                 drafted=len(s.chunk) + 1,
+                                 gamma=g_of[s.rid],
                                  eps_stop=over,
                                  hrad=(sig[s.rid] if self.ecfg.use_hrad
+                                       else None),
+                                 pred=(s.pdec.obs() if s.pdec is not None
                                        else None),
                                  t=self.clock)
                     continue
@@ -1465,7 +1532,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             # which rows read a tick now?  (live lags one tick for epsilon
             # stops — the extra read samples garbage the resolve skips)
             readers = [s for s in serial
-                       if live[s.rid] and reads[s.rid] <= g
+                       if live[s.rid] and reads[s.rid] <= g_of[s.rid]
                        and not (sig[s.rid] == 0 and reads[s.rid] >= 1)]
             br_read = [s for s in branchers if branch_j[s.rid] <= gb]
             if not readers and not br_read:
@@ -1505,7 +1572,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             # chains its sample straight into the next forward
             ingest_pairs = []
             for s, i in srd:
-                if live[s.rid] and sig[s.rid] != 0 and i < g:
+                if live[s.rid] and sig[s.rid] != 0 and i < g_of[s.rid]:
                     ingest_pairs.append((s.dft, ("d", s.rid)))
             for s, j in brd:
                 if j < gb:
@@ -1566,6 +1633,15 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
         s.stats.target_calls += 1
         s.feats_last = feats[:, s.tgt.row:s.tgt.row + 1,
                              npend + gchunk - 1, :]
+        pred = self.predictor
+        pobs = s.pdec.obs() if s.pdec is not None else None
+        eps_i = s.pdec.epsilon if s.pdec is not None else self.ecfg.epsilon
+        if pred is not None:
+            # both outcomes come from the verdict packet already on host
+            if gchunk > 0:
+                pred.update(s.rid, bool(all_acc), n_acc / gchunk)
+            if all_acc:
+                pred.update(s.rid, acc_b >= 0)
 
         if not all_acc:
             # mid-chunk rejection: every branch is doomed (Fig. 1a)
@@ -1581,7 +1657,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                               accepted=n_acc,
                               rolled_back=(gchunk - n_acc) + gb,
                               cause="chunk-reject", gamma=gchunk,
-                              k=len(bset.streams), t=now)
+                              k=len(bset.streams), pred=pobs, t=now)
             s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
             return
 
@@ -1598,7 +1674,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                               stage="branch", committed=gchunk + 1,
                               accepted=gchunk, rolled_back=gb,
                               cause="branch-miss", gamma=gchunk,
-                              k=len(bset.streams), t=now)
+                              k=len(bset.streams), pred=pobs, t=now)
             s.mode, s.chunk, s.chunk_q, s.q_b = "draft", [], [], None
             return
 
@@ -1637,7 +1713,7 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
             self._prune_draft(s, s.committed)
         else:
             j = next((jj for jj in range(gb)
-                      if confs[jj] < self.ecfg.epsilon), gb)
+                      if confs[jj] < eps_i), gb)
             if j == gb:
                 s.chunk, s.chunk_q = list(cont), list(q_i)
                 s.q_b = bset.final_sig[i]
@@ -1656,7 +1732,8 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                           accepted=gchunk + 1, pruned=pruned,
                           cause="branch-adopt", gamma=gchunk,
                           k=len(bset.streams),
-                          hrad=sgn if self.ecfg.use_hrad else None, t=now)
+                          hrad=sgn if self.ecfg.use_hrad else None,
+                          pred=pobs, t=now)
 
     def _prune_draft(self, s: _Seq, keep: int) -> None:
         """H-RAD pre-verify pruning: positional reset of the draft stream."""

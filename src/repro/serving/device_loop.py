@@ -210,12 +210,19 @@ def compose_verify_tokens(pend: jax.Array, npend: jax.Array,
                                     "interpret", "mesh"))
 def sps_verify(tlg: jax.Array, q_stack: jax.Array, tok_stack: jax.Array,
                trows: jax.Array, drows: jax.Array, npend: jax.Array,
-               rids: jax.Array, ctrs: jax.Array, base_key, *,
+               rids: jax.Array, ctrs: jax.Array, base_key, glens=None, *,
                g: int, ttemp: float, dtemp: float, kernel: bool = False,
                interpret: bool = True, mesh=None):
     """Fused SpS verification: target-forward logits in, one small packet
     out.  tlg: (n_rows, Tb, V); q_stack: (g, n_draft_rows, V) raw draft
     logits from the ticks; tok_stack: (g, n_draft_rows).
+
+    ``glens`` (S,) i32, optional: per-row REAL draft lengths <= g, for the
+    history predictor's per-request adaptive gamma — row s chain-verifies
+    only its own glens[s] tokens, takes its bonus distribution at position
+    glens[s], and consumes glens[s] + 1 uniforms (so PRNG streams stay
+    batch-composition independent).  ``None`` (every pre-predictor caller)
+    is the uniform-g path, trace-identical to before the parameter existed.
 
     ``kernel=True`` (see ``kernel_route``) sends the accept/residual pass
     through the batched Pallas ``verify_accept`` kernel on
@@ -231,16 +238,23 @@ def sps_verify(tlg: jax.Array, q_stack: jax.Array, tok_stack: jax.Array,
     j = jnp.arange(g + 1, dtype=jnp.int32)[None]
     idx = jnp.clip(npend[:, None] - 1 + j, 0, rowlg.shape[1] - 1)
     pall = jnp.take_along_axis(rowlg, idx[..., None], 1)  # (S, g+1, V)
-    bonus = S.probs_from_logits(pall[:, g], ttemp)
     q_raw = q_stack[:, drows].transpose(1, 0, 2)          # (S, g, V)
     drafted = tok_stack[:, drows].T.astype(jnp.int32)     # (S, g)
     ugrid = S.uniform_grid(base_key, rids, ctrs, g + 1)
-    lens = jnp.full((drafted.shape[0],), g, jnp.int32)
+    if glens is None:
+        lens = jnp.full((drafted.shape[0],), g, jnp.int32)
+        bonus_lg = pall[:, g]
+    else:
+        lens = jnp.clip(glens.astype(jnp.int32), 0, g)
+        bonus_lg = jnp.take_along_axis(
+            pall, lens[:, None, None], 1)[:, 0]
+    bonus = S.probs_from_logits(bonus_lg, ttemp)
     if kernel:
         n_acc, nxt, all_acc = _chain_via_kernel(
             pall[:, :g] / ttemp, q_raw / dtemp, drafted, lens, ugrid,
             interpret)
-        u_fin = ugrid[:, g]
+        u_fin = jnp.take_along_axis(ugrid, lens[:, None], 1)[:, 0] \
+            if glens is not None else ugrid[:, g]
         nxt = jnp.where(all_acc, S.categorical_from_uniform(bonus, u_fin),
                         nxt)
     else:

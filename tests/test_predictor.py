@@ -1,0 +1,346 @@
+"""History-driven speculation controller (runtime/predictor.py): saturating
+counter + pattern-history-table semantics, decision bounds (gamma on the
+bucket ladder, k_cap in [1, k_max], epsilon in (0, 1)), replay determinism
+(hypothesis property — the predictor is pure host math with no RNG),
+engine-level losslessness with the predictor on, predictor-off behavioral
+pin, and regression tests for the three hrad.py E.4 fixes (ISSUE 8)."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hrad as H
+from repro.models import model as M
+from repro.models.config import ModelConfig, dense_pattern
+from repro.obs import TraceRecorder
+from repro.runtime.engines import EngineConfig
+from repro.runtime.predictor import (PredictorConfig, SpeculationPredictor,
+                                     gamma_ladder, make_predictor)
+from repro.runtime.runner import greedy_reference
+from repro.runtime.specbranch import SpecBranchEngine
+from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
+                           ContinuousBatchScheduler, ServeRequest)
+
+# ---------------------------------------------------------------------------
+# unit: ladder / factory
+# ---------------------------------------------------------------------------
+
+
+def test_gamma_ladder():
+    assert gamma_ladder(8) == [1, 2, 4, 8]
+    assert gamma_ladder(16) == [1, 2, 4, 8, 16]
+    assert gamma_ladder(3) == [1, 2, 3]      # non-power max is its own rung
+    assert gamma_ladder(1) == [1]
+
+
+def test_make_predictor_modes():
+    assert make_predictor("off", 8, 4, 0.3) is None
+    assert make_predictor("", 8, 4, 0.3) is None
+    assert make_predictor(None, 8, 4, 0.3) is None
+    assert isinstance(make_predictor("on", 8, 4, 0.3),
+                      SpeculationPredictor)
+    assert make_predictor("oracle", 8, 4, 0.3).cfg.mode == "oracle"
+    with pytest.raises(ValueError):
+        make_predictor("banana", 8, 4, 0.3)
+
+
+# ---------------------------------------------------------------------------
+# unit: counter / PHT semantics
+# ---------------------------------------------------------------------------
+
+def _warm(**kw):
+    kw.setdefault("warmup", 0)              # trust per-request state at once
+    return SpeculationPredictor(8, 4, 0.3, PredictorConfig(**kw))
+
+
+def test_counter_saturates():
+    p = _warm()
+    assert p.snapshot(1)["counter"] == 2     # init weakly-accept
+    for _ in range(5):
+        p.update(1, False)
+    assert p.snapshot(1)["counter"] == 0     # floor, no wraparound
+    for _ in range(5):
+        p.update(1, True)
+    assert p.snapshot(1)["counter"] == 3     # ceiling
+
+
+def test_history_register_and_pht_update_at_old_history():
+    p = _warm(history_bits=4)
+    p.update(1, True)
+    # the PHT entry for the OLD history (0) took the update; the register
+    # then shifted the outcome in
+    assert p._pht[0] == 3
+    assert p._pht[1] == 2
+    assert p.snapshot(1)["history"] == 1
+    p.update(1, False)
+    p.update(1, True)
+    assert p.snapshot(1)["history"] == 0b101
+    # register is H bits wide: old outcomes fall off
+    for _ in range(4):
+        p.update(1, True)
+    assert p.snapshot(1)["history"] == 0b1111
+
+
+def test_pht_shared_across_requests():
+    p = _warm()
+    for _ in range(3):
+        p.update(1, True)                    # rid 1 trains pht[0], [1], [3]
+    fresh = SpeculationPredictor(8, 4, 0.3, PredictorConfig(warmup=0))
+    # rid 2 never ran, but its history (0) indexes the shared trained entry
+    assert p.decide(2).score > fresh.decide(2).score
+
+
+def test_cold_request_uses_global_fallback():
+    p = SpeculationPredictor(8, 4, 0.3, PredictorConfig(warmup=3))
+    d = p.decide(7)
+    assert d.cold and d.score == pytest.approx(2 / 3)
+    for _ in range(3):                       # rid 1 drags the global counter
+        p.update(1, False)
+    d2 = p.decide(2)                         # a different, still-cold rid
+    assert d2.cold and d2.score == 0.0 and d2.gamma == 1
+    for _ in range(3):
+        p.update(2, True)
+    assert not p.decide(2).cold              # warmed up after 3 own rounds
+
+
+def test_oracle_mode_is_exact_ema():
+    p = make_predictor("oracle", 8, 4, 0.3,
+                       PredictorConfig(warmup=0, ema_alpha=0.25))
+    ema = 0.5
+    for frac in (1.0, 0.25, 0.0, 0.75):
+        p.update(1, frac > 0.9, frac)
+        ema += 0.25 * (frac - ema)
+    assert p.decide(1).score == pytest.approx(ema)
+
+
+def test_drop_frees_state_start_is_idempotent():
+    p = _warm()
+    for _ in range(3):
+        p.update(1, True)
+    st1 = p.start(1)
+    assert p.start(1) is st1                 # idempotent: survives preemption
+    p.drop(1)
+    assert p.snapshot(1)["counter"] == 2     # re-created fresh
+    p.drop(99)                               # unknown rid is a no-op
+
+
+def test_decision_knob_directions():
+    p = _warm()
+    for _ in range(6):
+        p.update(1, True)
+        p.update(2, False)
+    hot, cold = p.decide(1), p.decide(2)
+    assert hot.gamma > cold.gamma            # aligned stream drafts longer
+    assert hot.k_cap <= cold.k_cap           # misaligned stream hedges more
+    assert hot.epsilon < cold.epsilon        # aligned stream stops later
+    assert cold.gamma == 1 and cold.k_cap == p.k_max
+
+
+# ---------------------------------------------------------------------------
+# property: bounds + replay determinism
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=1, max_value=40),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=1))
+def test_replay_determinism_and_bounds(seed, nrounds, gmax, kmax, oracle):
+    """No RNG, pure host math: the same accept/reject script replayed on a
+    fresh predictor reproduces the per-round (gamma, k, epsilon) trace
+    bit-for-bit, and every decision respects the knob bounds."""
+    mode = "oracle" if oracle else "on"
+    rng = random.Random(seed)
+    script = [(rng.random() < 0.6, rng.random()) for _ in range(nrounds)]
+
+    def run():
+        p = make_predictor(mode, gmax, kmax, 0.3)
+        out = []
+        for r, (hit, frac) in enumerate(script):
+            rid = r % 3                      # interleave a few requests
+            d = p.decide(rid)
+            out.append((rid, d.gamma, d.k_cap, d.epsilon, d.score, d.cold))
+            p.update(rid, hit, frac)
+        return out
+
+    first, second = run(), run()
+    assert first == second
+    ladder = gamma_ladder(gmax)
+    for _, g, k, eps, score, _cold in first:
+        assert g in ladder
+        assert 1 <= k <= kmax
+        assert 0.0 < eps < 1.0
+        assert 0.0 <= score <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# engines: predictor-on stays lossless; predictor-off pins default behavior
+# ---------------------------------------------------------------------------
+
+N_NEW = 16
+VOCAB = 64
+
+
+def _cfg(name, layers, d, heads):
+    return ModelConfig(name=name, family="dense", num_layers=layers,
+                       d_model=d, num_heads=heads,
+                       num_kv_heads=max(1, heads // 2), d_ff=4 * d,
+                       vocab_size=VOCAB, pattern=dense_pattern(0),
+                       dtype="float32")
+
+
+def _ecfg(**kw):
+    kw.setdefault("gamma", 4)
+    kw.setdefault("c", 4.0)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("epsilon", 0.4)
+    kw.setdefault("signal_temperature", 0.5)
+    kw.setdefault("k_max", 3)
+    kw.setdefault("max_len", 128)
+    return EngineConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    tcfg = _cfg("pred-t", 2, 64, 2)
+    dcfg = _cfg("pred-d", 1, 32, 2)
+    tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+    rng = np.random.default_rng(5)
+    prompts = [list(map(int, rng.integers(0, VOCAB, size=6)))
+               for _ in range(3)]
+    refs = [greedy_reference(tp, tcfg, p, N_NEW, max_len=128)
+            for p in prompts]
+    return dp, dcfg, tp, tcfg, prompts, refs
+
+
+@pytest.mark.parametrize("mode", ["on", "oracle"])
+def test_sequential_predictor_lossless(pair, mode):
+    """Predictor picks gamma/k/epsilon only — greedy output must still equal
+    the AR reference."""
+    dp, dcfg, tp, tcfg, prompts, refs = pair
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg,
+                           _ecfg(spec_predictor=mode))
+    for p, ref in zip(prompts, refs):
+        r = eng.generate(p, N_NEW, jax.random.PRNGKey(2))
+        assert r.tokens == ref
+
+
+def test_sequential_predictor_off_pins_default(pair):
+    """spec_predictor="off" (and the EngineConfig default) must reproduce
+    the predictor-less engine exactly: same tokens, same stats."""
+    dp, dcfg, tp, tcfg, prompts, refs = pair
+    default = SpecBranchEngine(dp, dcfg, tp, tcfg, _ecfg())
+    off = SpecBranchEngine(dp, dcfg, tp, tcfg, _ecfg(spec_predictor="off"))
+    assert default.predictor is None and off.predictor is None
+    for p in prompts:
+        ra = default.generate(p, N_NEW, jax.random.PRNGKey(2))
+        rb = off.generate(p, N_NEW, jax.random.PRNGKey(2))
+        assert ra.tokens == rb.tokens
+        assert ra.stats.__dict__ == rb.stats.__dict__
+
+
+@pytest.mark.parametrize("cls", [BatchedSpSEngine, BatchedSpecBranchEngine])
+def test_batched_predictor_on_lossless(pair, cls):
+    """Per-row adaptive gamma (ragged verify via glens) must stay token-
+    exact vs the AR reference for every request in the batch."""
+    dp, dcfg, tp, tcfg, prompts, refs = pair
+    eng = cls(dp, dcfg, tp, tcfg, _ecfg(spec_predictor="on"),
+              max_batch=len(prompts), page_size=4, debug_check=True)
+    res = ContinuousBatchScheduler(eng).run(
+        [ServeRequest(rid=i, prompt=p, max_new_tokens=N_NEW)
+         for i, p in enumerate(prompts)])
+    for i, ref in enumerate(refs):
+        assert res[i].tokens == ref, i
+    assert eng.pool.pages_in_use == 0
+
+
+def test_spec_events_carry_predictor_decisions(pair):
+    """Every draft/branch spec event on the predictor-on path records the
+    Decision that shaped the round (DESIGN.md §7.11 obs contract)."""
+    dp, dcfg, tp, tcfg, prompts, refs = pair
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, _ecfg(spec_predictor="on"))
+    rec = TraceRecorder()
+    eng.set_recorder(rec)
+    eng.generate(prompts[0], N_NEW, jax.random.PRNGKey(2))
+    spec = [e for e in rec.events if e["kind"] == "spec"]
+    assert spec
+    ladder = gamma_ladder(4)
+    for e in spec:
+        pred = e["pred"]
+        assert pred is not None
+        assert pred["gamma"] in ladder
+        assert 1 <= pred["k_cap"] <= 3
+        assert 0.0 < pred["epsilon"] < 1.0
+    assert rec.registry.counter("pred_decisions_total").value == len(spec)
+
+
+# ---------------------------------------------------------------------------
+# hrad.py regression pins (ISSUE 8 satellites)
+# ---------------------------------------------------------------------------
+
+def test_build_feature_pads_with_deepest_layer():
+    """When fewer than K feature points exist, the front padding must
+    repeat the DEEPEST available layer (sel[-1:]), not the shallowest."""
+    d = 4
+    feats = jnp.stack([jnp.full((1, d), 1.0),     # shallow
+                       jnp.full((1, d), 2.0)])    # deep
+    emb = jnp.zeros((1, d))
+    z = np.asarray(H.build_feature(feats, emb, k_layers=4))
+    blocks = z[0, :4 * d].reshape(4, d)[:, 0]
+    assert blocks.tolist() == [2.0, 2.0, 1.0, 2.0]
+
+
+def test_clip_by_global_norm():
+    big = {"w": jnp.full((3,), 100.0), "b": jnp.full((2,), -100.0)}
+    clipped = H.clip_by_global_norm(big)
+    norm = float(jnp.sqrt(sum(jnp.sum(x * x)
+                              for x in jax.tree.leaves(clipped))))
+    assert norm == pytest.approx(1.0, rel=1e-5)
+    # direction preserved
+    assert float(clipped["w"][0]) > 0 > float(clipped["b"][0])
+    small = {"w": jnp.array([0.1, -0.2])}
+    out = H.clip_by_global_norm(small)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(small["w"]))
+
+
+def _blobs(seed=1, d=16, n_per=(200, 80, 40)):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(3, d)) * 3
+    xs, ys = [], []
+    for c, n in enumerate(n_per):
+        xs.append(centers[c] + rng.normal(size=(n, d)) * 0.5)
+        ys.append(np.full(n, c))
+    return (np.concatenate(xs).astype(np.float32),
+            np.concatenate(ys).astype(np.int32))
+
+
+def test_train_acc_measured_on_real_rows(monkeypatch):
+    """train_acc must be computed on the real pre-SMOTE training rows.  A
+    poisoned _smote that flips every label makes the model learn the
+    flipped mapping — accuracy against the REAL labels must then be low;
+    the old post-SMOTE metric would have reported it as high."""
+    def flip_smote(x, y, seed=0, k_neighbors=5):
+        return x, (y + 1) % 3
+    monkeypatch.setattr(H, "_smote", flip_smote)
+    x, y = _blobs()
+    cfg = H.HRADConfig(k_layers=1, d_model=8, lr=3e-3, epochs=8, seed=0)
+    _, metrics = H.train_mlp(x, y, cfg)
+    assert metrics["train_acc"] < 0.5, metrics
+
+
+def test_train_mlp_stable_on_large_scale_inputs():
+    """Raw-gradient clipping before the Adam moments keeps huge-scale
+    features from blowing up the optimizer state."""
+    x, y = _blobs(seed=2)
+    cfg = H.HRADConfig(k_layers=1, d_model=8, lr=3e-3, epochs=4, seed=0)
+    params, metrics = H.train_mlp(x * 1e4, y, cfg)
+    assert all(bool(jnp.isfinite(v).all()) for v in params.values())
+    assert np.isfinite(metrics["train_acc"])
+    assert 0.0 <= metrics["train_acc"] <= 1.0
