@@ -25,6 +25,14 @@ and exits non-zero when the loop regresses to >2x the committed post-PR
 bytes or loses the >=10x reduction over the recorded pre-PR host loop —
 the CI bench-smoke gate.
 
+``--draft-mode sequential|parallel`` threads the drafting discipline
+(DESIGN.md §7.12) through the sweep cells; ``--draft-mode-sweep
+OUT.json`` additionally runs the first batch-size cell under both modes
+and reports device dispatches/round, acceptance rate and draft-phase
+wall per mode, and ``--draft-mode-gate`` turns that into the CI smoke
+gate (parallel must collapse to <=2 dispatches/round and cut draft wall
+at <= --draft-mode-margin acceptance loss).
+
 ``--spec-predictor on|off|oracle`` threads the acceptance-history
 speculation controller (runtime/predictor.py, DESIGN.md §7.11) through
 the sweep cells; ``--predictor-sweep OUT.json`` additionally runs the
@@ -76,8 +84,9 @@ def tiny_pair(vocab: int = 64):
 
 
 def run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
-                   cost) -> dict:
-    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg)
+                   cost, draft_heads=None) -> dict:
+    eng = SpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
+                           draft_heads=draft_heads)
     timelines, total_tokens = [], 0
     key = jax.random.PRNGKey(0)
     for p in prompts:
@@ -92,10 +101,11 @@ def run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
 
 def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
                 max_batch, attn_backend="paged", rec=NULL_RECORDER,
-                mesh=None) -> dict:
+                mesh=None, draft_heads=None) -> dict:
     eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
                                   max_batch=max_batch, page_size=16,
-                                  attn_backend=attn_backend, mesh=mesh)
+                                  attn_backend=attn_backend, mesh=mesh,
+                                  draft_heads=draft_heads)
     eng.set_recorder(rec)
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=n_new,
@@ -111,11 +121,12 @@ def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
              "per_step_transfer_bytes", "step_wall_p50",
              "step_wall_p95")} | {
         "reclaimed_speculative_pages":
-            rep["pool"]["reclaimed_speculative_pages"]}
+            rep["pool"]["reclaimed_speculative_pages"],
+        "dispatches_per_round": rep.get("dispatches_per_round")}
 
 
 def overhead_gate(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, max_batch,
-                  attn_backend) -> TraceRecorder:
+                  attn_backend, draft_heads=None) -> TraceRecorder:
     """Tracing-overhead gate (ISSUE 6 satellite 5): after a jit warm-up
     run, interleave untraced (NullRecorder) and traced runs and compare
     best-of-2 wall clocks — fail (exit 1) if tracing costs >10%.  The
@@ -126,7 +137,8 @@ def overhead_gate(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, max_batch,
     def one(rec):
         t0 = time.time()
         rep = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, 0.0,
-                          max_batch, attn_backend=attn_backend, rec=rec)
+                          max_batch, attn_backend=attn_backend, rec=rec,
+                          draft_heads=draft_heads)
         return time.time() - t0, rep["tokens_per_cost"]
 
     one(NULL_RECORDER)                      # jit warm-up, discarded
@@ -227,6 +239,117 @@ def predictor_sweep(dp, dcfg, tp, tcfg, args, prompts, out_path: str,
               f"{report['throughput_ratio_on_vs_off']:.3f}x throughput")
 
 
+def _draft_heads_for_sweep(args, dp, dcfg, K: int):
+    """Multi-position draft heads for parallel-mode bench cells: the
+    trained heads that ride the cached pair for --pair trained, random
+    init (engine mechanics, not model quality) otherwise."""
+    if args.pair == "trained":
+        from repro.training.pairs import draft_heads_for
+        return draft_heads_for("misaligned", K=max(K, 4))
+    return M.init_draft_heads(jax.random.PRNGKey(7), dcfg, K)
+
+
+def draft_mode_sweep(dp, dcfg, tp, tcfg, args, prompts, out_path: str,
+                     gate: bool = False, margin: float = 0.1) -> None:
+    """Draft-mode sweep (DESIGN.md §7.12): the same request set through
+    the batched SpecBranch engine with ``draft_mode`` sequential (one
+    device dispatch per drafted token) vs parallel (the whole chunk from
+    one masked forward).  Per mode: modeled tokens-per-cost, device
+    dispatches per round, acceptance rate (accepted/drafted from the
+    trace registry) and draft-phase wall seconds (sum of lane=="draft"
+    trace spans, measured on a jit-warmed second run).  With ``gate``:
+    exit 1 unless parallel reaches <=2 dispatches/round, cuts the
+    draft-phase wall, and keeps the acceptance rate within ``margin``
+    of sequential — the CI bench-smoke gate for the 1+gamma -> 2
+    dispatch collapse."""
+    mb = args.batch_sizes[0]
+    modes = {}
+    for mode in ("sequential", "parallel"):
+        ecfg = EngineConfig(gamma=args.gamma, c=args.c, temperature=0.0,
+                            epsilon=0.4, signal_temperature=0.5,
+                            draft_mode=mode, max_len=512)
+        heads = None
+        if mode == "parallel":
+            heads = _draft_heads_for_sweep(
+                args, dp, dcfg, max(ecfg.gamma, ecfg.gamma_branch))
+        # warm-up run: jit compile time would otherwise land inside the
+        # first round's draft span and poison the wall comparison
+        run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, args.new_tokens,
+                    0.0, mb, attn_backend=args.attn_backend,
+                    draft_heads=heads)
+        rec = TraceRecorder()
+        t0 = time.time()
+        rep = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
+                          args.new_tokens, 0.0, mb, rec=rec,
+                          attn_backend=args.attn_backend,
+                          draft_heads=heads)
+        reg = rec.registry
+        drafted = reg.counter("tokens_drafted_total").value
+        accepted = reg.counter("tokens_accepted_total").value
+        rb = reg.counter("rollback_tokens_total").value
+        draft_wall = sum(e["wall1"] - e["wall0"] for e in rec.events
+                         if e["kind"] == "span" and e["lane"] == "draft")
+        modes[mode] = {
+            "tokens_per_cost": rep["tokens_per_cost"],
+            "total_tokens": rep["total_tokens"],
+            "dispatches_per_round": rep["dispatches_per_round"],
+            "drafted_tokens_total": drafted,
+            "accepted_tokens_total": accepted,
+            "rollback_tokens_total": rb,
+            "acceptance_rate": accepted / max(drafted, 1),
+            "draft_wall_s": draft_wall,
+            "rounds": rep["rounds"],
+            "wall_s": time.time() - t0,
+        }
+        print(f"draft_mode={mode:10s}: {rep['tokens_per_cost']:.3f} "
+              f"tok/cost  dispatches/round "
+              f"{modes[mode]['dispatches_per_round']:.2f}  accept "
+              f"{modes[mode]['acceptance_rate']:.3f}  draft wall "
+              f"{draft_wall * 1e3:.1f}ms")
+    seq, par = modes["sequential"], modes["parallel"]
+    report = {
+        "engine": "specbranch", "mode": "batched", "max_batch": mb,
+        "pair": "trained-misaligned" if args.pair == "trained" else args.pair,
+        "attn_backend": args.attn_backend,
+        "requests": args.requests, "new_tokens": args.new_tokens,
+        "gamma": args.gamma, "c": args.c, "gate_margin": margin,
+        "modes": modes,
+        "dispatch_reduction": (seq["dispatches_per_round"]
+                               - par["dispatches_per_round"]),
+        "draft_wall_ratio_par_vs_seq":
+            par["draft_wall_s"] / max(seq["draft_wall_s"], 1e-9),
+        "acceptance_drop": seq["acceptance_rate"] - par["acceptance_rate"],
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, default=float)
+    print(f"wrote {out_path}")
+    if gate:
+        ok = True
+        if par["dispatches_per_round"] > 2.0 + 1e-9:
+            print(f"  FAIL: parallel dispatches/round "
+                  f"{par['dispatches_per_round']:.2f} > 2 (the round "
+                  f"did not collapse to draft + verify)")
+            ok = False
+        if par["draft_wall_s"] >= seq["draft_wall_s"]:
+            print(f"  FAIL: parallel draft wall {par['draft_wall_s']:.3f}s"
+                  f" did not cut sequential {seq['draft_wall_s']:.3f}s")
+            ok = False
+        if report["acceptance_drop"] > margin:
+            print(f"  FAIL: acceptance rate dropped "
+                  f"{report['acceptance_drop']:.3f} > margin {margin:.3f} "
+                  f"({seq['acceptance_rate']:.3f} -> "
+                  f"{par['acceptance_rate']:.3f})")
+            ok = False
+        if not ok:
+            sys.exit(1)
+        print("draft-mode gate passed: dispatches/round "
+              f"{seq['dispatches_per_round']:.2f} -> "
+              f"{par['dispatches_per_round']:.2f}, draft wall x"
+              f"{report['draft_wall_ratio_par_vs_seq']:.2f}, acceptance "
+              f"{seq['acceptance_rate']:.3f} -> "
+              f"{par['acceptance_rate']:.3f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", default="random", choices=["random", "trained"])
@@ -254,6 +377,28 @@ def main() -> None:
                     help="with --predictor-sweep: exit 1 unless "
                     "predictor-on holds throughput within 5%% of off AND "
                     "reduces rollback tokens/request (CI smoke gate)")
+    ap.add_argument("--draft-mode", default="sequential",
+                    choices=["sequential", "parallel"],
+                    help="drafting discipline for the main sweep cells "
+                    "(DESIGN.md §7.12): sequential is one device dispatch "
+                    "per drafted token; parallel emits the whole chunk "
+                    "from one masked multi-position forward (2 dispatches "
+                    "per round).  Parallel trains/loads multi-position "
+                    "draft heads for --pair trained, random-init heads "
+                    "otherwise")
+    ap.add_argument("--draft-mode-sweep", default=None, metavar="JSON",
+                    help="also run the first batch-size cell with "
+                    "draft_mode sequential vs parallel, reporting "
+                    "dispatches/round, acceptance rate and draft-phase "
+                    "wall per mode to JSON")
+    ap.add_argument("--draft-mode-gate", action="store_true",
+                    help="with --draft-mode-sweep: exit 1 unless parallel "
+                    "reaches <=2 dispatches/round, cuts draft-phase wall, "
+                    "and keeps acceptance within --draft-mode-margin of "
+                    "sequential (CI smoke gate)")
+    ap.add_argument("--draft-mode-margin", type=float, default=0.1,
+                    help="max tolerated acceptance-rate drop for the "
+                    "draft-mode gate (default 0.1)")
     ap.add_argument("--attn-backend", default="paged",
                     choices=["dense", "paged"],
                     help="batched-cell KV storage (default: paged, the "
@@ -309,7 +454,15 @@ def main() -> None:
             mesh = MESH.make_serving_mesh(mdp, mtp)
     ecfg = EngineConfig(gamma=args.gamma, c=args.c, temperature=0.0,
                         epsilon=0.4, signal_temperature=0.5,
-                        spec_predictor=args.spec_predictor, max_len=512)
+                        spec_predictor=args.spec_predictor,
+                        draft_mode=args.draft_mode, max_len=512)
+    draft_heads = None
+    if args.draft_mode == "parallel":
+        if args.hybrid:
+            ap.error("--draft-mode parallel needs an attention-only "
+                     "draft; drop --hybrid")
+        draft_heads = _draft_heads_for_sweep(
+            args, dp, dcfg, max(ecfg.gamma, ecfg.gamma_branch))
     cost = CostModel(c=args.c)
     zm = ZipfMarkov(vocab=vocab, seed=7)
     prompts = [list(map(int, p))
@@ -319,13 +472,15 @@ def main() -> None:
     for interval in args.arrival_intervals:
         t0 = time.time()
         seq = run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts,
-                             args.new_tokens, interval, cost)
+                             args.new_tokens, interval, cost,
+                             draft_heads=draft_heads)
         seq["wall_s"] = time.time() - t0
         for mb in args.batch_sizes:
             t0 = time.time()
             bat = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
                               args.new_tokens, interval, mb,
-                              attn_backend=args.attn_backend, mesh=mesh)
+                              attn_backend=args.attn_backend, mesh=mesh,
+                              draft_heads=draft_heads)
             bat["wall_s"] = time.time() - t0
             cell = {
                 "max_batch": mb,
@@ -349,6 +504,7 @@ def main() -> None:
         "hybrid": bool(args.hybrid),
         "attn_backend": args.attn_backend,
         "mesh": args.mesh or "1,1",
+        "draft_mode": args.draft_mode,
         "target_pattern": [list(s) for s in tcfg.pattern],
         "requests": args.requests,
         "new_tokens": args.new_tokens,
@@ -364,12 +520,14 @@ def main() -> None:
         mb0 = args.batch_sizes[0]
         if args.overhead_gate:
             rec = overhead_gate(dp, dcfg, tp, tcfg, ecfg, prompts,
-                                args.new_tokens, mb0, args.attn_backend)
+                                args.new_tokens, mb0, args.attn_backend,
+                                draft_heads=draft_heads)
         else:
             rec = TraceRecorder()
             run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
                         args.new_tokens, 0.0, mb0,
-                        attn_backend=args.attn_backend, rec=rec)
+                        attn_backend=args.attn_backend, rec=rec,
+                        draft_heads=draft_heads)
         if args.trace:
             write_trace(rec, args.trace)
             print(f"trace written to {args.trace} ({len(rec.events)} "
@@ -381,6 +539,14 @@ def main() -> None:
     if args.predictor_sweep:
         predictor_sweep(dp, dcfg, tp, tcfg, args, prompts,
                         args.predictor_sweep, gate=args.predictor_gate)
+
+    if args.draft_mode_sweep:
+        if args.hybrid:
+            ap.error("--draft-mode-sweep needs an attention-only draft; "
+                     "drop --hybrid")
+        draft_mode_sweep(dp, dcfg, tp, tcfg, args, prompts,
+                         args.draft_mode_sweep, gate=args.draft_mode_gate,
+                         margin=args.draft_mode_margin)
 
     if args.check_baseline:
         if not os.path.exists(args.check_baseline):

@@ -22,6 +22,19 @@ The default ``off`` keeps today's static knobs bit-for-bit:
 
   PYTHONPATH=src python -m repro.launch.serve --mode batched \
       --spec-predictor on --trace trace.json
+
+Add ``--draft-mode parallel`` (DESIGN.md §7.12) to draft each round's
+whole chunk in ONE masked multi-position forward instead of gamma
+sequential ticks — the round collapses to two device dispatches (draft +
+verify; watch ``dispatches_per_round`` in the report and the round
+``dispatches`` fields in the trace).  The K draft heads are trained on a
+frozen base and cached next to the pair; verification is unchanged, so
+the stream stays lossless — only the draft distribution (and with it the
+acceptance rate) differs from the sequential oracle.  The default
+``sequential`` is bit-for-bit today's path:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode batched \
+      --draft-mode parallel --metrics-out metrics.json
 """
 import os
 import sys

@@ -74,18 +74,38 @@ def load_pair(kind: str):
 
 
 def build_engine(name: str, ecfg: EngineConfig, pair_kind: str = "misaligned",
-                 hrad_params=None):
+                 hrad_params=None, draft_heads=None):
     dp, dcfg, tp, tcfg = load_pair(pair_kind)
     cls = ENGINES[name]
     if name in ("autoregressive", "lookahead"):
         return cls(tp, tcfg, ecfg)
     if name == "specbranch":
-        return cls(dp, dcfg, tp, tcfg, ecfg, hrad_params=hrad_params)
-    return cls(dp, dcfg, tp, tcfg, ecfg)
+        return cls(dp, dcfg, tp, tcfg, ecfg, hrad_params=hrad_params,
+                   draft_heads=draft_heads)
+    return cls(dp, dcfg, tp, tcfg, ecfg, draft_heads=draft_heads)
+
+
+def load_draft_heads(args, ecfg: EngineConfig):
+    """Multi-position draft heads for --draft-mode parallel (DESIGN.md
+    §7.12): trained-and-cached alongside the pair.  None in sequential
+    mode (the heads are inert there)."""
+    if args.draft_mode != "parallel":
+        return None
+    if args.pair in HYBRID_KINDS:
+        raise SystemExit("--draft-mode parallel needs an attention-only "
+                         f"draft model; --pair {args.pair} has mamba "
+                         "layers")
+    if args.engine not in ("sps", "specbranch"):
+        raise SystemExit("--draft-mode parallel requires a drafting "
+                         f"engine (sps/specbranch), not {args.engine}")
+    from repro.training.pairs import draft_heads_for
+    return draft_heads_for(args.pair,
+                           K=max(ecfg.gamma, ecfg.gamma_branch, 4))
 
 
 def run_sequential(args, ecfg, prompts, rec=NULL_RECORDER) -> dict:
-    engine = build_engine(args.engine, ecfg, args.pair)
+    engine = build_engine(args.engine, ecfg, args.pair,
+                          draft_heads=load_draft_heads(args, ecfg))
     engine.set_recorder(rec)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens)
             for i, p in enumerate(prompts)]
@@ -135,7 +155,8 @@ def run_batched(args, ecfg, prompts, rec=NULL_RECORDER) -> dict:
         pool_pages=args.pool_pages,
         swap_pages=args.swap_pages,
         attn_backend=args.attn_backend,
-        mesh=mesh)
+        mesh=mesh,
+        draft_heads=load_draft_heads(args, ecfg))
     eng.set_recorder(rec)        # before the scheduler grabs engine.rec
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=args.new_tokens,
@@ -200,6 +221,18 @@ def main() -> None:
                     "oracle: exact per-request acceptance EMA (upper "
                     "bound).  Lossless either way — the predictor never "
                     "touches accept/reject decisions")
+    ap.add_argument("--draft-mode", default="sequential",
+                    choices=["sequential", "parallel"],
+                    help="drafting discipline (DESIGN.md §7.12).  "
+                    "sequential (default): one draft forward per drafted "
+                    "token, bit-for-bit today's path.  parallel: the "
+                    "whole chunk from ONE masked multi-position forward "
+                    "(K trained draft heads, cached next to the pair) — "
+                    "a round collapses to two device dispatches (draft + "
+                    "verify).  Same verdict packets, same per-row PRNG, "
+                    "lossless verification; only the draft distribution "
+                    "differs.  Needs an attention-only draft pair and a "
+                    "drafting engine (sps/specbranch)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pool-pages", type=int, default=None,
@@ -270,7 +303,8 @@ def main() -> None:
         max_len = max(512, 1 << (need - 1).bit_length())
     ecfg = EngineConfig(gamma=args.gamma, c=args.c,
                         temperature=args.temperature,
-                        spec_predictor=args.spec_predictor, max_len=max_len)
+                        spec_predictor=args.spec_predictor,
+                        draft_mode=args.draft_mode, max_len=max_len)
     tracing = bool(args.trace or args.metrics_out or args.profile_dir)
     rec = TraceRecorder() if tracing else NULL_RECORDER
     if args.profile_dir:

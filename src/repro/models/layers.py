@@ -76,7 +76,8 @@ def silu(x: jax.Array) -> jax.Array:
 def attend(q: jax.Array, k: jax.Array, v: jax.Array,
            q_pos: jax.Array, k_pos: jax.Array, *,
            causal: bool = True, window: int = 0,
-           cap: Optional[float] = None, kv_chunk: int = 2048) -> jax.Array:
+           cap: Optional[float] = None, kv_chunk: int = 2048,
+           q_ctx: Optional[jax.Array] = None) -> jax.Array:
     """Online-softmax attention.
 
     q:      (B, T, H, hd)
@@ -84,11 +85,19 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array,
     q_pos:  (B, T) absolute positions of queries
     k_pos:  (B, S) absolute positions of keys; -1 marks invalid slots
     window: if > 0, keys with q_pos - k_pos >= window are masked (local attn)
+    q_ctx:  (B, T) optional per-query causal horizon: keys with
+            k_pos > q_ctx are masked instead of k_pos > q_pos.  Parallel
+            draft positions (DESIGN.md §7.12) sit at future positions
+            (RoPE and window anchored there) but may only see the real
+            prefix — the same visibility the paged backend gets for free
+            from its ``lens`` bound.  None (default) == q_pos, bitwise.
     Returns (B, T, H, hd).
     """
     B, T, H, hd = q.shape
     S, KV = k.shape[1], k.shape[2]
     G = H // KV
+    if q_ctx is None:
+        q_ctx = q_pos
     scale = 1.0 / math.sqrt(hd)
     qf = (q.astype(jnp.float32) * scale).reshape(B, T, KV, G, hd)
     if ATTN_Q_SPEC is not None:
@@ -112,7 +121,7 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array,
         logits = softcap(logits, cap)
         mask = pb[:, None, None, None, :] >= 0
         if causal:
-            mask &= pb[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+            mask &= pb[:, None, None, None, :] <= q_ctx[:, None, None, :, None]
         if window > 0:
             mask &= (q_pos[:, None, None, :, None] - pb[:, None, None, None, :]
                      ) < window
@@ -170,7 +179,8 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
               kv_chunk: int = 2048,
               cache_mode: str = "append",
               paged: Optional[Tuple[jax.Array, jax.Array]] = None,
-              paged_backend: Optional[str] = None
+              paged_backend: Optional[str] = None,
+              pdraft: Optional[Params] = None
               ) -> Tuple[jax.Array, Optional[Params]]:
     """One attention block (pre-norm, residual outside).
 
@@ -197,6 +207,16 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     physical page) so they can never clobber a live or COW-shared slot.
     Attention runs in-place over the pages via the Pallas paged kernel —
     no gather, no dense copy (causal only: decode never runs bidirectional).
+
+    Parallel draft positions (DESIGN.md §7.12): ``pdraft`` =
+    ``{"cols": (B, T) bool, "ctx": (B, T) int32}`` marks chunk columns that
+    are draft slots rather than real tokens.  Slot columns keep their true
+    positions for RoPE and window anchoring, but (a) their KEYS are stored
+    with position -1 so no query — including other slots — can ever see
+    them (the paged backend gets the same for free: slot positions sit at
+    >= lens and route to the trash page), and (b) their QUERIES are clamped
+    to the ``ctx`` causal horizon (the last real position), so every slot's
+    hidden state is a function of the committed prefix only.
     """
     B, T, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
@@ -210,6 +230,13 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
     sin, cos = rope_sin_cos(positions, hd, cfg.rope_theta)
     q = apply_rope(q, sin, cos)
     k = apply_rope(k, sin, cos)
+
+    # parallel draft slots: keys stored at position -1 (invisible to every
+    # query), queries clamped to the last real position (docstring)
+    store_pos, q_ctx = positions, None
+    if pdraft is not None:
+        store_pos = jnp.where(pdraft["cols"], -1, positions)
+        q_ctx = pdraft["ctx"]
 
     if cache is not None and "k_pages" in cache:
         from repro.kernels import ops as _ops
@@ -239,17 +266,20 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
         # ring buffer: when the incoming chunk exceeds the ring, only its
         # tail survives — slice BEFORE the scatter so no slot is written
         # twice (duplicate scatter indices have unspecified write order)
-        kw, vw, pw = k, v, positions
+        kw, vw, pw, pv = k, v, positions, store_pos
         if T > Sc:
-            kw, vw, pw = k[:, -Sc:], v[:, -Sc:], positions[:, -Sc:]
+            kw, vw, pw, pv = (k[:, -Sc:], v[:, -Sc:], positions[:, -Sc:],
+                              store_pos[:, -Sc:])
+        # slot index from the TRUE position (a draft slot parks where the
+        # real token will later land); the stored pos value may be -1
         slots = pw % Sc                                           # (B, Tw)
         bidx = jnp.arange(B)[:, None]
         ck = cache["k"].at[bidx, slots].set(kw)
         cv = cache["v"].at[bidx, slots].set(vw)
-        cp = cache["pos"].at[bidx, slots].set(pw)
+        cp = cache["pos"].at[bidx, slots].set(pv)
         new_cache = {"k": ck, "v": cv, "pos": cp}
         if cache_mode == "fresh":
-            k_all, v_all, kpos = k, v, positions
+            k_all, v_all, kpos = k, v, store_pos
         elif window > 0:
             # pre-write cache ∪ chunk (see docstring).  Stale cache entries
             # at/after the chunk start (possible after a speculative
@@ -258,15 +288,15 @@ def attention(p: Params, x: jax.Array, cfg: ModelConfig, *,
                                 cache["pos"])
             k_all = jnp.concatenate([cache["k"], k], axis=1)
             v_all = jnp.concatenate([cache["v"], v], axis=1)
-            kpos = jnp.concatenate([old_pos, positions], axis=1)
+            kpos = jnp.concatenate([old_pos, store_pos], axis=1)
         else:
             k_all, v_all, kpos = ck, cv, cp
     else:
-        k_all, v_all, kpos = k, v, positions
+        k_all, v_all, kpos = k, v, store_pos
 
     out = attend(q, k_all, v_all, positions, kpos,
                  causal=cfg.causal, window=window, cap=cfg.attn_softcap,
-                 kv_chunk=kv_chunk)
+                 kv_chunk=kv_chunk, q_ctx=q_ctx)
     return out.reshape(B, T, H * hd) @ p["wo"], new_cache
 
 

@@ -185,7 +185,7 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int) -> int:
 def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
                 positions: jax.Array, cache: Optional[Params],
                 kv_chunk: int, moe_specs=None, cache_mode: str = "append",
-                paged=None, paged_backend=None
+                paged=None, paged_backend=None, pdraft=None
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     mixer, ffn_kind = slot
     aux_loss = jnp.zeros((), jnp.float32)
@@ -194,8 +194,13 @@ def _apply_slot(p: Params, x: jax.Array, cfg: ModelConfig, slot, *,
             p["mixer"], x, cfg, positions=positions, cache=cache,
             window=_slot_window(cfg, mixer), kv_chunk=kv_chunk,
             cache_mode=cache_mode, paged=paged,
-            paged_backend=paged_backend)
+            paged_backend=paged_backend, pdraft=pdraft)
     else:
+        if pdraft is not None:
+            raise ValueError(
+                "parallel draft positions need attention-only models: a "
+                "mamba slot's scan would thread recurrent state through "
+                "the draft slots (DESIGN.md §7.12)")
         mx, new_cache = L.mamba(p["mixer"], x, cfg, cache=cache,
                                 positions=positions)
     x = x + mx
@@ -221,7 +226,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
             cache_mode: str = "append",
             onehot_embed: bool = False,
             paged=None,
-            paged_backend: Optional[str] = None
+            paged_backend: Optional[str] = None,
+            pdraft: Optional[Params] = None
             ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
     """Run the model.
 
@@ -241,6 +247,15 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
     (n_points, B, T, d_model) (every position — used by H-RAD's posterior
     drafting on short verification chunks, Sec. 5.2).
 
+    pdraft (DESIGN.md §7.12) marks parallel-draft slot columns:
+    ``{"cols": (B, T) bool, "ctx": (B, T) int32, "sidx": (B, T) int32,
+    "embed": (K, d_model)}``.  Slot columns replace their token embedding
+    with the learned slot embedding ``embed[sidx]``, their keys are stored
+    invisible, and their queries are clamped to the ``ctx`` horizon
+    (layers.attention); head logits over the slot hidden states come from
+    ``draft_head_logits`` on aux["features"][-1].  Attention-only models
+    (a mamba slot raises).
+
     Returns (logits (B, T_total, vocab), new_cache, aux).
     """
     parts = []
@@ -255,6 +270,12 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
             emb = oh @ params["embed"] * math.sqrt(cfg.d_model)
         else:
             emb = params["embed"][tokens] * math.sqrt(cfg.d_model)
+        if pdraft is not None:
+            K = pdraft["embed"].shape[0]
+            se = (pdraft["embed"][jnp.clip(pdraft["sidx"], 0, K - 1)]
+                  * math.sqrt(cfg.d_model))
+            emb = jnp.where(pdraft["cols"][..., None],
+                            se.astype(emb.dtype), emb)
         parts.append(emb.astype(cfg.jdtype))
     x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
     if act_spec is not None:
@@ -262,6 +283,11 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
     B, T, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    # attention only needs the column mask + causal horizon
+    pd_attn = None
+    if pdraft is not None:
+        pd_attn = {"cols": jnp.broadcast_to(pdraft["cols"], (B, T)),
+                   "ctx": jnp.broadcast_to(pdraft["ctx"], (B, T))}
 
     P, nper = cfg.period, cfg.n_periods
     blocks_cache = cache["blocks"] if cache is not None else [None] * P
@@ -276,7 +302,7 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
                 positions=positions, cache=slot_caches[s],
                 kv_chunk=kv_chunk, moe_specs=moe_specs,
                 cache_mode=cache_mode, paged=paged,
-                paged_backend=paged_backend)
+                paged_backend=paged_backend, pdraft=pd_attn)
             new_caches.append(nc)
             aux = aux + al
         feat = x[:, -1, :] if feature_mode == "last" else x
@@ -307,7 +333,8 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
             return _apply_slot(p_, x_, cfg, _slot, positions=pos_,
                                cache=_rc, kv_chunk=kv_chunk,
                                moe_specs=moe_specs, cache_mode=cache_mode,
-                               paged=paged, paged_backend=paged_backend)
+                               paged=paged, paged_backend=paged_backend,
+                               pdraft=pd_attn)
 
         if remat:
             apply_r = jax.checkpoint(
@@ -339,6 +366,46 @@ def forward(params: Params, cfg: ModelConfig, tokens: Optional[jax.Array], *,
            jnp.zeros(empty, cfg.jdtype),
            "moe_aux": moe_aux}
     return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# multi-token draft head (single-pass parallel drafting, DESIGN.md §7.12)
+# ---------------------------------------------------------------------------
+
+def init_draft_heads(key, cfg: ModelConfig, K: int) -> Params:
+    """K parallel-position draft heads + K learned slot embeddings.
+
+    Slot j (1-indexed) rides at position ``last_real + j`` of a draft
+    forward with its token embedding replaced by ``mask_embed[j-1]``; head
+    j maps the slot's final-layer hidden state to the distribution of the
+    token at ``last_real + j + 1`` given the committed prefix only.
+    """
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jdtype
+    s = 1.0 / math.sqrt(cfg.d_model)
+    return {
+        "mask_embed": (jax.random.normal(k1, (K, cfg.d_model)) * s
+                       ).astype(dt),
+        "heads": (jax.random.normal(k2, (K, cfg.d_model, cfg.vocab_size))
+                  * s).astype(dt),
+    }
+
+
+def draft_head_logits(params: Params, cfg: ModelConfig, dhead: Params,
+                      hidden: jax.Array, j0: int = 0) -> jax.Array:
+    """Head logits over slot hidden states.
+
+    hidden: (..., n, d_model) final-layer (pre-final-norm) hidden states at
+    slot positions j0+1 .. j0+n (aux["features"][-1] columns).  Applies the
+    model's own final norm + softcap so head logits live on the same scale
+    as the AR logits they are concatenated with.  Returns (..., n, vocab)
+    float32.
+    """
+    n = hidden.shape[-2]
+    hn = L.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    lg = jnp.einsum("...nd,ndv->...nv", hn.astype(jnp.float32),
+                    dhead["heads"][j0:j0 + n].astype(jnp.float32))
+    return L.softcap(lg, cfg.final_softcap)
 
 
 def prefill(params, cfg, tokens, *, cache, embeds=None, kv_chunk: int = 2048):

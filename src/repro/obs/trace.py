@@ -150,6 +150,7 @@ class TraceRecorder(NullRecorder):
              bonus: bool = False, eps_stop: bool = False,
              hrad: Optional[int] = None,
              pred: Optional[Dict[str, Any]] = None,
+             dispatches: Optional[int] = None,
              t: Optional[float] = None) -> None:
         """One request's speculation outcome in one engine round.
 
@@ -167,7 +168,7 @@ class TraceRecorder(NullRecorder):
                    committed=committed, accepted=accepted, drafted=drafted,
                    rolled_back=rolled_back, pruned=pruned, cause=cause,
                    gamma=gamma, k=k, bonus=bonus, eps_stop=eps_stop,
-                   hrad=hrad, pred=pred, t=t)
+                   hrad=hrad, pred=pred, dispatches=dispatches, t=t)
         reg = self.registry
         reg.counter("tokens_committed_total").inc(committed)
         reg.counter("tokens_accepted_total").inc(accepted)
@@ -198,13 +199,21 @@ class TraceRecorder(NullRecorder):
 
     def round(self, *, engine: str, index: int, mode: str, draft_steps: int,
               target_calls: int, batch: int, wall0: float, wall1: float,
+              dispatches: Optional[int] = None,
               t0: Optional[float] = None,
               t1: Optional[float] = None) -> None:
         self.event("round", engine=engine, index=index, mode=mode,
                    draft_steps=draft_steps, target_calls=target_calls,
-                   batch=batch, wall0=wall0, wall1=wall1, t0=t0, t1=t1)
+                   batch=batch, dispatches=dispatches,
+                   wall0=wall0, wall1=wall1, t0=t0, t1=t1)
         self.registry.counter("rounds_total").inc()
         self.registry.histogram("round_wall_s").observe(wall1 - wall0)
+        if dispatches is not None:
+            # per-round device-dispatch count (DESIGN.md §7.12): the
+            # single-pass parallel drafting claim — 1 + gamma collapsing
+            # to 2 — measured where it happens, gateable from the registry
+            self.registry.counter("dispatches_total").inc(dispatches)
+            self.registry.histogram("round_dispatches").observe(dispatches)
 
     def span(self, lane: str, wall0: float, wall1: float, **fields) -> None:
         """Wall-clock phase span on an engine lane (draft / verify /

@@ -10,6 +10,18 @@ Round kinds:
   ("serial",   draft_tokens, target_calls)   cost = d*t + calls*c*t
   ("parallel", draft_tokens, target_calls)   cost = max(d*t, calls*c*t)
   ("target",   0,            target_calls)   cost = calls*c*t   (AR decode)
+
+Rounds may carry a fourth element, the measured DEVICE DISPATCH count
+(model forwards launched that round — DESIGN.md §7.12).  Single-pass
+parallel drafting collapses a round's 1 + gamma dispatches to 2, a win the
+per-token terms above cannot see; ``t_dispatch`` prices the fixed per-
+dispatch overhead (launch latency, host staging) so the collapse shows up
+in the modeled latency.  Historical 3-tuples price their implied dispatch
+count (draft_tokens + target_calls: one forward per sequential draft step);
+with the default ``t_dispatch = 0`` every number is unchanged, bitwise.
+For 4-tuples the draft-forward time is (dispatches - target_calls) * t —
+one chunk forward regardless of chunk width — while the drafted-token cost
+stays visible through the dispatch term.
 """
 from __future__ import annotations
 
@@ -45,15 +57,25 @@ class CostModel:
     c: float = 10.0         # target-call / draft-token speed ratio
     t: float = 1.0          # draft per-token time (arbitrary unit)
     tokens_per_sec_ar: float = 0.0  # optional absolute calibration
+    t_dispatch: float = 0.0  # fixed per-device-dispatch overhead
 
     def round_cost(self, r: Round) -> float:
-        kind, d, calls = r
+        kind, d, calls = r[0], r[1], r[2]
+        if len(r) > 3:
+            nd = int(r[3])
+            # measured dispatches: draft forwards are whatever is not a
+            # target call, and each draft forward covers the whole chunk
+            dfwd = max(nd - calls, 0)
+        else:
+            nd = d + calls          # implied: one forward per draft step
+            dfwd = d
+        over = nd * self.t_dispatch
         if kind == "serial":
-            return d * self.t + calls * self.c * self.t
+            return dfwd * self.t + calls * self.c * self.t + over
         if kind == "parallel":
-            return max(d * self.t, calls * self.c * self.t)
+            return max(dfwd * self.t, calls * self.c * self.t) + over
         if kind == "target":
-            return calls * self.c * self.t
+            return calls * self.c * self.t + over
         raise ValueError(kind)
 
     def total(self, timeline: List[Round]) -> float:

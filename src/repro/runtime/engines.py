@@ -67,6 +67,13 @@ class EngineConfig:
     #   acceptance-history state adapts gamma/k/epsilon per round.  "off"
     #   keeps every engine path bitwise-identical to the predictor-less
     #   build; "oracle" swaps the 2-bit counters for exact EMAs.
+    draft_mode: str = "sequential" # "sequential" | "parallel" — parallel
+    #   proposes a whole chunk in ONE draft dispatch via multi-token draft
+    #   heads + masked slot positions (DESIGN.md §7.12).  The verify
+    #   protocol (verdict packets, PRNG consumption, rollback) is pinned
+    #   identical to the sequential oracle; only the proposal distributions
+    #   q_i differ (heads condition on the last real hidden state, not on
+    #   the sampled prefix), which chain verification absorbs losslessly.
     max_len: int = 4096
     seed: int = 0
 
@@ -161,11 +168,29 @@ class Engine:
 
     def __init__(self, draft_params, draft_cfg: Optional[ModelConfig],
                  target_params, target_cfg: ModelConfig,
-                 ecfg: EngineConfig, hrad_params=None):
+                 ecfg: EngineConfig, hrad_params=None, draft_heads=None):
         self.dp, self.dcfg = draft_params, draft_cfg
         self.tp, self.tcfg = target_params, target_cfg
         self.ecfg = ecfg
         self.hrad_params = hrad_params
+        self.draft_heads = draft_heads
+        if ecfg.draft_mode not in ("sequential", "parallel"):
+            raise ValueError(f"unknown draft_mode {ecfg.draft_mode!r}")
+        if ecfg.draft_mode == "parallel" and draft_cfg is not None:
+            if draft_heads is None:
+                raise ValueError(
+                    "draft_mode='parallel' needs draft_heads (see "
+                    "models.model.init_draft_heads / training.pairs)")
+            if any(m == "mamba" for m, _ in draft_cfg.pattern):
+                raise ValueError(
+                    "parallel draft mode needs an attention-only draft "
+                    f"model, got pattern {draft_cfg.pattern}")
+            need = max(ecfg.gamma, ecfg.gamma_branch)
+            have = int(draft_heads["heads"].shape[0])
+            if have < need:
+                raise ValueError(
+                    f"draft_heads has K={have} heads; parallel mode needs "
+                    f">= max(gamma, gamma_branch) = {need}")
         self._q_stack: Optional[jax.Array] = None
         # history-driven speculation controller (runtime/predictor.py);
         # None when spec_predictor == "off" — call sites guard on that, so
@@ -235,9 +260,22 @@ class Engine:
     # lineage reset ---------------------------------------------------------
     def _reset_lineage(self, runner: ModelRunner, prompt_len: int,
                        ctx: _Ctx) -> None:
-        """Reset a runner to the committed stream, last token pending."""
-        runner.reset_to(prompt_len + len(ctx.out) - 1)
-        runner.pending = [ctx.out[-1]]
+        """Reset a runner to the committed stream, newest tail pending.
+
+        Sequential mode: the runner's ingested lineage always covers the
+        committed stream, so this reduces to reset_to(committed - 1) with
+        the last token pending (the historical behaviour, bitwise).  In
+        parallel draft mode the draft runner's cache may be *behind* the
+        committed stream — drafted tokens never enter the draft cache —
+        in which case the un-ingested committed tail becomes pending.
+        """
+        tgt_len = prompt_len + len(ctx.out) - 1
+        if runner.pos >= tgt_len:
+            runner.reset_to(tgt_len)
+            runner.pending = [ctx.out[-1]]
+        else:
+            runner.pending = [int(t)
+                              for t in ctx.out[runner.pos - prompt_len:]]
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +324,8 @@ class SpSEngine(Engine):
         Returns (drafted, q_stack (g, V), confidences).  Exactly g draft
         forwards per round (the pending ingest doubles as the first one).
         """
+        if self.ecfg.draft_mode == "parallel":
+            return self._draft_round_parallel(draft, ctx, gamma)
         if draft.pending:
             draft.forward([])
         qs, drafted, confs = [], [], []
@@ -303,6 +343,30 @@ class SpSEngine(Engine):
             draft.forward([tok])
         return drafted, jnp.stack(qs), confs
 
+    def _draft_round_parallel(self, draft: ModelRunner, ctx: _Ctx,
+                              gamma: int
+                              ) -> Tuple[List[int], jax.Array, List[float]]:
+        """One-dispatch drafting (DESIGN.md §7.12): all gamma proposal
+        distributions come from a single masked forward; sampling, stop
+        rules and PRNG consumption then mirror the sequential loop exactly
+        (one ``ctx.split()`` per drafted token), so the verify protocol is
+        unchanged — only the q_i distributions differ.
+        """
+        q_all = draft.forward_parallel(gamma, self.draft_heads)
+        qs, drafted, confs = [], [], []
+        for i in range(gamma):
+            lg = q_all[0, i]
+            q = self._qprobs(lg)
+            q_sig = self._qsignal(lg)
+            tok = int(jax.device_get(S.sample(ctx.split(), q)))
+            qs.append(q)
+            confs.append(float(jax.device_get(q_sig.max())))
+            drafted.append(tok)
+            ctx.stats.draft_tokens += 1
+            if (i == gamma - 1) or self._stop_rule(q_sig):
+                break
+        return drafted, jnp.stack(qs), confs
+
     def generate(self, prompt, n_new, key, embeds=None) -> GenResult:
         ctx = _Ctx(key)
         draft, target = self._new_runners()
@@ -313,26 +377,34 @@ class SpSEngine(Engine):
         target.prefill(prompt)
         ctx.stats.target_calls += 1
         plen = len(prompt) + (embeds.shape[1] if embeds is not None else 0)
+        parallel_draft = self.ecfg.draft_mode == "parallel"
         while len(ctx.out) < n_new:
             draft.checkpoint(), target.checkpoint()
+            calls0 = draft.n_calls + target.n_calls
             drafted, q_stack, _ = self._draft_round(draft, ctx,
                                                     self.ecfg.gamma)
             g = len(drafted)
             n, nxt, all_acc, bonus = self._verify(target, drafted, q_stack,
                                                   ctx)
-            ctx.timeline.append(("serial", g, 1))
+            ndisp = draft.n_calls + target.n_calls - calls0
+            ctx.timeline.append(("serial", g, 1, ndisp) if parallel_draft
+                                else ("serial", g, 1))
             if all_acc:
                 nxt = int(jax.device_get(S.sample(ctx.split(), bonus)))
                 ctx.out.extend(drafted + [nxt])
                 ctx.stats.emitted += g + 1
                 ctx.stats.run_extend(g + 1)   # bonus continues the run
                 target.pending = [nxt]
-                draft.pending = [drafted[-1], nxt]
+                # parallel mode: drafted tokens never entered the draft
+                # cache — the whole accepted run becomes pending.
+                draft.pending = (drafted + [nxt] if parallel_draft
+                                 else [drafted[-1], nxt])
                 if self.rec.enabled:
                     self.rec.spec(rid=self.trace_rid,
                                   round=len(ctx.timeline) - 1, stage="sps",
                                   committed=g + 1, accepted=g, drafted=g,
-                                  cause="accept", gamma=g, bonus=True)
+                                  cause="accept", gamma=g, bonus=True,
+                                  dispatches=ndisp)
             else:
                 ctx.out.extend(drafted[:n] + [nxt])
                 ctx.stats.emitted += n + 1
@@ -346,7 +418,7 @@ class SpSEngine(Engine):
                                   round=len(ctx.timeline) - 1, stage="sps",
                                   committed=n + 1, accepted=n, drafted=g,
                                   rolled_back=g - n, cause="chunk-reject",
-                                  gamma=g)
+                                  gamma=g, dispatches=ndisp)
         ctx.stats.finish()
         return GenResult(ctx.out[:n_new], ctx.stats, ctx.timeline)
 
@@ -450,6 +522,10 @@ class PEARLEngine(SpSEngine):
     name = "pearl"
 
     def generate(self, prompt, n_new, key, embeds=None) -> GenResult:
+        if self.ecfg.draft_mode == "parallel":
+            raise NotImplementedError(
+                "PEARL pipelines sequential drafting against verification; "
+                "use draft_mode='sequential'")
         ctx = _Ctx(key)
         draft, target = self._new_runners()
         if embeds is not None:

@@ -19,6 +19,7 @@ optimisation for simplicity.  Cache leaves are uniformly (stack, batch, ...).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
@@ -93,8 +94,36 @@ class ModelRunner:
                 positions=positions, feature_mode="all")
             return logits, cache, aux["features"]
 
+        @functools.partial(jax.jit, static_argnames=("nreal", "g"))
+        def _fwd_parallel(params, cache, tokens, pos, dhead, *, nreal, g):
+            # tokens (B, nreal + g): nreal real (pending) tokens followed by
+            # g draft slot columns (ids ignored — the slot embedding rides
+            # there).  Only the real tokens enter the logical stream; slot
+            # keys are stored invisible (DESIGN.md §7.12).
+            B, T = tokens.shape
+            t = jnp.arange(T, dtype=jnp.int32)
+            cols = jnp.broadcast_to(t >= nreal, (B, T))
+            positions = pos[:, None] + t[None]
+            ctx = jnp.where(cols, (pos + nreal - 1)[:, None], positions)
+            sidx = jnp.broadcast_to(jnp.maximum(t - nreal, 0), (B, T))
+            pdraft = {"cols": cols, "ctx": ctx, "sidx": sidx,
+                      "embed": dhead["mask_embed"]}
+            logits, cache, aux = M.forward(
+                params, cfg, tokens, cache=cache, positions=positions,
+                feature_mode="all", pdraft=pdraft)
+            feats = aux["features"][-1]                  # (B, T, D)
+            hlg = M.draft_head_logits(params, cfg, dhead,
+                                      feats[:, nreal:, :])   # (B, g, V)
+            ar = logits[:, nreal - 1]                    # (B, V)
+            # q_all[:, i]: dist of token at last_real + 1 + i; entries
+            # 1..g-1 draft positions 2..g, entry g is the q_b signal dist
+            q_all = jnp.concatenate(
+                [ar.astype(jnp.float32)[:, None], hlg], axis=1)
+            return q_all, ar, cache
+
         self._fwd = _fwd
         self._fwd_embeds = _fwd_embeds
+        self._fwd_parallel = _fwd_parallel
 
     # -------------------------------------------------------------- forward
     def forward(self, tokens: Sequence[int]) -> jax.Array:
@@ -117,6 +146,40 @@ class ModelRunner:
             self.rec.model_call(role=self.trace_role, tokens=len(toks),
                                 batch=1, pos=self.pos)
         return logits
+
+    def forward_parallel(self, g: int, dhead) -> jax.Array:
+        """Single-pass parallel draft (DESIGN.md §7.12): ingest ``pending``
+        and run ``g`` masked draft slots in ONE forward.
+
+        Only the pending tokens advance ``pos``/``tokens`` — the slots'
+        cache writes are invisible (stored at position -1) and get
+        overwritten when real tokens arrive at those positions.  Returns
+        q_all (1, g+1, V) f32 raw logits: entry 0 the AR distribution after
+        the pending tokens (== what a sequential tick would see), entry i
+        head i's distribution for position ``pos + i``, entry g the
+        next-position signal distribution (SpecBranch q_b).
+        """
+        assert self.batch == 1
+        assert not self.has_ssm, \
+            "parallel draft mode needs an attention-only draft model"
+        toks = [int(t) for t in self.pending]
+        self.pending = []
+        assert toks, "forward_parallel with no pending tokens"
+        arr = jnp.asarray([toks + [0] * g], dtype=jnp.int32)
+        pos = jnp.full((1,), self.pos, jnp.int32)
+        q_all, ar, self.cache = self._fwd_parallel(
+            self.params, self.cache, arr, pos, dhead,
+            nreal=len(toks), g=g)
+        self.pos += len(toks)
+        self.tokens.extend(toks)
+        self.n_calls += 1
+        self.n_call_tokens += len(toks) + g
+        self.last_logits = ar
+        self.last_features = None
+        if self.rec is not None and self.rec.enabled:
+            self.rec.model_call(role=self.trace_role,
+                                tokens=len(toks) + g, batch=1, pos=self.pos)
+        return q_all
 
     def forward_embeds(self, embeds: jax.Array) -> jax.Array:
         """Ingest stub frontend embeddings (B=1, Tp, D) — VLM/audio prefill."""

@@ -95,6 +95,8 @@ class SpecBranchEngine(Engine):
         """
         gamma = self.ecfg.gamma if gamma is None else gamma
         epsilon = self.ecfg.epsilon if epsilon is None else epsilon
+        if s != 0 and self.ecfg.draft_mode == "parallel":
+            return self._serial_draft_parallel(draft, ctx, s, gamma, epsilon)
         if draft.pending:
             draft.forward([])
         chunk, qs = [], []
@@ -115,6 +117,34 @@ class SpecBranchEngine(Engine):
             draft.forward([tok])
         ctx.stats.draft_tokens += 1
         return chunk, qs, self._qsignal(draft.last_logits[0])
+
+    def _serial_draft_parallel(self, draft: ModelRunner, ctx: _Ctx, s: int,
+                               gamma: int, epsilon: float
+                               ) -> Tuple[List[int], List[jax.Array],
+                                          jax.Array]:
+        """One-dispatch DRAFT stage (DESIGN.md §7.12): all proposal
+        distributions come from one masked forward; the sampling loop,
+        eps-stop rule and PRNG consumption mirror ``_serial_draft``
+        exactly, so only the q_i distributions differ.  The caller runs a
+        catch-up ``draft.forward(chunk)`` before the branch stage so the
+        fork machinery sees the same cache state as sequential mode.
+        """
+        q_all = draft.forward_parallel(gamma, self.draft_heads)
+        chunk, qs = [], []
+        for i in range(gamma):
+            lg = q_all[0, i]
+            q = self._qprobs(lg)
+            q_sig = self._qsignal(lg)
+            conf = float(jax.device_get(q_sig.max()))
+            if s == 1 and conf < epsilon:
+                ctx.stats.draft_tokens += 1
+                return chunk, qs, q_sig      # branch point found
+            tok = int(jax.device_get(S.sample(ctx.split(), q)))
+            chunk.append(tok)
+            qs.append(q)
+            ctx.stats.draft_tokens += 1
+        ctx.stats.draft_tokens += 1
+        return chunk, qs, self._qsignal(q_all[0, gamma])
 
     def _branch_draft(self, draft: ModelRunner, cands: np.ndarray,
                       ctx: _Ctx) -> Tuple[np.ndarray, List[jax.Array],
@@ -160,6 +190,7 @@ class SpecBranchEngine(Engine):
         plen = len(prompt) + (embeds.shape[1] if embeds is not None else 0)
         gb = self.ecfg.gamma_branch
         parallel = self.ecfg.use_branch
+        parallel_draft = self.ecfg.draft_mode == "parallel"
         pred = self.predictor     # history-driven controller (may be None);
         if pred is not None:      # keyed by rid so state survives preemption
             pred.start(self.trace_rid)
@@ -179,13 +210,26 @@ class SpecBranchEngine(Engine):
             eps_t = dec.epsilon if dec is not None else self.ecfg.epsilon
             if mode == "draft":
                 # ---------------- DRAFT stage (serial) ----------------
+                calls0 = draft.n_calls
                 feats = self._feats_last(target)
-                e_t = self._embed_of(draft.pending[0] if draft.pending
-                                     else target.pending[0])
+                # newest committed token (pending holds the un-ingested
+                # committed tail in parallel mode; length 1 otherwise)
+                e_t = self._embed_of(draft.pending[-1] if draft.pending
+                                     else target.pending[-1])
                 s = self._hrad_signal(feats, e_t, ctx)
                 chunk, chunk_q, q_b = self._serial_draft(
                     draft, ctx, s, gamma=gamma_t, epsilon=eps_t)
-                ctx.timeline.append(("serial", len(chunk) + 1, 0))
+                if parallel_draft and chunk:
+                    # catch-up dispatch: bring the draft cache up to the
+                    # chunk head so the branch-stage fork machinery (and
+                    # the true branch-point distribution) match sequential
+                    # mode exactly.
+                    draft.forward(chunk)
+                    q_b = self._qsignal(draft.last_logits[0])
+                ndisp = draft.n_calls - calls0
+                ctx.timeline.append(
+                    ("serial", len(chunk) + 1, 0, ndisp) if parallel_draft
+                    else ("serial", len(chunk) + 1, 0))
                 if self.rec.enabled:
                     self.rec.spec(
                         rid=self.trace_rid, round=len(ctx.timeline) - 1,
@@ -193,7 +237,8 @@ class SpecBranchEngine(Engine):
                         gamma=gamma_t,
                         eps_stop=(s == 1 and len(chunk) < gamma_t),
                         hrad=(s if self.ecfg.use_hrad else None),
-                        pred=(dec.obs() if dec is not None else None))
+                        pred=(dec.obs() if dec is not None else None),
+                        dispatches=ndisp)
                 mode = "branch"
                 continue
 

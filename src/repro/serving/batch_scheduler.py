@@ -84,6 +84,7 @@ class ContinuousBatchScheduler:
                 eng.clock = max(eng.clock, nxt)
                 continue
             t0 = time.time()
+            n_rnd0 = len(eng.timeline)
             rr = eng.step_round()
             step_wall = time.time() - t0
             now = eng.clock
@@ -100,7 +101,16 @@ class ContinuousBatchScheduler:
             for seq, res in eng.retire_done():
                 results[seq.rid] = res
                 self.metrics.on_finish(seq.rid, now)
-            self.metrics.on_round(eng.pool.occupancy, step_wall=step_wall)
+            last_rnd = (eng.timeline[-1]
+                        if len(eng.timeline) > n_rnd0 else None)
+            self.metrics.on_round(
+                eng.pool.occupancy, step_wall=step_wall,
+                # measured dispatches ride the round tuple in parallel
+                # draft mode; sequential rounds imply one forward per
+                # draft step plus the target calls
+                dispatches=(None if last_rnd is None
+                            else (int(last_rnd[3]) if len(last_rnd) > 3
+                                  else int(last_rnd[1]) + int(last_rnd[2]))))
             if rec is not None:
                 rec.sample("pool_occupancy", eng.pool.occupancy,
                            t=eng.clock)

@@ -224,7 +224,27 @@ class BatchedDecoder:
                 return (logits, state.prefill_merge(cache, sub, rows),
                         aux["features"])
 
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def _fwd_draft_paged(params, cache, tokens, pos, nreal, membed,
+                                 table, lens):
+                B, T = tokens.shape
+                t = jnp.arange(T, dtype=jnp.int32)
+                cols = t[None, :] >= nreal[:, None]
+                positions = pos[:, None] + t[None]
+                ctx = pos[:, None] + jnp.maximum(nreal, 1)[:, None] - 1
+                pdraft = {"cols": cols,
+                          "ctx": jnp.where(cols, ctx, positions),
+                          "sidx": jnp.maximum(t[None, :] - nreal[:, None], 0),
+                          "embed": membed}
+                logits, cache, aux = M.forward(
+                    params, cfg, tokens, cache=cache, positions=positions,
+                    feature_mode="all", paged=(table, lens),
+                    act_spec=act_spec, logits_spec=logits_spec,
+                    paged_backend=paged_backend, pdraft=pdraft)
+                return logits, cache, aux["features"][-1]
+
             self._fwd, self._prefill = _fwd_paged, _prefill_paged
+            self._fwd_draft = _fwd_draft_paged
             return
 
         @jax.jit
@@ -250,7 +270,25 @@ class BatchedDecoder:
             return (logits, state.prefill_merge(cache, sub, rows),
                     aux["features"])
 
+        @jax.jit
+        def _fwd_draft_dense(params, cache, tokens, pos, nreal, membed):
+            B, T = tokens.shape
+            t = jnp.arange(T, dtype=jnp.int32)
+            cols = t[None, :] >= nreal[:, None]
+            positions = pos[:, None] + t[None]
+            ctx = pos[:, None] + jnp.maximum(nreal, 1)[:, None] - 1
+            pdraft = {"cols": cols,
+                      "ctx": jnp.where(cols, ctx, positions),
+                      "sidx": jnp.maximum(t[None, :] - nreal[:, None], 0),
+                      "embed": membed}
+            logits, cache, aux = M.forward(
+                params, cfg, tokens, cache=cache, positions=positions,
+                feature_mode="all", act_spec=act_spec,
+                logits_spec=logits_spec, pdraft=pdraft)
+            return logits, cache, aux["features"][-1]
+
         self._fwd, self._prefill = _fwd, _prefill_dense
+        self._fwd_draft = _fwd_draft_dense
 
     # -------------------------------------------------- state delegation
     @property
@@ -317,6 +355,35 @@ class BatchedDecoder:
             logits, self.cache, feats = self._fwd(
                 self.params, self.cache, jnp.asarray(tokens, jnp.int32),
                 jnp.asarray(pos, jnp.int32))
+        self.n_calls += 1
+        self.n_call_tokens += int(np.prod(tokens.shape))
+        return logits, feats
+
+    def step_draft(self, tokens, pos, nreal, mask_embed
+                   ) -> Tuple[jax.Array, jax.Array]:
+        """Parallel-draft forward (DESIGN.md §7.12): per row, ``nreal[b]``
+        real tokens followed by draft-slot columns (token ids ignored — the
+        slot embedding rides there) up to the padded width.  Slot keys are
+        stored invisible (dense: position -1; paged: positions >= lens
+        route to the trash page) and slot queries see only the row's real
+        prefix, so one dispatch yields every slot's hidden state as a
+        function of the committed stream alone.  Returns DEVICE (logits
+        (n_rows, T, V), last-point features (n_rows, T, D)) for
+        ``DL.draft_chunk`` to turn into the multi-head chunk proposal.
+        Rows with nreal == 0 (unlisted) are all-slots: every write is
+        invisible and their lanes compute garbage the host ignores."""
+        assert tokens.shape[0] == self.n_rows
+        if self.paged is not None:
+            tab, lens = self.state.table_view()
+            logits, self.cache, feats = self._fwd_draft(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(nreal, jnp.int32),
+                mask_embed, jnp.asarray(tab), jnp.asarray(lens))
+        else:
+            logits, self.cache, feats = self._fwd_draft(
+                self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(pos, jnp.int32), jnp.asarray(nreal, jnp.int32),
+                mask_embed)
         self.n_calls += 1
         self.n_call_tokens += int(np.prod(tokens.shape))
         return logits, feats
@@ -477,6 +544,7 @@ class BatchedEngineBase:
                  pool_pages: Optional[int] = None,
                  swap_pages: int = 0,
                  hrad_params=None,
+                 draft_heads=None,
                  attn_backend: str = "dense",
                  debug_check: bool = False,
                  mesh=None):
@@ -485,6 +553,26 @@ class BatchedEngineBase:
         self.tp, self.tcfg = target_params, target_cfg
         self.ecfg = ecfg
         self.hrad_params = hrad_params
+        # single-pass parallel drafting (DESIGN.md §7.12): multi-position
+        # draft heads collapse the per-round draft phase to ONE dispatch.
+        self.draft_heads = draft_heads
+        if ecfg.draft_mode not in ("sequential", "parallel"):
+            raise ValueError(f"unknown draft_mode {ecfg.draft_mode!r}")
+        if ecfg.draft_mode == "parallel":
+            if draft_heads is None:
+                raise ValueError(
+                    "draft_mode='parallel' needs draft_heads "
+                    "(models.init_draft_heads / training.pairs)")
+            if any(m == "mamba" for m, _ in draft_cfg.pattern):
+                raise ValueError(
+                    "parallel drafting needs an attention-only draft model; "
+                    f"pattern has mamba mixers: {draft_cfg.pattern}")
+            need = max(ecfg.gamma, ecfg.gamma_branch)
+            have = int(draft_heads["heads"].shape[0])
+            if have < need:
+                raise ValueError(
+                    f"draft_heads has {have} positions; "
+                    f"need >= max(gamma, gamma_branch) = {need}")
         self.max_batch = max_batch
         self.attn_backend = attn_backend
         self.debug_check = debug_check
@@ -547,6 +635,13 @@ class BatchedEngineBase:
         # PLUS the rollback span back across it, with slack; ~KBs per row.
         ssm_ring = (4 * (ecfg.gamma + ecfg.gamma_branch)
                     + 2 * DL.bucket(ecfg.gamma + 2) + 16 + self._pq)
+        if ecfg.draft_mode == "parallel":
+            # parallel rounds re-ingest the committed tail after a reject
+            # (pending = full[ing:]) and stage slot columns past it; widen
+            # the ring ONLY in this mode — ring size changes the float
+            # summation order, and sequential mode is pinned bitwise.
+            ssm_ring += 2 * DL.bucket(2 * (ecfg.gamma + ecfg.gamma_branch)
+                                      + 4)
         paged = attn_backend == "paged"
         lanes = DL.bucket(max_batch)   # admission groups are <= max_batch
         self.tgt_dec = BatchedDecoder(target_params, target_cfg,
@@ -722,9 +817,16 @@ class BatchedEngineBase:
         one round of overshoot (chunk/bonus) plus a branch continuation
         plus bucket-ladder and batch-pad margin — rows must never come
         within a batched call's padding of max_len (see _batched)."""
+        extra = 0
+        if self.ecfg.draft_mode == "parallel":
+            # a parallel-draft frame stages the re-ingested committed tail
+            # plus G slot columns in one bucketed call
+            extra = DL.bucket(2 * (self.ecfg.gamma
+                                   + self.ecfg.gamma_branch) + 4)
         return (2 * (DL.bucket(self.ecfg.gamma + 2)
                      + DL.bucket(self.ecfg.gamma_branch + 2) + 4)
-                + self._pq)          # prefill-ladder pad span
+                + self._pq           # prefill-ladder pad span
+                + extra)
 
     def can_admit(self, prompt_len: int, max_new: int = 0) -> bool:
         if not self.tgt_dec.free_rows or len(self.active) >= self.max_batch:
@@ -963,7 +1065,15 @@ class BatchedEngineBase:
             # queries' windows) instead of the slot the next real write
             # overwrites anyway.
             dec.row_pos[st.row] = st.ing
-            st.pending = [seq.out[-1]]
+            # pending = the committed tail past the kept prefix.  In
+            # sequential mode ing == keep always holds here (every round
+            # ingests pending before drafting), so this reduces bitwise to
+            # the historical [seq.out[-1]].  In parallel mode the draft
+            # stream only ever holds the committed prefix (drafted tokens
+            # never enter its cache), so after a reject its tail can span
+            # several committed tokens.
+            full = seq.prompt + seq.out
+            st.pending = [int(t) for t in full[st.ing:]]
 
     # -------------------------------------------------------------- retire
     def retire_done(self) -> List[Tuple[_Seq, GenResult]]:
@@ -996,8 +1106,13 @@ class BatchedEngineBase:
         raise NotImplementedError
 
     def _finish_round(self, kind: str, draft_steps: int,
-                      target_calls: int) -> float:
-        rnd = (kind, draft_steps, target_calls)
+                      target_calls: int,
+                      dispatches: Optional[int] = None) -> float:
+        # sequential rounds keep the historical 3-tuple (tests pin the
+        # timeline bitwise); parallel rounds append the measured device-
+        # dispatch count so CostModel.t_dispatch can price the collapse.
+        rnd = (kind, draft_steps, target_calls) if dispatches is None \
+            else (kind, draft_steps, target_calls, dispatches)
         self.timeline.append(rnd)
         self.clock += self.cost.round_cost(rnd)
         if self.debug_check:
@@ -1032,6 +1147,10 @@ class BatchedSpSEngine(BatchedEngineBase):
     name = "batched-sps"
 
     def step_round(self) -> Dict[str, Any]:
+        if self.ecfg.draft_mode == "parallel":
+            # the sequential body below stays byte-identical (tests pin it
+            # bitwise); parallel drafting is its own round function.
+            return self._step_round_parallel()
         seqs = [s for s in self.active if not s.done]
         if not seqs:
             return {"committed": {}, "preempted": []}
@@ -1209,6 +1328,199 @@ class BatchedSpSEngine(BatchedEngineBase):
         self._finish_round("serial", g, 1)
         return {"committed": committed, "preempted": preempted}
 
+    def _step_round_parallel(self) -> Dict[str, Any]:
+        """Single-pass parallel drafting round (DESIGN.md §7.12): the gamma
+        sequential ticks collapse into ONE draft dispatch — each row's
+        frame carries its pending tokens followed by g masked draft slots,
+        and ``DL.draft_chunk`` reads every position's proposal off the one
+        forward.  Verification is the sequential round's code unchanged:
+        same verify frame, same PRNG coordinates per row (token i at
+        (rid, ctr0 + i), verify window from ctr0 + g_i), same verdict
+        packet — so the protocol is pinned equivalent and any quality
+        difference is confined to the draft proposal distribution.
+
+        The draft stream's cache holds the COMMITTED prefix only: drafted
+        tokens never enter it (their hidden states came from slots), so an
+        accept re-feeds the chunk as next round's pending and a reject
+        replays the committed tail (see _rollback_streams)."""
+        seqs = [s for s in self.active if not s.done]
+        if not seqs:
+            return {"committed": {}, "preempted": []}
+        pred = self.predictor
+        for s in seqs:
+            s.pdec = pred.decide(s.rid) if pred is not None else None
+        g_of = {s.rid: (s.pdec.gamma if s.pdec is not None
+                        else self.ecfg.gamma) for s in seqs}
+        g = self.ecfg.gamma if pred is None \
+            else max(g_of[s.rid] for s in seqs)
+        rec = self.rec
+        wall0 = rec.now()
+        rnd_idx = len(self.timeline)
+
+        def fits(ss):
+            # drafted tokens never enter the draft cache in this mode: the
+            # draft pool grows by the pending re-ingest only
+            return (self.pools["d"].has_room(
+                        [(("d", s.rid), len(s.dft.pending)) for s in ss])
+                    and self.pools["t"].has_room(
+                        [(("t", s.rid), len(s.tgt.pending) + g_of[s.rid])
+                         for s in ss]))
+
+        preempted = self._make_room(seqs, fits)
+        if not seqs:
+            return {"committed": {}, "preempted": preempted}
+        n_d = self.dft_dec.n_rows
+        B = self.max_batch
+        calls0 = self.dft_dec.n_calls + self.tgt_dec.n_calls
+
+        # ---- draft stage: ONE forward (pending ++ g slots per row), then
+        # one fused chunk-sampling dispatch off its logits/features
+        P = {s.rid: len(s.dft.pending) for s in seqs}
+        T = DL.bucket(max(P.values()) + g)
+        toks = np.zeros((n_d, T), np.int32)
+        nreal = np.zeros(n_d, np.int32)
+        last = np.zeros(n_d, np.int32)
+        pos = np.minimum(self.dft_dec.row_pos,
+                         self.dft_dec.max_len - T).astype(np.int32)
+        for s in seqs:
+            p_i = P[s.rid]
+            self.pools["d"].extend(("d", s.rid), p_i)
+            if s.dft.ing + T > self.dft_dec.max_len:
+                raise RuntimeError(
+                    f"row {s.dft.row} overflows max_len")
+            toks[s.dft.row, :p_i] = s.dft.pending
+            nreal[s.dft.row] = p_i
+            last[s.dft.row] = p_i - 1
+            pos[s.dft.row] = s.dft.ing
+            s.dft.pending = []
+        lg, dfeats = self.dft_dec.step_draft(
+            toks, pos, nreal, self.draft_heads["mask_embed"])
+        for s in seqs:
+            s.dft.ing += P[s.rid]
+            self.dft_dec.row_pos[s.dft.row] = s.dft.ing
+        rids, ctrs = self._by_row(self.dft_dec, seqs, lambda s: s.dft.row)
+        tok_stack, q_full, _ = DL.draft_chunk(
+            lg, dfeats, self.dp["final_norm"], self.draft_heads["heads"],
+            jnp.asarray(last), jnp.asarray(rids), jnp.asarray(ctrs),
+            self._key, g=g, dtemp=self._dt, stemp=self._st,
+            eps=self.dcfg.norm_eps, cap=self.dcfg.final_softcap,
+            mesh=self.mesh)
+        q_stack = q_full[:g]
+        # PRNG parity: token i was drawn at (rid, ctr0 + i) — the exact
+        # coordinates the sequential ticks consume.  Rows with g_i < g
+        # sampled garbage at ctr0+g_i..ctr0+g-1; those draws are discarded
+        # (glens masks them out of the verify), so the coordinate overlap
+        # with the verify window below is harmless.
+        for s in seqs:
+            s.ctr += g_of[s.rid]
+            s.stats.draft_tokens += g_of[s.rid]
+        wall_draft = rec.now()
+
+        # ---- verify stage: identical to the sequential round
+        pends = {s.rid: list(s.tgt.pending) for s in seqs}
+        npend = np.zeros(B, np.int32)
+        pend_arr = np.zeros((B, 2), np.int32)
+        trows = np.full(B, self.tgt_dec.n_rows, np.int32)  # OOB = pad lane
+        drows = np.zeros(B, np.int32)
+        rid_l = np.zeros(B, np.int32)
+        ctr_l = np.zeros(B, np.int32)
+        glens = np.zeros(B, np.int32)      # pad lanes: 0 (garbage, unread)
+        for i, s in enumerate(seqs):
+            p = pends[s.rid]
+            npend[i] = len(p)
+            pend_arr[i, :len(p)] = p
+            trows[i] = s.tgt.row
+            drows[i] = s.dft.row
+            rid_l[i] = s.rid
+            ctr_l[i] = s.ctr
+            glens[i] = g_of[s.rid]
+        Tb = DL.bucket(int((npend + glens).max()) if pred is not None
+                       else int(npend.max()) + g)
+        toks_full = DL.compose_verify_tokens(
+            jnp.asarray(pend_arr), jnp.asarray(npend), tok_stack,
+            jnp.asarray(drows), jnp.asarray(trows),
+            n_rows=self.tgt_dec.n_rows, Tb=Tb)
+        pos_t = np.minimum(self.tgt_dec.row_pos,
+                           self.tgt_dec.max_len - Tb).astype(np.int32)
+        for s in seqs:
+            self.pools["t"].extend(("t", s.rid),
+                                   len(pends[s.rid]) + g_of[s.rid])
+            if s.tgt.ing + Tb > self.tgt_dec.max_len:
+                raise RuntimeError(
+                    f"row {s.tgt.row} overflows max_len")
+            pos_t[s.tgt.row] = s.tgt.ing
+        tlg, feats = self.tgt_dec.step(toks_full, pos_t)
+        for s in seqs:
+            s.tgt.ing += len(pends[s.rid]) + g_of[s.rid]
+            self.tgt_dec.row_pos[s.tgt.row] = s.tgt.ing
+        with DL.annotate("sps_verify"):
+            packet_dev = DL.sps_verify(
+                tlg, q_stack, tok_stack, jnp.asarray(trows),
+                jnp.asarray(drows), jnp.asarray(npend), jnp.asarray(rid_l),
+                jnp.asarray(ctr_l), self._key,
+                jnp.asarray(glens) if pred is not None else None,
+                g=g, ttemp=self._tt,
+                dtemp=self._dt, kernel=self._use_kernel,
+                interpret=self._kernel_interpret, mesh=self.mesh)
+        for s in seqs:
+            s.ctr += g_of[s.rid] + 1
+        pk = self._fetch(packet_dev)       # the round's ONLY host fetch
+        wall_verify = rec.now()
+        ndisp = self.dft_dec.n_calls + self.tgt_dec.n_calls - calls0
+        now = self.clock + self.cost.round_cost(("serial", g, 1, ndisp))
+        committed: Dict[int, int] = {}
+        for i, s in enumerate(seqs):
+            g_i = g_of[s.rid]
+            n, nxt, all_acc = int(pk[i, 0]), int(pk[i, 1]), bool(pk[i, 2])
+            dr = [int(x) for x in pk[i, 3:3 + g_i]]
+            npend_i = len(pends[s.rid])
+            before = min(len(s.out), s.max_new)
+            s.stats.target_calls += 1
+            s.feats_last = feats[:, s.tgt.row:s.tgt.row + 1,
+                                 npend_i + g_i - 1, :]
+            s.tgt.pending = []
+            if pred is not None:
+                pred.update(s.rid, all_acc, n / max(g_i, 1))
+            if all_acc:
+                self._commit(s, dr + [nxt], now)
+                s.stats.run_extend(g_i + 1)
+                s.tgt.pending = [nxt]
+                # the chunk never entered the draft cache: re-feed it whole
+                s.dft.pending = dr + [nxt]
+                if rec.enabled:
+                    rec.spec(rid=s.rid, round=rnd_idx, stage="sps",
+                             committed=g_i + 1, accepted=g_i, drafted=g_i,
+                             cause="accept", gamma=g_i, bonus=True,
+                             dispatches=ndisp,
+                             pred=(s.pdec.obs() if s.pdec is not None
+                                   else None), t=now)
+            else:
+                self._commit(s, dr[:n] + [nxt], now)
+                s.stats.run_extend(n)
+                s.stats.run_break()
+                s.stats.rollback_tokens += g_i - n
+                self._rollback_streams(s)
+                if rec.enabled:
+                    rec.spec(rid=s.rid, round=rnd_idx, stage="sps",
+                             committed=n + 1, accepted=n, drafted=g_i,
+                             rolled_back=g_i - n, cause="chunk-reject",
+                             gamma=g_i, dispatches=ndisp,
+                             pred=(s.pdec.obs() if s.pdec is not None
+                                   else None), t=now)
+            committed[s.rid] = min(len(s.out), s.max_new) - before
+        if rec.enabled:
+            wall1 = rec.now()
+            rec.span("draft", wall0, wall_draft, engine=self.name)
+            rec.span("verify", wall_draft, wall_verify, engine=self.name,
+                     batch=len(seqs))
+            rec.span("commit", wall_verify, wall1, engine=self.name)
+            rec.round(engine=self.name, index=rnd_idx, mode="serial",
+                      draft_steps=g, target_calls=1, batch=len(seqs),
+                      dispatches=ndisp,
+                      wall0=wall0, wall1=wall1, t0=self.clock, t1=now)
+        self._finish_round("serial", g, 1, ndisp)
+        return {"committed": committed, "preempted": preempted}
+
 
 # ---------------------------------------------------------------------------
 # batched SpecBranch
@@ -1289,6 +1601,10 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
 
     # --------------------------------------------------------------- round
     def step_round(self) -> Dict[str, Any]:
+        if self.ecfg.draft_mode == "parallel":
+            # the sequential body below stays byte-identical (tests pin it
+            # bitwise); parallel drafting is its own round function.
+            return self._step_round_parallel()
         seqs = [s for s in self.active if not s.done]
         if not seqs:
             return {"committed": {}, "preempted": []}
@@ -1619,6 +1935,292 @@ class BatchedSpecBranchEngine(BatchedEngineBase):
                       batch=len(seqs), wall0=wall0, wall1=wall1,
                       t0=self.clock, t1=now)
         self._finish_round(kind, ticks, n_target)
+        return {"committed": committed, "preempted": preempted}
+
+    def _step_round_parallel(self) -> Dict[str, Any]:
+        """Single-pass parallel drafting round for SpecBranch (DESIGN.md
+        §7.12).  The interleaved single-token tick pipeline collapses into
+        ONE shared draft dispatch: each serial row's frame carries its
+        pending tokens plus G masked slots, each branch lane's frame the
+        parent chunk + its candidate plus G slots (the chunk never entered
+        the parent's cache — parallel mode keeps draft caches at the
+        committed prefix), and ``DL.draft_chunk`` reads every proposal off
+        that one forward.  Stop rules (H-RAD prior, epsilon, gamma) are
+        applied post-hoc on the fetched [token, conf] packet — confidences
+        for EVERY position are already host-resident, so no optimistic
+        over-ingest and no prune is needed.  The dispatch-first branch
+        verification is unchanged: same verdict packets, same PRNG windows,
+        so the rollback protocol is pinned equivalent to sequential mode.
+
+        PRNG: serial chunk token i draws at (rid, ctr0 + i) exactly like
+        the sequential ticks; branch lane i draws its continuation as a
+        contiguous block (rid, b_ctr0 + i*gb + j) — the union over lanes is
+        the same coordinate set sequential's j*k + i interleaving consumes,
+        so cross-round uniqueness of USED coordinates and batch-composition
+        independence both hold (garbage draws past a row's own use may
+        overlap later windows; they are discarded unread)."""
+        seqs = [s for s in self.active if not s.done]
+        if not seqs:
+            return {"committed": {}, "preempted": []}
+        g, gb = self.ecfg.gamma, self.ecfg.gamma_branch
+        K, CH = self._K, self._CH
+        G = max(g, gb)
+        pred = self.predictor
+        for s in seqs:
+            s.pdec = pred.decide(s.rid) if pred is not None else None
+        g_of = {s.rid: (s.pdec.gamma if s.pdec is not None else g)
+                for s in seqs}
+        eps_of = {s.rid: (s.pdec.epsilon if s.pdec is not None
+                          else self.ecfg.epsilon) for s in seqs}
+        rec = self.rec
+        wall0 = rec.now()
+        rnd_idx = len(self.timeline)
+
+        def fits(ss):
+            # serial draft streams grow by the pending re-ingest only
+            # (drafted tokens never enter the cache); branch lanes ingest
+            # chunk + candidate each (gb kept as conservative margin).
+            d_ups, t_ups, d_extra = [], [], 0
+            pd = self.pools["d"]
+            for s in ss:
+                if s.mode == "draft":
+                    d_ups.append((("d", s.rid), len(s.dft.pending)))
+                else:
+                    k = self._branch_k(s)
+                    dlen = pd.length(("d", s.rid))
+                    per = (pd.pages_for(dlen + 1 + len(s.chunk) + gb)
+                           - pd.pages_for(dlen) + 1)
+                    d_extra += k * per
+                    t_ups.append((("t", s.rid),
+                                  len(s.tgt.pending) + len(s.chunk)))
+            return (pd.would_need(d_ups) + d_extra <= pd.free_pages
+                    and self.pools["t"].has_room(t_ups))
+
+        preempted = self._make_room(seqs, fits)
+
+        serial = [s for s in seqs if s.mode == "draft"]
+        branchers = [s for s in seqs if s.mode == "branch"]
+        B = self.max_batch
+        n_d = self.dft_dec.n_rows
+        calls0 = self.dft_dec.n_calls + self.tgt_dec.n_calls
+
+        # ---- dispatch the branch-stage verification FIRST (identical to
+        # the sequential round: the chunk under verification was drafted
+        # last round, so the verdict overlaps the draft dispatch below)
+        bsets: Dict[int, _BranchSet] = {}
+        packet_dev = None
+        tfeats = None
+        pends: Dict[int, List[int]] = {}
+        ks: Dict[int, int] = {}
+        if branchers:
+            zero_v = jnp.zeros((self.dcfg.vocab_size,), jnp.float32)
+            qb_rows = [s.q_b for s in branchers]
+            qb_stack = jnp.stack(qb_rows
+                                 + [zero_v] * (B - len(branchers)))
+            rid_l = np.zeros(B, np.int32)
+            ctr_l = np.zeros(B, np.int32)
+            for i, s in enumerate(branchers):
+                rid_l[i] = s.rid
+                ctr_l[i] = s.ctr
+                ks[s.rid] = self._branch_k(s)
+            cands = self._fetch(DL.draw_cands(
+                qb_stack, jnp.asarray(rid_l), jnp.asarray(ctr_l),
+                self._key, K=K, stemp=self._st,
+                mode=self.ecfg.branch_mode, mesh=self.mesh))
+            if self.ecfg.branch_mode != "topk":
+                for s in branchers:
+                    s.ctr += ks[s.rid]
+            for i, s in enumerate(branchers):
+                bset = _BranchSet(cands=cands[i, :ks[s.rid]].astype(np.int64))
+                for bi in range(ks[s.rid]):
+                    row = self.dft_dec.free_rows.pop()
+                    self.dft_dec.copy_row(s.dft.row, row)
+                    self.pools["d"].fork(("d", s.rid), self._bkey(s.rid, bi))
+                    self.dft_dec.bind_row(row, self._bkey(s.rid, bi))
+                    bset.streams.append(_Stream(row=row, ing=s.dft.ing))
+                    bset.conts.append([])
+                    bset.cont_q.append([])
+                    bset.confs.append([])
+                    bset.final_sig.append(None)
+                    bset.final_conf.append(0.0)
+                bsets[s.rid] = bset
+            pends = {s.rid: list(s.tgt.pending) for s in branchers}
+            tlg, tfeats = self._ingest(
+                self.tgt_dec,
+                [(s.tgt, ("t", s.rid), s.tgt.pending + s.chunk)
+                 for s in branchers])
+            npend_l = np.zeros(B, np.int32)
+            gch_l = np.zeros(B, np.int32)
+            ks_l = np.ones(B, np.int32)
+            trows = np.full(B, self.tgt_dec.n_rows, np.int32)  # OOB pad
+            ctr_v = np.zeros(B, np.int32)
+            cq_rows, ct_rows = [], []
+            zero_q = jnp.zeros((CH, self.dcfg.vocab_size), jnp.float32)
+            for i, s in enumerate(branchers):
+                npend_l[i] = len(pends[s.rid])
+                gch_l[i] = len(s.chunk)
+                ks_l[i] = ks[s.rid]
+                trows[i] = s.tgt.row
+                ctr_v[i] = s.ctr
+                if s.chunk_q:
+                    cq = jnp.stack(list(s.chunk_q)
+                                   + [s.chunk_q[-1]] * (CH - len(s.chunk_q)))
+                else:
+                    cq = zero_q
+                cq_rows.append(cq)
+                ct = np.zeros(CH, np.int32)
+                ct[:len(s.chunk)] = s.chunk
+                ct_rows.append(ct)
+            cq_rows += [zero_q] * (B - len(branchers))
+            ct_rows += [np.zeros(CH, np.int32)] * (B - len(branchers))
+            with DL.annotate("branch_verify"):
+                packet_dev = DL.branch_verify(
+                    tlg, jnp.asarray(trows), jnp.asarray(npend_l),
+                    jnp.asarray(gch_l), jnp.stack(cq_rows),
+                    jnp.asarray(np.stack(ct_rows)), jnp.asarray(cands),
+                    jnp.asarray(ks_l), qb_stack, jnp.asarray(rid_l),
+                    jnp.asarray(ctr_v), self._key, CH=CH, K=K,
+                    ttemp=self._tt, dtemp=self._dt, stemp=self._st,
+                    kernel=self._use_kernel,
+                    interpret=self._kernel_interpret, mesh=self.mesh)
+            for s in branchers:
+                s.ctr += self._W
+        wall_disp = rec.now()
+
+        # ---- PHASE A: ONE shared draft dispatch for every row ----
+        sig: Dict[int, int] = {}
+        for s in serial:
+            e_tok = s.dft.pending[-1] if s.dft.pending else s.tgt.pending[-1]
+            sig[s.rid] = (self._hrad_signal(s, e_tok)
+                          if self.ecfg.use_hrad else 1)
+            s.chunk, s.chunk_q = [], []
+
+        reals: List[Tuple[_Stream, Any, List[int]]] = []
+        for s in serial:
+            reals.append((s.dft, ("d", s.rid), list(s.dft.pending)))
+            s.dft.pending = []
+        for s in branchers:
+            bset = bsets[s.rid]
+            for i, st in enumerate(bset.streams):
+                # the chunk never entered the parent's cache: each lane
+                # ingests it plus its own candidate (win.ing then equals
+                # the committed count after an adopt — _branch_verdict and
+                # _prune_draft work unchanged)
+                reals.append((st, self._bkey(s.rid, i),
+                              list(s.chunk) + [int(bset.cands[i])]))
+            s.stats.draft_tokens += 1      # candidate ingest
+        T = DL.bucket(max(len(t) for _, _, t in reals) + G)
+        toks = np.zeros((n_d, T), np.int32)
+        nreal = np.zeros(n_d, np.int32)
+        last = np.zeros(n_d, np.int32)
+        pos = np.minimum(self.dft_dec.row_pos,
+                         self.dft_dec.max_len - T).astype(np.int32)
+        for st, key, t in reals:
+            self._pool_of(key).extend(key, len(t))
+            if st.ing + T > self.dft_dec.max_len:
+                raise RuntimeError(f"row {st.row} overflows max_len")
+            toks[st.row, :len(t)] = t
+            nreal[st.row] = len(t)
+            last[st.row] = len(t) - 1
+            pos[st.row] = st.ing
+        lg, dfeats = self.dft_dec.step_draft(
+            toks, pos, nreal, self.draft_heads["mask_embed"])
+        for st, _, t in reals:
+            st.ing += len(t)
+            self.dft_dec.row_pos[st.row] = st.ing
+        rids = np.zeros(n_d, np.int32)
+        ctrs = np.zeros(n_d, np.int32)
+        for s in serial:
+            rids[s.dft.row] = s.rid
+            ctrs[s.dft.row] = s.ctr
+        for s in branchers:
+            for i, st in enumerate(bsets[s.rid].streams):
+                rids[st.row] = s.rid
+                ctrs[st.row] = s.ctr + i * gb
+        tok_stack, q_full, packed = DL.draft_chunk(
+            lg, dfeats, self.dp["final_norm"], self.draft_heads["heads"],
+            jnp.asarray(last), jnp.asarray(rids), jnp.asarray(ctrs),
+            self._key, g=G, dtemp=self._dt, stemp=self._st,
+            eps=self.dcfg.norm_eps, cap=self.dcfg.final_softcap,
+            mesh=self.mesh)
+        pkt = self._fetch(packed)          # (n_d, G+1, 2) [token, conf]
+        ticks = 1
+
+        # post-hoc stop rules, serial rows: confidences for every position
+        # are on host — pick the stop point directly, no optimistic ingest
+        for s in serial:
+            row = s.dft.row
+            g_i = g_of[s.rid]
+            if sig[s.rid] == 0:
+                stop_j = 0
+            elif sig[s.rid] == 1:
+                stop_j = next((j for j in range(g_i)
+                               if float(pkt[row, j, 1]) < eps_of[s.rid]),
+                              g_i)
+            else:
+                stop_j = g_i
+            s.chunk = [int(pkt[row, j, 0]) for j in range(stop_j)]
+            s.chunk_q = [q_full[j, row] for j in range(stop_j)]
+            s.q_b = q_full[stop_j, row]
+            s.q_b_conf = float(pkt[row, stop_j, 1])
+            s.ctr += stop_j
+            s.stats.draft_tokens += stop_j + 1
+            if rec.enabled:
+                rec.spec(rid=s.rid, round=rnd_idx, stage="draft",
+                         drafted=stop_j + 1, gamma=g_i,
+                         eps_stop=(sig[s.rid] == 1 and stop_j < g_i),
+                         hrad=(sig[s.rid] if self.ecfg.use_hrad else None),
+                         pred=(s.pdec.obs() if s.pdec is not None
+                               else None),
+                         t=self.clock)
+        # branch lanes: continuation tokens/confidences off the same packet
+        for s in branchers:
+            bset = bsets[s.rid]
+            for i, st in enumerate(bset.streams):
+                row = st.row
+                bset.conts[i] = [int(pkt[row, j, 0]) for j in range(gb)]
+                bset.cont_q[i] = [q_full[j, row] for j in range(gb)]
+                bset.confs[i] = [float(pkt[row, j, 1]) for j in range(gb)]
+                bset.final_sig[i] = q_full[gb, row]
+                bset.final_conf[i] = float(pkt[row, gb, 1])
+            s.stats.draft_tokens += gb
+            s.ctr += len(bset.streams) * gb
+
+        # ---- PHASE B: fetch the verdict packet, commit per brancher ----
+        wall_draft1 = rec.now()
+        committed: Dict[int, int] = {}
+        n_target = 1 if branchers else 0
+        kind = "parallel" if (branchers and self.ecfg.use_branch) \
+            else "serial"
+        ndisp = self.dft_dec.n_calls + self.tgt_dec.n_calls - calls0
+        now = self.clock + self.cost.round_cost((kind, ticks, n_target,
+                                                 ndisp))
+        wall_vfetch = wall_draft1
+        if branchers:
+            pk = self._fetch(packet_dev)
+            wall_vfetch = rec.now()
+            for i, s in enumerate(branchers):
+                s.tgt.pending = []
+                before = min(len(s.out), s.max_new)
+                self._branch_verdict(s, bsets[s.rid], pk[i], tfeats,
+                                     len(pends[s.rid]), now)
+                committed[s.rid] = min(len(s.out), s.max_new) - before
+        for s in serial:
+            s.mode = "branch"
+        if rec.enabled:
+            wall1 = rec.now()
+            rec.span("draft", wall_disp, wall_draft1, engine=self.name,
+                     ticks=ticks)
+            if branchers:
+                rec.span("verify", wall0, wall_vfetch, engine=self.name,
+                         batch=len(branchers))
+                rec.span("commit", wall_vfetch, wall1, engine=self.name)
+            rec.round(engine=self.name, index=rnd_idx, mode=kind,
+                      draft_steps=ticks, target_calls=n_target,
+                      batch=len(seqs), dispatches=ndisp,
+                      wall0=wall0, wall1=wall1,
+                      t0=self.clock, t1=now)
+        self._finish_round(kind, ticks, n_target, ndisp)
         return {"committed": committed, "preempted": preempted}
 
     # --------------------------------------------------- verdict (packet)

@@ -39,12 +39,13 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.kernels import verify_accept as _va
+from repro.models import layers as _L
 from repro.runtime import sampling as S
 
 __all__ = ["bucket", "prefill_bucket", "kernel_route", "tick_sample",
-           "masked_token_column", "compose_verify_tokens", "sps_verify",
-           "draw_cands", "branch_verify", "set_trace_annotations",
-           "annotate"]
+           "draft_chunk", "masked_token_column", "compose_verify_tokens",
+           "sps_verify", "draw_cands", "branch_verify",
+           "set_trace_annotations", "annotate"]
 
 # jax.profiler named-range annotations around the loop's dispatch sites.
 # Off by default — ``annotate`` returns a nullcontext, so the hot path pays
@@ -171,6 +172,63 @@ def tick_sample(lg: jax.Array, last: jax.Array, rids: jax.Array,
     packed = jnp.stack([tok.astype(jnp.float32), sg.max(-1)], axis=-1)
     tok, packed = _replicated((tok, packed), mesh)
     return tok, sl, packed
+
+
+@functools.partial(jax.jit, static_argnames=("g", "dtemp", "stemp", "eps",
+                                             "cap", "mesh"))
+def draft_chunk(lg: jax.Array, feats: jax.Array, final_norm: jax.Array,
+                heads: jax.Array, last: jax.Array, rids: jax.Array,
+                ctrs: jax.Array, base_key, *, g: int, dtemp: float,
+                stemp: float, eps: float = 1e-6, cap=None, mesh=None):
+    """One fused parallel-draft chunk — ``tick_sample``'s single-dispatch
+    twin (DESIGN.md §7.12).  Consumes ONE draft forward that ingested each
+    row's pending tokens plus ``g`` masked draft slots.
+
+    All arrays are indexed BY DECODER ROW: lg (n_rows, T, V) the forward's
+    logits, feats (n_rows, T, D) its final-layer (pre-final-norm) hidden
+    states, last (n_rows,) the last REAL token column — slot j (1..g) rides
+    at column ``last + j``.  final_norm (D,) and heads (K, D, V) are the
+    draft model's norm scale and the multi-token head stack (K >= g).
+
+    Distribution layout: entry 0 is the AR distribution at ``last`` —
+    exactly sequential tick 1's distribution — and entry i (1 <= i <= g) is
+    head i applied to slot i's hidden state.  Chunk token i is sampled from
+    entry i-1 with the uniform at counter offset i-1: the SAME (rid, ctr)
+    coordinates g sequential ticks would consume, so the engine advances
+    each row's counter by its own chunk length exactly as before and
+    verification's uniform block is untouched.  Tokens are independent
+    given the prefix (entry i never sees tokens 1..i-1) — that is the draft
+    *distribution* difference parallel mode is allowed; the verifier
+    consumes q_stack unchanged and stays lossless.
+
+    Returns (tok_stack (g, n_rows) i32 device, q_stack (g+1, n_rows, V) f32
+    raw logits device — entries 0..g-1 feed ``sps_verify``/``branch_verify``
+    unchanged, entry g is the next-position signal distribution (SpecBranch
+    q_b / branch-lane final signal), packed (n_rows, g+1, 2) f32
+    [token, signal-confidence] — the one host packet for stop rules; row g
+    carries (-1, conf) since entry g is never sampled).
+    """
+    n = lg.shape[0]
+    ar = jnp.take_along_axis(
+        lg, last.astype(jnp.int32)[:, None, None], 1)[:, 0]     # (n, V)
+    j = jnp.arange(1, g + 1, dtype=jnp.int32)[None]
+    sidx = jnp.clip(last.astype(jnp.int32)[:, None] + j, 0,
+                    feats.shape[1] - 1)
+    hs = jnp.take_along_axis(feats, sidx[..., None], 1)         # (n, g, D)
+    hn = _L.rms_norm(hs, final_norm, eps)
+    hlg = jnp.einsum("ngd,gdv->ngv", hn.astype(jnp.float32),
+                     heads[:g].astype(jnp.float32))
+    hlg = _L.softcap(hlg, cap)
+    q_all = jnp.concatenate([ar.astype(jnp.float32)[:, None], hlg], axis=1)
+    qp = S.probs_from_logits(q_all[:, :g], dtemp)               # (n, g, V)
+    u = S.uniform_grid(base_key, rids, ctrs, g)                 # (n, g)
+    tok = S.categorical_from_uniform(qp, u)                     # (n, g)
+    conf = S.probs_from_logits(q_all, stemp).max(-1)            # (n, g+1)
+    tokf = jnp.concatenate(
+        [tok.astype(jnp.float32), jnp.full((n, 1), -1.0, jnp.float32)], 1)
+    packed = jnp.stack([tokf, conf], axis=-1)                   # (n, g+1, 2)
+    tok_stack, packed = _replicated((tok.T, packed), mesh)
+    return tok_stack, q_all.transpose(1, 0, 2), packed
 
 
 @jax.jit

@@ -74,6 +74,7 @@ class ServingMetrics:
         self.rounds = 0
         self.preemptions = 0
         self.step_walls: List[float] = []          # wall seconds per round
+        self.dispatch_samples: List[int] = []      # device dispatches/round
         self._wall0 = time.time()
         self._reg: Optional[MetricsRegistry] = None
 
@@ -114,16 +115,23 @@ class ServingMetrics:
             self._reg.counter("serving_preemptions_total").inc()
 
     def on_round(self, occupancy: float,
-                 step_wall: Optional[float] = None) -> None:
+                 step_wall: Optional[float] = None,
+                 dispatches: Optional[int] = None) -> None:
         self.rounds += 1
         self.occupancy_samples.append(occupancy)
         if step_wall is not None:
             self.step_walls.append(step_wall)
+        if dispatches is not None:
+            self.dispatch_samples.append(int(dispatches))
         if self._reg is not None:
             self._reg.counter("serving_rounds_total").inc()
             self._reg.histogram("serving_pool_occupancy").observe(occupancy)
             if step_wall is not None:
                 self._reg.histogram("serving_step_wall_s").observe(step_wall)
+            if dispatches is not None:
+                self._reg.counter("serving_dispatches_total").inc(dispatches)
+                self._reg.histogram(
+                    "serving_round_dispatches").observe(dispatches)
 
     # ------------------------------------------------------------ summary
     def summary(self, total_cost: float, pool_stats: Optional[dict] = None,
@@ -152,6 +160,11 @@ class ServingMetrics:
         if self.step_walls:
             out["step_wall_p50"] = percentile(self.step_walls, 50)
             out["step_wall_p95"] = percentile(self.step_walls, 95)
+        if self.dispatch_samples:
+            # device dispatches per engine round (DESIGN.md §7.12): the
+            # single-pass parallel drafting target is 2 (draft + verify)
+            out["dispatches_per_round"] = (sum(self.dispatch_samples)
+                                           / len(self.dispatch_samples))
         if transfer is not None:
             total = transfer.get("host_transfer_bytes", 0)
             out["host_transfer_bytes"] = total

@@ -12,6 +12,7 @@ Two pairs mirror the paper's regimes:
 """
 from __future__ import annotations
 
+import hashlib
 import os
 from typing import Tuple
 
@@ -21,7 +22,8 @@ from repro.data.synthetic import ZipfMarkov
 from repro.models import model as M
 from repro.models.config import ModelConfig, dense_pattern
 from repro.training import checkpoint as ckpt
-from repro.training.train import TrainConfig, train_lm
+from repro.training.train import (TrainConfig, train_draft_heads,
+                                  train_lm)
 from repro.training.optim import AdamWConfig
 
 CACHE_DIR = os.environ.get("REPRO_PAIR_CACHE", ".cache/pairs")
@@ -69,6 +71,47 @@ def _get(cfg: ModelConfig, steps: int, seed: int):
     params, _ = _train(cfg, steps, seed)
     ckpt.save(path, params)
     return params
+
+
+def _head_cache_key(cfg: ModelConfig, K: int, steps: int, seed: int) -> str:
+    """Cache key for trained draft heads.  MUST hash the full head
+    configuration — head count K AND the head architecture (d_model /
+    vocab / norm-and-softcap settings of the base the heads read) — not
+    just the base model's name: two head sets over the same base with a
+    different K (or a base whose arch changed under the same name) are
+    different parameter pytrees, and a stale .npz would either fail to
+    load or, worse, silently restore mis-shaped heads."""
+    arch = (f"{cfg.name}:L{cfg.num_layers}:d{cfg.d_model}"
+            f":v{cfg.vocab_size}:eps{cfg.norm_eps}"
+            f":cap{cfg.final_softcap}:K{K}:s{steps}:seed{seed}")
+    return hashlib.sha256(arch.encode()).hexdigest()[:16]
+
+
+def draft_heads_for(kind: str = "misaligned", K: int = 4,
+                    steps: int = 200, seed: int = 11) -> dict:
+    """Trained multi-position draft heads (DESIGN.md §7.12) for the draft
+    model of ``get_pair(kind)``, cached under a key that hashes the head
+    configuration (see _head_cache_key)."""
+    dp, dcfg, _, _ = get_pair(kind)
+    path = os.path.join(
+        CACHE_DIR, f"heads-{_head_cache_key(dcfg, K, steps, seed)}.npz")
+    template = jax.tree.map(
+        lambda s: jax.numpy.zeros(s.shape, s.dtype),
+        jax.eval_shape(lambda: M.init_draft_heads(
+            jax.random.PRNGKey(0), dcfg, K)))
+    if os.path.exists(path):
+        try:
+            return ckpt.load(path, template)
+        except Exception:
+            pass
+    zm = ZipfMarkov(vocab=VOCAB, seed=7)
+    data = zm.batch_iter(16, 64, seed=seed)
+    tc = TrainConfig(steps=steps, batch=16, seq_len=64,
+                     optim=AdamWConfig(lr=1e-3, total_steps=steps))
+    dhead, _ = train_draft_heads(dp, dcfg, data, K, tc, seed=seed,
+                                 verbose=False)
+    ckpt.save(path, dhead)
+    return dhead
 
 
 def get_pair(kind: str = "misaligned", steps: int = 400

@@ -73,6 +73,91 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
     return jax.jit(step)
 
 
+def draft_head_loss(dhead, base_params, cfg: ModelConfig,
+                    batch_tokens: jax.Array, anchors: Tuple[int, ...],
+                    K: int) -> Tuple[jax.Array, Dict]:
+    """CE loss for K parallel-position draft heads (DESIGN.md §7.12).
+
+    One forward carries the real sequence plus ``len(anchors)`` groups of K
+    masked slot columns appended at the end of the frame.  The slot for
+    anchor ``a``, offset ``i`` rides at RoPE position ``a + 1 + i`` with
+    its query clamped to the ``a`` horizon and its key stored invisible —
+    exactly the inference-time layout of the single-pass draft forward —
+    and head ``i`` is scored against the token at position ``a + 2 + i``.
+    Slot groups cannot interfere with each other (or with the real
+    columns): slot keys are hidden from every query.
+    """
+    B, Lp = batch_tokens.shape
+    A = len(anchors)
+    anchor_of = jnp.repeat(jnp.asarray(anchors, jnp.int32), K)   # (A*K,)
+    off_of = jnp.tile(jnp.arange(K, dtype=jnp.int32), A)         # (A*K,)
+    t = jnp.arange(Lp + A * K, dtype=jnp.int32)
+    cols = t >= Lp
+    slot_pos = jnp.concatenate([t[:Lp], anchor_of + 1 + off_of])
+    ctx = jnp.concatenate([t[:Lp], anchor_of])
+    sidx = jnp.concatenate([jnp.zeros(Lp, jnp.int32), off_of])
+    toks = jnp.concatenate(
+        [batch_tokens, jnp.zeros((B, A * K), batch_tokens.dtype)], axis=1)
+    bc = lambda v: jnp.broadcast_to(v[None], (B, Lp + A * K))
+    pdraft = {"cols": bc(cols), "ctx": bc(ctx), "sidx": bc(sidx),
+              "embed": dhead["mask_embed"]}
+    _, _, aux = M.forward(base_params, cfg, toks, positions=bc(slot_pos),
+                          feature_mode="all", pdraft=pdraft)
+    slot_feats = aux["features"][-1][:, Lp:, :].reshape(
+        B, A, K, -1)
+    lg = M.draft_head_logits(base_params, cfg, dhead, slot_feats)
+    lab = batch_tokens[:, jnp.asarray(anchors, jnp.int32)[:, None] + 2
+                       + jnp.arange(K, dtype=jnp.int32)[None]]   # (B, A, K)
+    lf = lg.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(lab, lf.shape[-1], dtype=lf.dtype)
+    nll = lse - jnp.einsum("bakv,bakv->bak", lf, onehot)
+    loss = nll.mean()
+    return loss, {"nll": loss}
+
+
+def train_draft_heads(base_params, cfg: ModelConfig,
+                      data_iter: Iterator[np.ndarray], K: int,
+                      tcfg: TrainConfig, seed: int = 0,
+                      verbose: bool = True) -> Tuple[Any, Dict[str, float]]:
+    """Train K parallel-position draft heads over a FROZEN base draft model
+    (single-pass parallel drafting, DESIGN.md §7.12).  Only ``mask_embed``
+    and ``heads`` receive gradients; the base never moves, so the AR
+    distribution (= chunk position 0 and the sequential-mode drafter) is
+    untouched.  Returns (dhead, metrics)."""
+    from repro.models import model as MM
+    if any(m == "mamba" for m, _ in cfg.pattern):
+        raise ValueError("draft heads need an attention-only base: "
+                         f"{cfg.pattern}")
+    dhead = MM.init_draft_heads(jax.random.PRNGKey(seed), cfg, K)
+    opt_state = optim.init(dhead)
+    # evenly spaced static anchors; labels reach a + K + 1, so the last
+    # admissible anchor is seq_len - K - 2
+    hi = tcfg.seq_len - K - 2
+    assert hi >= 1, f"seq_len {tcfg.seq_len} too short for K={K}"
+    n_anchor = min(8, hi)
+    anchors = tuple(int(round(1 + i * (hi - 1) / max(n_anchor - 1, 1)))
+                    for i in range(n_anchor))
+
+    @jax.jit
+    def step(dh, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            draft_head_loss, has_aux=True)(dh, base_params, cfg, batch,
+                                           anchors, K)
+        dh, opt_state = optim.apply(tcfg.optim, dh, grads, opt_state)
+        return dh, opt_state, loss, metrics
+
+    loss = None
+    t0 = time.time()
+    for i in range(tcfg.steps):
+        batch = jnp.asarray(next(data_iter))[:, :tcfg.seq_len]
+        dhead, opt_state, loss, _ = step(dhead, opt_state, batch)
+        if verbose and (i % tcfg.log_every == 0 or i == tcfg.steps - 1):
+            print(f"  head step {i:4d}  loss={float(loss):.4f}  "
+                  f"({time.time()-t0:.1f}s)")
+    return dhead, {"final_loss": float(loss)}
+
+
 def train_lm(cfg: ModelConfig, data_iter: Iterator[np.ndarray],
              tcfg: TrainConfig, seed: int = 0, verbose: bool = True
              ) -> Tuple[Any, Dict[str, float]]:

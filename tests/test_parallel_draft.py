@@ -1,0 +1,302 @@
+"""Single-pass parallel drafting (DESIGN.md §7.12): protocol equivalence.
+
+The parallel drafter may only change the draft DISTRIBUTION, never the
+protocol: verdict packets, per-row PRNG consumption and batch-composition
+independence are pinned to the sequential drafter.  Greedy losslessness
+(committed stream == the autoregressive reference, i.e. replay-from-
+scratch) must hold on every engine x backend combination, and the
+sequential mode must be bit-identical whether or not draft heads are
+supplied (they are dead weight there).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, dense_pattern
+from repro.runtime.cost_model import CostModel
+from repro.runtime.engines import EngineConfig, SpSEngine
+from repro.runtime.runner import greedy_reference
+from repro.runtime.specbranch import SpecBranchEngine
+from repro.serving import (BatchedSpecBranchEngine, BatchedSpSEngine,
+                           ContinuousBatchScheduler, ServeRequest)
+
+VOCAB = 64
+K_HEADS = 4
+
+
+def _cfg(name, layers, d, heads):
+    return ModelConfig(name=name, family="dense", num_layers=layers,
+                       d_model=d, num_heads=heads,
+                       num_kv_heads=max(1, heads // 2), d_ff=4 * d,
+                       vocab_size=VOCAB, pattern=dense_pattern(0),
+                       dtype="float32")
+
+
+def _ecfg(**kw):
+    kw.setdefault("gamma", 3)
+    kw.setdefault("c", 4.0)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("epsilon", 0.4)
+    kw.setdefault("signal_temperature", 0.5)
+    kw.setdefault("k_max", 3)
+    kw.setdefault("max_len", 160)
+    return EngineConfig(**kw)
+
+
+_PAIR = {}
+
+
+def _pair():
+    """Module-cached tiny pair: one set of params keeps XLA's jit cache
+    warm across hypothesis examples (same shapes -> no recompiles)."""
+    if not _PAIR:
+        tcfg = _cfg("pd-t", 2, 64, 2)
+        dcfg = _cfg("pd-d", 1, 32, 2)
+        tp = M.init_params(jax.random.PRNGKey(0), tcfg)
+        dp = M.init_params(jax.random.PRNGKey(1), dcfg)
+        dhead = M.init_draft_heads(jax.random.PRNGKey(7), dcfg, K_HEADS)
+        _PAIR["v"] = (dp, dcfg, tp, tcfg, dhead)
+    return _PAIR["v"]
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return _pair()
+
+
+def _prompts(n, rng_seed=3, lo=4, hi=9):
+    rng = np.random.default_rng(rng_seed)
+    return [list(map(int, rng.integers(0, VOCAB, size=int(n_))))
+            for n_ in rng.integers(lo, hi, size=n)]
+
+
+_ENGINES = {}
+
+
+def _engine(cls, ecfg_kw, dhead=None, max_batch=4, backend="paged"):
+    """Module-cached batched engines: every instantiation rebuilds the
+    per-instance jits (~tens of seconds of XLA compile on CPU), so the
+    property tests reuse one engine per distinct configuration — a
+    drained engine accepts fresh requests (continuous batching has no
+    run boundary)."""
+    key = (cls.__name__, tuple(sorted(ecfg_kw.items())),
+           dhead is not None, max_batch, backend)
+    if key not in _ENGINES:
+        dp, dcfg, tp, tcfg, dh = _pair()
+        _ENGINES[key] = cls(dp, dcfg, tp, tcfg, _ecfg(**ecfg_kw),
+                            max_batch=max_batch, page_size=4,
+                            attn_backend=backend,
+                            draft_heads=(dh if dhead is not None else None),
+                            debug_check=True)
+    return _ENGINES[key]
+
+
+_SEQ_ENGINES = {}
+
+
+def _seq_engine(cls):
+    """Module-cached sequential-runtime engines in parallel draft mode
+    (same compile-reuse rationale as _engine)."""
+    if cls.__name__ not in _SEQ_ENGINES:
+        dp, dcfg, tp, tcfg, dh = _pair()
+        _SEQ_ENGINES[cls.__name__] = cls(
+            dp, dcfg, tp, tcfg, _ecfg(draft_mode="parallel"),
+            draft_heads=dh)
+    return _SEQ_ENGINES[cls.__name__]
+
+
+def _serve(eng, prompts, n_new, n_new_of=None):
+    res = ContinuousBatchScheduler(eng).run(
+        [ServeRequest(rid=i, prompt=p,
+                      max_new_tokens=(n_new_of[i] if n_new_of else n_new))
+         for i, p in enumerate(prompts)])
+    assert eng.pool.pages_in_use == 0
+    return {i: res[i].tokens for i in range(len(prompts))}
+
+
+# ------------------------------------------------------ attend q_ctx unit
+def test_attend_q_ctx_clamps_visibility():
+    """A query at a future RoPE position with q_ctx = h attends exactly
+    the keys a query AT h would — parallel draft slots see the real
+    prefix only."""
+    from repro.models.layers import attend
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 1, 6, 2, 8
+    f32 = jax.numpy.float32
+    q = jax.numpy.asarray(rng.normal(size=(B, 1, H, hd)), dtype=f32)
+    ks = jax.numpy.asarray(rng.normal(size=(B, S, H, hd)), dtype=f32)
+    vs = jax.numpy.asarray(rng.normal(size=(B, S, H, hd)), dtype=f32)
+    kpos = jax.numpy.arange(S)[None, :]
+    h = 2
+    # reference: the same query placed AT position h (plain causal)
+    ref = attend(q, ks, vs, jax.numpy.full((B, 1), h), kpos)
+    # slot: query carries a future position but q_ctx clamps it to h
+    out = attend(q, ks, vs, jax.numpy.full((B, 1), S + 3), kpos,
+                 q_ctx=jax.numpy.full((B, 1), h))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # and without the clamp the future-positioned query sees more keys
+    far = attend(q, ks, vs, jax.numpy.full((B, 1), S + 3), kpos)
+    assert not np.allclose(np.asarray(far), np.asarray(ref))
+
+
+# ----------------------------------------------- sequential-mode bitwise
+def test_default_draft_mode_is_sequential():
+    assert EngineConfig().draft_mode == "sequential"
+
+
+def test_sequential_mode_ignores_heads_bitwise(pair):
+    """draft_mode='sequential' with draft_heads supplied must be bitwise
+    identical to the default engine — the heads are inert outside
+    parallel mode."""
+    prompts = _prompts(3)
+    for cls in (BatchedSpSEngine, BatchedSpecBranchEngine):
+        e0 = _engine(cls, {"temperature": 0.7})
+        e1 = _engine(cls, {"temperature": 0.7,
+                           "draft_mode": "sequential"}, dhead=True)
+        n0, n1 = len(e0.timeline), len(e1.timeline)
+        t0 = _serve(e0, prompts, 8)
+        t1 = _serve(e1, prompts, 8)
+        assert t0 == t1
+        assert e0.timeline[n0:] == e1.timeline[n1:]
+
+
+# -------------------------------------------------- parallel losslessness
+@pytest.mark.parametrize("cls", [BatchedSpSEngine, BatchedSpecBranchEngine])
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_batched_parallel_greedy_lossless(pair, cls, backend):
+    dp, dcfg, tp, tcfg, dhead = pair
+    prompts = _prompts(4)
+    refs = [greedy_reference(tp, tcfg, p, 8, max_len=160) for p in prompts]
+    eng = _engine(cls, {"draft_mode": "parallel"}, dhead=True,
+                  backend=backend)
+    n0 = len(eng.timeline)
+    toks = _serve(eng, prompts, 8)
+    for i, r in enumerate(refs):
+        assert toks[i] == r
+    if cls is BatchedSpSEngine:
+        # the tentpole: every SpS round is exactly 2 device dispatches
+        disp = [r[3] for r in eng.timeline[n0:] if len(r) > 3]
+        assert disp and all(d == 2 for d in disp)
+
+
+@pytest.mark.parametrize("cls", [SpSEngine, SpecBranchEngine])
+def test_sequential_engine_parallel_greedy_lossless(pair, cls):
+    dp, dcfg, tp, tcfg, dhead = pair
+    eng = _seq_engine(cls)
+    for i, p in enumerate(_prompts(3)):
+        ref = greedy_reference(tp, tcfg, p, 8, max_len=160)
+        r = eng.generate(p, 8, jax.random.PRNGKey(i))
+        assert r.tokens == ref
+
+
+def test_parallel_requires_heads_and_enough_of_them(pair):
+    dp, dcfg, tp, tcfg, dhead = pair
+    with pytest.raises(ValueError, match="draft_heads"):
+        SpSEngine(dp, dcfg, tp, tcfg, _ecfg(draft_mode="parallel"))
+    small = M.init_draft_heads(jax.random.PRNGKey(2), dcfg, 1)
+    with pytest.raises(ValueError, match="K=1"):
+        SpSEngine(dp, dcfg, tp, tcfg, _ecfg(draft_mode="parallel"),
+                  draft_heads=small)
+    with pytest.raises(ValueError, match="draft_mode"):
+        SpSEngine(dp, dcfg, tp, tcfg, _ecfg(draft_mode="bogus"))
+
+
+# ------------------------------------------------- hypothesis properties
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=2, max_value=4),
+       st.integers(min_value=3, max_value=10),
+       st.integers(min_value=0, max_value=1))
+def test_parallel_committed_prefix_matches_replay(seed, n_req, n_new,
+                                                  pred):
+    """Random accept/reject/rollback scripts (random prompts drive them)
+    under parallel mode: the committed stream equals replay-from-scratch
+    (the AR reference), for the sequential runtimes and both batched
+    engines, with ragged per-request lengths and the history predictor
+    on/off.  The backend alternates by
+    seed so both dense and paged see random scripts without doubling the
+    run."""
+    dp, dcfg, tp, tcfg, dhead = _pair()
+    # predictor-on runs stay on the default backend to bound the number
+    # of distinct (and expensively compiled) engine configurations
+    backend = "paged" if pred else ("dense", "paged")[seed % 2]
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(0, VOCAB, size=int(n))))
+               for n in rng.integers(3, 9, size=n_req)]
+    # ragged glens: each request gets its own budget
+    news = [int(n) for n in rng.integers(1, n_new + 1, size=n_req)]
+    refs = [greedy_reference(tp, tcfg, p, nn, max_len=160)
+            for p, nn in zip(prompts, news)]
+    kw = {"draft_mode": "parallel"}
+    if pred:
+        kw["spec_predictor"] = "on"
+    for cls in (BatchedSpSEngine, BatchedSpecBranchEngine):
+        toks = _serve(_engine(cls, kw, dhead=True, backend=backend),
+                      prompts, n_new, n_new_of=news)
+        for i, r in enumerate(refs):
+            assert toks[i] == r, (cls.__name__, backend, i)
+    # the sequential runtimes replay the same random scripts one by one
+    for cls in (SpSEngine, SpecBranchEngine):
+        eng = _seq_engine(cls)
+        for i, (p, nn) in enumerate(zip(prompts, news)):
+            r = eng.generate(p, nn, jax.random.PRNGKey(seed + i))
+            assert r.tokens == refs[i], (cls.__name__, "sequential", i)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_parallel_batch_composition_independence(seed):
+    """Stochastic parallel decoding is a per-row function of (rid, ctr):
+    running the same requests one-at-a-time or all together yields the
+    same streams (folded-key PRNG, DESIGN.md §7.2/7.12).  The
+    temperature stays fixed — it is baked into the jitted sampling
+    paths, and varying it would recompile every engine per example."""
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(0, VOCAB, size=int(n))))
+               for n in rng.integers(3, 8, size=3)]
+    kw = {"temperature": 0.7, "draft_mode": "parallel"}
+    for cls in (BatchedSpSEngine, BatchedSpecBranchEngine):
+        solo = _serve(_engine(cls, kw, dhead=True, max_batch=1),
+                      prompts, 6)
+        full = _serve(_engine(cls, kw, dhead=True, max_batch=4),
+                      prompts, 6)
+        assert solo == full, cls.__name__
+
+
+# --------------------------------------------------------- cost model
+def test_cost_model_three_tuples_bitwise_unchanged():
+    cm = CostModel(c=4.0, t=1.0)
+    assert cm.round_cost(("serial", 3, 1)) == 3 * 1.0 + 1 * 4.0
+    assert cm.round_cost(("parallel", 3, 2)) == max(3.0, 8.0)
+    assert cm.round_cost(("target", 0, 1)) == 4.0
+    # t_dispatch prices the implied 1-forward-per-step dispatch count
+    cm2 = CostModel(c=4.0, t=1.0, t_dispatch=0.5)
+    assert cm2.round_cost(("serial", 3, 1)) == 7.0 + 4 * 0.5
+
+
+def test_cost_model_dispatch_tuples():
+    cm = CostModel(c=4.0, t=1.0, t_dispatch=0.5)
+    # parallel draft chunk: 2 dispatches, 1 draft forward regardless of g
+    assert cm.round_cost(("serial", 3, 1, 2)) == 1.0 + 4.0 + 2 * 0.5
+    # draft-only SpecBranch round in parallel mode: 1 dispatch, no verify
+    assert cm.round_cost(("serial", 3, 0, 1)) == 1.0 + 0.0 + 0.5
+    # with t_dispatch = 0 the 4th element only changes the draft term
+    cm0 = CostModel(c=4.0, t=1.0)
+    assert cm0.round_cost(("serial", 3, 1, 2)) == 1.0 + 4.0
+
+
+# -------------------------------------------------------- cache keying
+def test_head_cache_key_hashes_head_config():
+    from repro.training.pairs import DRAFT_MIS_CFG, _head_cache_key
+    base = _head_cache_key(DRAFT_MIS_CFG, 4, 200, 11)
+    assert _head_cache_key(DRAFT_MIS_CFG, 6, 200, 11) != base
+    assert _head_cache_key(DRAFT_MIS_CFG, 4, 400, 11) != base
+    assert _head_cache_key(DRAFT_MIS_CFG, 4, 200, 12) != base
+    import dataclasses
+    other = dataclasses.replace(DRAFT_MIS_CFG, d_model=64)
+    assert _head_cache_key(other, 4, 200, 11) != base
+    assert _head_cache_key(DRAFT_MIS_CFG, 4, 200, 11) == base
