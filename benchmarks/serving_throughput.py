@@ -101,11 +101,17 @@ def run_sequential(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
 
 def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
                 max_batch, attn_backend="paged", rec=NULL_RECORDER,
-                mesh=None, draft_heads=None) -> dict:
+                mesh=None, draft_heads=None, prefix_cache=False,
+                t_prefill=0.0) -> dict:
     eng = BatchedSpecBranchEngine(dp, dcfg, tp, tcfg, ecfg,
                                   max_batch=max_batch, page_size=16,
                                   attn_backend=attn_backend, mesh=mesh,
-                                  draft_heads=draft_heads)
+                                  draft_heads=draft_heads,
+                                  prefix_cache=prefix_cache)
+    # price prefill on the modeled clock (prefix-cache cells set this for
+    # BOTH cache-on and cache-off, so the TTFT comparison is apples to
+    # apples; the default 0.0 keeps every other cell bitwise unchanged)
+    eng.cost.t_prefill = t_prefill
     eng.set_recorder(rec)
     sched = ContinuousBatchScheduler(eng)
     reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=n_new,
@@ -113,16 +119,24 @@ def run_batched(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, interval,
             for i, p in enumerate(prompts)]
     sched.run(reqs)
     rep = sched.report()
-    return {k: rep[k] for k in
-            ("total_tokens", "total_cost", "tokens_per_cost",
-             "ttft_p50", "ttft_p95", "itl_p50", "itl_p95",
-             "pool_occupancy_peak", "preemptions", "rounds",
-             "host_transfer_bytes", "host_fetches",
-             "per_step_transfer_bytes", "step_wall_p50",
-             "step_wall_p95")} | {
+    out = {k: rep[k] for k in
+           ("total_tokens", "total_cost", "tokens_per_cost",
+            "ttft_p50", "ttft_p95", "itl_p50", "itl_p95",
+            "pool_occupancy_peak", "preemptions", "rounds",
+            "host_transfer_bytes", "host_fetches",
+            "per_step_transfer_bytes", "step_wall_p50",
+            "step_wall_p95")} | {
         "reclaimed_speculative_pages":
             rep["pool"]["reclaimed_speculative_pages"],
         "dispatches_per_round": rep.get("dispatches_per_round")}
+    # physical occupancy counts each shared page ONCE; the logical view
+    # sums table-bound pages, so logical - physical is the sharing win
+    for k in ("pool_logical_occupancy_peak", "shared_pages_peak"):
+        if k in rep:
+            out[k] = rep[k]
+    if "prefix_cache" in rep:
+        out["prefix_cache"] = rep["prefix_cache"]
+    return out
 
 
 def overhead_gate(dp, dcfg, tp, tcfg, ecfg, prompts, n_new, max_batch,
@@ -350,6 +364,130 @@ def draft_mode_sweep(dp, dcfg, tp, tcfg, args, prompts, out_path: str,
               f"{par['acceptance_rate']:.3f}")
 
 
+def prefix_cache_sweep(dp, dcfg, tp, tcfg, args, vocab, out_path: str,
+                       gate: bool = False, tol: float = 0.05) -> None:
+    """Prefix-cache sweep (DESIGN.md §7.13): two request traces through
+    the batched SpecBranch engine with the cross-request prefix cache off
+    vs on.
+
+      * **shared** — every request opens with the same long system prompt
+        (3 KV pages) and diverges in a short unique suffix, arriving far
+        enough apart that each admission sees the previous request's
+        published run;
+      * **nosharing** — same shape, fully distinct prompts (the cache can
+        only add overhead here).
+
+    Both cells of a pair price prefill identically on the modeled clock
+    (``t_prefill``; default cells leave it 0), so TTFT differences come
+    from WHAT was staged, not how it was priced.  Per cell: TTFT p50/p95,
+    prefill forwards, prefix hit/saved-token counts and the physical vs
+    logical pool occupancy peaks.  With ``gate``: exit 1 unless cache-on
+    cuts TTFT p50 on the shared trace AND holds no-sharing throughput
+    within ``tol`` — the CI bench-smoke gate."""
+    mb = args.batch_sizes[0]
+    ecfg = EngineConfig(gamma=args.gamma, c=args.c, temperature=0.0,
+                        epsilon=0.4, signal_temperature=0.5, max_len=512)
+    zm = ZipfMarkov(vocab=vocab, seed=7)
+    shared_prefix = list(map(int, zm.prompts(1, 48, seed=5)[0]))
+    suffixes = [list(map(int, p)) for p in zm.prompts(args.requests, 8,
+                                                      seed=11)]
+    traces = {
+        "shared": [shared_prefix + s for s in suffixes],
+        "nosharing": [list(map(int, p))
+                      for p in zm.prompts(args.requests, 56, seed=13)],
+    }
+    # arrivals far apart: request i retires (and publishes its prefix)
+    # before i+1 arrives, so every later shared admission can hit
+    interval = 400.0
+    t_prefill = 1.0
+    cells = {}
+    for tname, prompts in traces.items():
+        for cache in (False, True):
+            rec = TraceRecorder()
+            t0 = time.time()
+            rep = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
+                              args.new_tokens, interval, mb, rec=rec,
+                              attn_backend="paged", prefix_cache=cache,
+                              t_prefill=t_prefill)
+            reg = rec.registry
+            cell = {
+                "tokens_per_cost": rep["tokens_per_cost"],
+                "total_tokens": rep["total_tokens"],
+                "ttft_p50": rep["ttft_p50"],
+                "ttft_p95": rep["ttft_p95"],
+                "prefill_forwards":
+                    reg.counter("prefill_forwards_total").value,
+                # real tokens ingested across prefill forwards: a cached
+                # admission stages only its uncached suffix, so this —
+                # not the forward count, which is one target + one draft
+                # per solo admission either way — carries the rung win
+                "prefill_tokens":
+                    sum(e["tokens"] for e in rec.events
+                        if e["kind"] == "prefill"),
+                "pool_occupancy_peak": rep["pool_occupancy_peak"],
+                "pool_logical_occupancy_peak":
+                    rep.get("pool_logical_occupancy_peak"),
+                "shared_pages_peak": rep.get("shared_pages_peak"),
+                "wall_s": time.time() - t0,
+            }
+            if cache:
+                cell["prefix_cache"] = rep["prefix_cache"]
+            cells[f"{tname}_{'on' if cache else 'off'}"] = cell
+            print(f"trace={tname:9s} cache={'on ' if cache else 'off'}: "
+                  f"ttft p50 {cell['ttft_p50']:.1f}  "
+                  f"{cell['tokens_per_cost']:.3f} tok/cost  "
+                  f"prefill {cell['prefill_tokens']} tok / "
+                  f"{cell['prefill_forwards']} fwds")
+    s_off, s_on = cells["shared_off"], cells["shared_on"]
+    n_off, n_on = cells["nosharing_off"], cells["nosharing_on"]
+    report = {
+        "engine": "specbranch", "mode": "batched", "max_batch": mb,
+        "attn_backend": "paged", "requests": args.requests,
+        "new_tokens": args.new_tokens, "gamma": args.gamma, "c": args.c,
+        "shared_prefix_tokens": len(shared_prefix),
+        "arrival_interval": interval, "t_prefill": t_prefill,
+        "gate_tol": tol, "cells": cells,
+        "shared_ttft_ratio_on_vs_off":
+            s_on["ttft_p50"] / max(s_off["ttft_p50"], 1e-9),
+        "nosharing_throughput_ratio_on_vs_off":
+            n_on["tokens_per_cost"] / max(n_off["tokens_per_cost"], 1e-9),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, default=float)
+    print(f"wrote {out_path}")
+    if gate:
+        ok = True
+        if s_on["ttft_p50"] >= s_off["ttft_p50"]:
+            print(f"  FAIL: cache-on TTFT p50 {s_on['ttft_p50']:.1f} did "
+                  f"not cut cache-off {s_off['ttft_p50']:.1f} on the "
+                  f"shared-prompt trace")
+            ok = False
+        if s_on["prefill_tokens"] >= s_off["prefill_tokens"]:
+            print(f"  FAIL: cache-on staged prefill tokens "
+                  f"{s_on['prefill_tokens']} did not drop below "
+                  f"cache-off {s_off['prefill_tokens']}")
+            ok = False
+        hits = s_on.get("prefix_cache", {}).get("hits", 0)
+        if hits < args.requests - 1:
+            print(f"  FAIL: only {hits} prefix hits on the shared trace "
+                  f"(expected {args.requests - 1})")
+            ok = False
+        if n_on["tokens_per_cost"] < (1.0 - tol) * n_off["tokens_per_cost"]:
+            print(f"  FAIL: cache-on no-sharing throughput "
+                  f"{n_on['tokens_per_cost']:.3f} regressed >{tol:.0%} "
+                  f"below off {n_off['tokens_per_cost']:.3f}")
+            ok = False
+        if not ok:
+            sys.exit(1)
+        print("prefix-cache gate passed: shared TTFT p50 "
+              f"{s_off['ttft_p50']:.1f} -> {s_on['ttft_p50']:.1f} "
+              f"({hits} hits, "
+              f"{s_on['prefix_cache']['saved_tokens']} tokens bound "
+              f"zero-copy) at "
+              f"{report['nosharing_throughput_ratio_on_vs_off']:.3f}x "
+              "no-sharing throughput")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", default="random", choices=["random", "trained"])
@@ -399,6 +537,22 @@ def main() -> None:
     ap.add_argument("--draft-mode-margin", type=float, default=0.1,
                     help="max tolerated acceptance-rate drop for the "
                     "draft-mode gate (default 0.1)")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=["off", "on"],
+                    help="cross-request radix prefix cache for the main "
+                    "sweep's batched cells (DESIGN.md §7.13; paged "
+                    "backend only).  off is today's path, bit-for-bit")
+    ap.add_argument("--prefix-cache-sweep", default=None, metavar="JSON",
+                    help="also run the prefix-cache sweep: a shared-"
+                    "system-prompt trace and a no-sharing trace with the "
+                    "cache off vs on, reporting TTFT, prefill forwards, "
+                    "hit/saved-token counts and physical vs logical pool "
+                    "occupancy to JSON")
+    ap.add_argument("--prefix-cache-gate", action="store_true",
+                    help="with --prefix-cache-sweep: exit 1 unless "
+                    "cache-on cuts TTFT p50 (and prefill forwards) on "
+                    "the shared-prompt trace and holds no-sharing "
+                    "throughput within 5%% (CI smoke gate)")
     ap.add_argument("--attn-backend", default="paged",
                     choices=["dense", "paged"],
                     help="batched-cell KV storage (default: paged, the "
@@ -431,6 +585,9 @@ def main() -> None:
     if args.hybrid and args.pair != "random":
         ap.error("--hybrid selects its own (jamba-shaped) pair; "
                  "drop --pair " + args.pair)
+    if args.prefix_cache == "on" and args.attn_backend == "dense":
+        ap.error("--prefix-cache on needs --attn-backend paged (dense "
+                 "rows have no page runs to share)")
     if args.hybrid:
         from repro.training.pairs import hybrid_pair
         dp, dcfg, tp, tcfg = hybrid_pair("jamba-shaped")
@@ -480,7 +637,8 @@ def main() -> None:
             bat = run_batched(dp, dcfg, tp, tcfg, ecfg, prompts,
                               args.new_tokens, interval, mb,
                               attn_backend=args.attn_backend, mesh=mesh,
-                              draft_heads=draft_heads)
+                              draft_heads=draft_heads,
+                              prefix_cache=(args.prefix_cache == "on"))
             bat["wall_s"] = time.time() - t0
             cell = {
                 "max_batch": mb,
@@ -547,6 +705,11 @@ def main() -> None:
         draft_mode_sweep(dp, dcfg, tp, tcfg, args, prompts,
                          args.draft_mode_sweep, gate=args.draft_mode_gate,
                          margin=args.draft_mode_margin)
+
+    if args.prefix_cache_sweep:
+        prefix_cache_sweep(dp, dcfg, tp, tcfg, args, vocab,
+                           args.prefix_cache_sweep,
+                           gate=args.prefix_cache_gate)
 
     if args.check_baseline:
         if not os.path.exists(args.check_baseline):

@@ -35,6 +35,20 @@ acceptance rate) differs from the sequential oracle.  The default
 
   PYTHONPATH=src python -m repro.launch.serve --mode batched \
       --draft-mode parallel --metrics-out metrics.json
+
+Add ``--prefix-cache on`` (DESIGN.md §7.13) to share prompt-prefix KV
+pages across requests: admission binds the longest cached prefix
+zero-copy (a refcount bump on the COW pool, like a branch fork) and
+only the uncached suffix goes through bucketed prefill, so followers
+of a shared system prompt skip most of their TTFT.  Requires the paged
+backend (``--attn-backend paged``, the batched default — dense rows
+hold a private KV copy per request, so the CLI fails fast on that
+combination).  The report grows a ``prefix_cache`` block (hit rate,
+saved tokens, published/evicted runs).  The default ``off`` is
+bit-for-bit today's path:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode batched \
+      --prefix-cache on --metrics-out metrics.json
 """
 import os
 import sys

@@ -155,6 +155,7 @@ def run_batched(args, ecfg, prompts, rec=NULL_RECORDER) -> dict:
         pool_pages=args.pool_pages,
         swap_pages=args.swap_pages,
         attn_backend=args.attn_backend,
+        prefix_cache=(args.prefix_cache == "on"),
         mesh=mesh,
         draft_heads=load_draft_heads(args, ecfg))
     eng.set_recorder(rec)        # before the scheduler grabs engine.rec
@@ -187,6 +188,12 @@ def run_batched(args, ecfg, prompts, rec=NULL_RECORDER) -> dict:
           f"preempt={pool['reclaimed_preempt_pages']} "
           f"retire={pool['reclaimed_retire_pages']}  "
           f"(cow_copies={pool['cow_copies']})")
+    if "prefix_cache" in rep:
+        pc = rep["prefix_cache"]
+        print(f"prefix cache: hits={pc['hits']}/{pc['lookups']} "
+              f"saved_tokens={pc['saved_tokens']} "
+              f"published={pc['published_runs']} "
+              f"evicted={pc['evicted_runs']}")
     print(f"aggregate tokens/s (modeled, t=1): "
           f"{rep['tokens_per_cost']:.4f}")
     return rep
@@ -249,6 +256,15 @@ def main() -> None:
                     "kernel; SSM/hybrid configs ride per-row checkpoint "
                     "rings next to the pages).  dense keeps the N-row "
                     "reference caches — the equivalence oracle")
+    ap.add_argument("--prefix-cache", default="off",
+                    choices=["off", "on"],
+                    help="cross-request radix prefix cache over the COW "
+                    "page pool (batched + paged only, DESIGN.md §7.13): "
+                    "retired prompts publish their page-aligned KV runs "
+                    "into a token trie; admissions sharing that prefix "
+                    "bind the pages zero-copy and prefill only the "
+                    "uncached suffix.  off (default): today's path, "
+                    "bit-for-bit")
     ap.add_argument("--mesh", default=None, metavar="DP,TP",
                     help="serving device mesh (batched mode): DP-way data "
                     "parallelism over dense cache rows x TP-way tensor "
@@ -282,6 +298,17 @@ def main() -> None:
     if args.mode is None:
         args.mode = ("batched" if args.engine in BATCHED_ENGINES
                      else "sequential")
+    if args.prefix_cache == "on":
+        if args.mode != "batched":
+            raise SystemExit("--prefix-cache on requires --mode batched "
+                             "(sequential engines have no page pool)")
+        if args.attn_backend == "dense":
+            raise SystemExit(
+                "--prefix-cache on is incompatible with --attn-backend "
+                "dense: dense rows hold a private KV copy per request, so "
+                "there are no page runs to share zero-copy.  Use "
+                "--attn-backend paged (the default), or drop "
+                "--prefix-cache to keep the dense equivalence oracle.")
     if args.mesh:
         if args.mode != "batched":
             raise SystemExit("--mesh requires --mode batched")

@@ -88,6 +88,12 @@ class NullRecorder:
     def reclaim(self, pool: str, reason: str, pages: int, **fields) -> None:
         pass
 
+    def prefix(self, kind: str, **fields) -> None:
+        pass
+
+    def cow(self, pool: str, **fields) -> None:
+        pass
+
     def model_call(self, **fields) -> None:
         pass
 
@@ -247,6 +253,33 @@ class TraceRecorder(NullRecorder):
                    **fields)
         self.registry.counter("reclaimed_pages_total").inc(pages)
         self.registry.counter(f"reclaimed_pages_{reason}").inc(pages)
+
+    def prefix(self, kind: str, **fields) -> None:
+        """Prefix-cache lifecycle (serving/prefix_cache.py): ``kind`` is
+        "hit" / "miss" (admission lookup, ``tokens`` = prefix bound
+        zero-copy), "publish" (retire/preempt handed a run to the cache;
+        ``created`` False when it deduped) or "evict" (pressure-driven
+        LRU reclaim)."""
+        self.event("prefix", op=kind, **fields)
+        reg = self.registry
+        if kind in ("hit", "miss"):
+            reg.counter("prefix_lookups_total").inc()
+        if kind == "hit":
+            reg.counter("prefix_hits_total").inc()
+            reg.counter("prefix_saved_tokens_total").inc(
+                int(fields.get("tokens", 0)))
+        elif kind == "publish":
+            if fields.get("created", True):
+                reg.counter("prefix_published_runs_total").inc()
+        elif kind == "evict":
+            reg.counter("prefix_evicted_runs_total").inc()
+
+    def cow(self, pool: str, **fields) -> None:
+        """One copy-on-write page split in pool ``pool`` — a write landed
+        on a page shared with a branch fork or a cached prefix run."""
+        self.event("cow", pool=pool, **fields)
+        self.registry.counter("cow_copies_total").inc()
+        self.registry.counter(f"cow_copies_{pool}").inc()
 
     def model_call(self, **fields) -> None:
         """Sequential-runner forward (runtime/runner.py)."""

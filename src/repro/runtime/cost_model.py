@@ -22,6 +22,13 @@ with the default ``t_dispatch = 0`` every number is unchanged, bitwise.
 For 4-tuples the draft-forward time is (dispatches - target_calls) * t —
 one chunk forward regardless of chunk width — while the drafted-token cost
 stays visible through the dispatch term.
+
+Admission rounds may appear as ("prefill", staged_tokens, forwards):
+cost = staged_tokens * t_prefill + forwards * t_dispatch.  With the
+default ``t_prefill = 0`` engines never emit them, so TTFT keeps today's
+arrival-to-first-commit reading; pricing prefill (the prefix-cache bench
+does) makes a cached admission — fewer staged suffix tokens, fewer rung
+forwards — visibly cheaper on the modeled clock.
 """
 from __future__ import annotations
 
@@ -58,9 +65,13 @@ class CostModel:
     t: float = 1.0          # draft per-token time (arbitrary unit)
     tokens_per_sec_ar: float = 0.0  # optional absolute calibration
     t_dispatch: float = 0.0  # fixed per-device-dispatch overhead
+    t_prefill: float = 0.0   # per-staged-prefill-token time (0 = unpriced)
 
     def round_cost(self, r: Round) -> float:
         kind, d, calls = r[0], r[1], r[2]
+        if kind == "prefill":
+            # d = staged tokens (lanes * rung width), calls = forwards
+            return d * self.t_prefill + calls * self.t_dispatch
         if len(r) > 3:
             nd = int(r[3])
             # measured dispatches: draft forwards are whatever is not a

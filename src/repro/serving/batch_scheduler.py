@@ -103,17 +103,22 @@ class ContinuousBatchScheduler:
                 self.metrics.on_finish(seq.rid, now)
             last_rnd = (eng.timeline[-1]
                         if len(eng.timeline) > n_rnd0 else None)
+            pool = eng.pool
             self.metrics.on_round(
-                eng.pool.occupancy, step_wall=step_wall,
+                pool.occupancy, step_wall=step_wall,
                 # measured dispatches ride the round tuple in parallel
                 # draft mode; sequential rounds imply one forward per
                 # draft step plus the target calls
                 dispatches=(None if last_rnd is None
                             else (int(last_rnd[3]) if len(last_rnd) > 3
-                                  else int(last_rnd[1]) + int(last_rnd[2]))))
+                                  else int(last_rnd[1]) + int(last_rnd[2]))),
+                logical_occupancy=getattr(pool, "logical_occupancy", None),
+                shared_pages=getattr(pool, "shared_pages", None))
             if rec is not None:
-                rec.sample("pool_occupancy", eng.pool.occupancy,
-                           t=eng.clock)
+                rec.sample("pool_occupancy", pool.occupancy, t=eng.clock)
+                shared = getattr(pool, "shared_pages", None)
+                if shared:
+                    rec.sample("pool_shared_pages", shared, t=eng.clock)
         return results
 
     # ------------------------------------------------------------ admission
@@ -150,9 +155,13 @@ class ContinuousBatchScheduler:
         if hasattr(eng, "host_transfer_bytes"):
             transfer = {"host_transfer_bytes": eng.host_transfer_bytes,
                         "host_fetches": eng.host_fetches}
-        return self.metrics.summary(eng.clock,
-                                    pool_stats=eng.pool.stats.as_dict(),
-                                    transfer=transfer)
+        out = self.metrics.summary(eng.clock,
+                                   pool_stats=eng.pool.stats.as_dict(),
+                                   transfer=transfer)
+        pc = getattr(eng, "prefix_cache", None)
+        if pc is not None:
+            out["prefix_cache"] = pc.stats.as_dict()
+        return out
 
 
 def victim_arrival(metrics: ServingMetrics, rid: int) -> float:

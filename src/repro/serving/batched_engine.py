@@ -99,6 +99,7 @@ from repro.serving import device_loop as DL
 from repro.serving.decode_state import DecodeState
 from repro.serving.kv_pool import (PagedKVPool, PagedStore, PoolExhausted,
                                    PoolGroup)
+from repro.serving.prefix_cache import PrefixCache
 
 
 def _count_fetch(owner, arr) -> np.ndarray:
@@ -225,6 +226,26 @@ class BatchedDecoder:
                         aux["features"])
 
             @functools.partial(jax.jit, donate_argnums=(1,))
+            def _prefill_sfx_paged(params, cache, tokens, starts, table,
+                                   lens, rows):
+                """Suffix prefill (prefix-cache admission): the bucketed
+                prefill forward at per-lane START positions — queries
+                attend to the zero-copy-bound prefix pages through the
+                table, and the row-axis view is GATHERED (prefill_take)
+                so a restored ring checkpoint is visible to the call."""
+                lanes, T = tokens.shape
+                sub = state.prefill_take(cache, rows)
+                positions = starts[:, None] + jnp.arange(
+                    T, dtype=jnp.int32)[None]
+                logits, sub, aux = M.forward(
+                    params, cfg, tokens, cache=sub, positions=positions,
+                    feature_mode="all", paged=(table, lens),
+                    act_spec=act_spec, logits_spec=logits_spec,
+                    paged_backend=paged_backend)
+                return (logits, state.prefill_merge(cache, sub, rows),
+                        aux["features"])
+
+            @functools.partial(jax.jit, donate_argnums=(1,))
             def _fwd_draft_paged(params, cache, tokens, pos, nreal, membed,
                                  table, lens):
                 B, T = tokens.shape
@@ -245,6 +266,7 @@ class BatchedDecoder:
 
             self._fwd, self._prefill = _fwd_paged, _prefill_paged
             self._fwd_draft = _fwd_draft_paged
+            self._prefill_sfx = _prefill_sfx_paged
             return
 
         @jax.jit
@@ -443,6 +465,50 @@ class BatchedDecoder:
         lane 0 of the returned device (logits, feats) is the row's."""
         return self.prefill_rows([(row, list(tokens))])
 
+    def prefill_rows_at(self, parts: Sequence[Tuple[int, Sequence[int]]],
+                        starts: Sequence[int]
+                        ) -> Tuple[jax.Array, jax.Array]:
+        """Bucketed SUFFIX prefill (prefix-cache admission, paged only):
+        ``parts[i]`` ingests only the uncached tail of its prompt,
+        starting at the page-aligned cached length ``starts[i]`` — its
+        row's pool stream must already hold the bound prefix pages plus
+        room for the suffix.  The rung width is the SUFFIX length's
+        ladder bucket, which is the entire win: a 4-page cached prefix
+        never inflates the rung.  Pad-position overshoot past a row's
+        logical length is the same < quantum span as ``prefill_rows``
+        (trash-paged / future ring slots), so no new margin is needed."""
+        assert self.paged is not None, "suffix prefill needs page runs"
+        assert parts and len(parts) <= self.prefill_lanes
+        assert len(starts) == len(parts)
+        G = self.prefill_lanes
+        Tb = DL.prefill_bucket(max(len(t) for _, t in parts),
+                               self.prefill_quantum)
+        if max(starts) + Tb > self.max_len:
+            raise RuntimeError(
+                f"suffix bucket {Tb} overflows max_len={self.max_len}")
+        toks = np.zeros((G, Tb), np.int32)
+        rows = np.full(G, self.n_rows, np.int32)   # OOB lanes scatter-drop
+        s0 = np.zeros(G, np.int32)
+        for i, ((row, t), start) in enumerate(zip(parts, starts)):
+            L = len(t)
+            assert 1 <= L <= Tb and start >= 0
+            toks[i, :L] = t
+            if L < Tb:
+                toks[i, L:] = t[-1]
+            rows[i] = row
+            s0[i] = start
+        tab, lens = self.state.table_view(
+            [row for row, _ in parts] + [-1] * (G - len(parts)))
+        logits, self.cache, feats = self._prefill_sfx(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(s0),
+            jnp.asarray(tab), jnp.asarray(lens), jnp.asarray(rows))
+        for (row, t), start in zip(parts, starts):
+            self.state.row_pos[row] = start + len(t)
+        self.n_calls += 1
+        self.n_call_tokens += sum(len(t) for _, t in parts)
+        self.prefill_shapes.add((G, Tb))
+        return logits, feats
+
     def copy_row(self, src: int, dst: int) -> None:
         """Branch fork: row-axis state (dense KV, SSM rings) copies; paged
         state copies nothing — the fork is page-table sharing in the pool
@@ -521,6 +587,12 @@ class _Seq:
     # this round's history-predictor decision (runtime/predictor.py);
     # None whenever the predictor is off
     pdec: Optional[Any] = None
+    # prefix-cache publish candidate (set at admission, prefix_cache only):
+    # the page-aligned prefill-written prompt prefix this request may hand
+    # to the cache at retire/preempt, plus the ring snapshot recorded at
+    # that length for SSM-bearing decoders
+    pub_len: int = 0
+    pub_snaps: Optional[Dict[str, Any]] = None
 
     @property
     def committed(self) -> int:
@@ -546,9 +618,15 @@ class BatchedEngineBase:
                  hrad_params=None,
                  draft_heads=None,
                  attn_backend: str = "dense",
+                 prefix_cache: bool = False,
                  debug_check: bool = False,
                  mesh=None):
         assert attn_backend in ("dense", "paged"), attn_backend
+        if prefix_cache and attn_backend != "paged":
+            raise ValueError(
+                "prefix_cache=True requires attn_backend='paged': dense "
+                "rows have no page runs to share — drop prefix_cache or "
+                "switch to the paged backend")
         self.dp, self.dcfg = draft_params, draft_cfg
         self.tp, self.tcfg = target_params, target_cfg
         self.ecfg = ecfg
@@ -662,12 +740,17 @@ class BatchedEngineBase:
             # accounting COW (pool) -> physical COW, each in its own buffer
             self.pools["t"].cow_listeners.append(self.tgt_dec.copy_page)
             self.pools["d"].cow_listeners.append(self.dft_dec.copy_page)
+        # cross-request radix prefix cache (DESIGN.md §7.13): None (the
+        # default) keeps every admission/retire path bitwise today's —
+        # no lookups, no publishes, no extra snapshots or fetches.
+        self.prefix_cache: Optional[PrefixCache] = \
+            PrefixCache(self.pools) if prefix_cache else None
         self.swap: Optional[PagedStore] = None
         if swap_pages > 0 and self.tgt_dec.swappable:
             self.swap = PagedStore(swap_pages, page_size,
                                    self.tgt_dec.swap_dim)
         self._swapped: Dict[int, dict] = {}      # rid -> swap metadata
-        self._pending_admits: List[Tuple[_Seq, List[int], bool]] = []
+        self._pending_admits: List[Tuple[_Seq, List[int], bool, int]] = []
         self.cost = CostModel(c=ecfg.c)
         self.clock = 0.0
         self.timeline: List[Tuple[str, int, int]] = []
@@ -680,12 +763,19 @@ class BatchedEngineBase:
 
     def set_recorder(self, rec) -> None:
         """Install a trace recorder.  An enabled recorder additionally taps
-        the page pools' reclaim listeners for per-cause attribution."""
+        the page pools' reclaim and COW listeners for per-cause/per-pool
+        attribution (both fire on host accounting already in flight — zero
+        extra device syncs)."""
         self.rec = rec
         if rec.enabled:
             for which, pool in self.pools.items():
                 pool.reclaim_listeners.append(
                     functools.partial(self._on_reclaim, which))
+                pool.cow_listeners.append(
+                    functools.partial(self._on_cow, which))
+
+    def _on_cow(self, which: str, old: int, new: int) -> None:
+        self.rec.cow(which)
 
     def _on_reclaim(self, which: str, reason: str, freed: int) -> None:
         self.rec.reclaim(which, reason, freed)
@@ -837,7 +927,14 @@ class BatchedEngineBase:
                 > self.ecfg.max_len):
             return False
         need = self.admit_cost_pages(prompt_len)
-        return all(need + self._round_slack_pages(which) <= pool.free_pages
+        # pages held only by prefix-cache runs count as free headroom:
+        # reserve realizes them through LRU eviction on demand (and a
+        # cache HIT shrinks the bind-side need by exactly the pages it
+        # pins, so the arithmetic holds hit or miss)
+        pc = self.prefix_cache
+        return all(need + self._round_slack_pages(which)
+                   <= pool.free_pages
+                   + (pc.reclaimable(which) if pc is not None else 0)
                    for which, pool in self.pools.items())
 
     def _round_slack_pages(self, which: str) -> int:
@@ -875,11 +972,46 @@ class BatchedEngineBase:
         assert len(toks) >= 2, "need a prompt of >= 2 tokens"
         L = len(toks) - 1
         tk, dk = self._pool_keys(rid)
-        self.pools["t"].open(tk)
-        self.pools["d"].open(dk)
+        pc = self.prefix_cache
+        # ---- prefix-cache lookup (DESIGN.md §7.13): longest cached
+        # page-aligned prefix of the prompt, capped so >= 1 suffix token
+        # remains to prefill (feats_last and the pending seed need it).
+        # Swap re-admissions keep the unpack path: unpack scatters into
+        # EVERY page of a full-length stream, which must not be shared.
+        ent, hit = None, 0
+        if pc is not None and (meta is None
+                               or meta.get("swap_key") is None):
+            need_snaps = self.tgt_dec.has_ssm or self.dft_dec.has_ssm
+            found = pc.lookup(toks, L - 1, need_snaps=need_snaps)
+            if found is not None:
+                ent, hit = found
+            if self.rec.enabled:
+                self.rec.prefix("hit" if hit else "miss", rid=rid,
+                                tokens=hit, prompt_len=len(toks),
+                                t=self.clock)
+        if hit:
+            # zero-copy bind: the request's streams share the run's pages
+            # (refcount bump) — the exact branch-fork COW contract, so a
+            # later tail-page append splits before writing.
+            self.pools["t"].fork_prefix(ent.stream, tk, hit)
+            self.pools["d"].fork_prefix(ent.stream, dk, hit)
+        else:
+            self.pools["t"].open(tk)
+            self.pools["d"].open(dk)
         try:
-            self.pools["t"].extend(tk, L)
-            self.pools["d"].extend(dk, L)
+            for which, key in (("t", tk), ("d", dk)):
+                while True:
+                    try:
+                        self.pools[which].extend(key, L - hit)
+                        break
+                    except PoolExhausted:
+                        # realize the headroom can_admit counted: evict
+                        # LRU cache runs (the just-bound run is pinned by
+                        # the live refs above) until the suffix fits
+                        if pc is None or not pc.evict_lru():
+                            raise
+                        if self.rec.enabled:
+                            self.rec.prefix("evict", t=self.clock)
         except PoolExhausted:
             self.pools["t"].close(tk, "preempt")
             self.pools["d"].close(dk, "preempt")
@@ -890,6 +1022,18 @@ class BatchedEngineBase:
         d_row = self.dft_dec.free_rows.pop()
         self.tgt_dec.bind_row(t_row, tk)
         self.dft_dec.bind_row(d_row, dk)
+        if hit and ent.snaps:
+            # SSM half of the hit: restore the ring snapshot recorded at
+            # the shared length, after which the suffix forward starting
+            # at position ``hit`` resumes from it (same side-channel as
+            # preemption swap).
+            for which, dec, row in (("t", self.tgt_dec, t_row),
+                                    ("d", self.dft_dec, d_row)):
+                snap = ent.snaps.get(which)
+                if snap is not None and dec.has_ssm:
+                    dec.restore(row, hit, snap)
+                    self._count_staged(sum(a.nbytes for s in snap
+                                           for a in s.values()))
         restored = False
         if meta is not None and meta.get("swap_key") is not None:
             rows = self.swap.get(meta["swap_key"])
@@ -915,7 +1059,7 @@ class BatchedEngineBase:
         seq.admit_order = self._admit_counter
         self._admit_counter += 1
         self.active.append(seq)
-        self._pending_admits.append((seq, toks[:-1], restored))
+        self._pending_admits.append((seq, toks[:-1], restored, hit))
         if self.rec.enabled:
             self.rec.request("admit", rid, prompt_len=len(toks),
                              restored=restored, t=self.clock)
@@ -933,25 +1077,33 @@ class BatchedEngineBase:
         pending, self._pending_admits = self._pending_admits, []
         if not pending:
             return
-        buckets: Dict[int, List[Tuple[_Seq, List[int], bool]]] = {}
-        for seq, toks, restored in pending:
-            width = DL.prefill_bucket(len(toks), self._pq)
-            buckets.setdefault(width, []).append((seq, toks, restored))
+        # bucket by the UNCACHED suffix length: a prefix-cache hit rides a
+        # rung sized to its suffix, never its full prompt — that is the
+        # admission win.  Misses (hit == 0) bucket by full length exactly
+        # as before, so the cache-off path is bitwise today's.
+        buckets: Dict[int, List[Tuple[_Seq, List[int], bool, int]]] = {}
+        for seq, toks, restored, hit in pending:
+            width = DL.prefill_bucket(len(toks) - hit, self._pq)
+            buckets.setdefault(width, []).append((seq, toks, restored, hit))
         lanes = self.tgt_dec.prefill_lanes
+        n_fwd, staged_tokens = 0, 0
         for width in sorted(buckets):
             grp = buckets[width]
             for i in range(0, len(grp), lanes):
                 chunk = grp[i:i + lanes]
                 tparts = [(seq.tgt.row, toks)
-                          for seq, toks, restored in chunk if not restored]
+                          for seq, toks, restored, hit in chunk
+                          if not restored and not hit]
                 if tparts:
                     _, feats = self.tgt_dec.prefill_rows(tparts)
                     # the staged (lanes, width) int32 token frame crosses
                     # host -> device once per prefill forward
                     self._count_staged(lanes * width * 4)
+                    n_fwd += 1
+                    staged_tokens += lanes * width
                     lane = 0
-                    for seq, toks, restored in chunk:
-                        if restored:
+                    for seq, toks, restored, hit in chunk:
+                        if restored or hit:
                             continue
                         seq.feats_last = feats[:, lane:lane + 1,
                                                len(toks) - 1, :]
@@ -962,16 +1114,92 @@ class BatchedEngineBase:
                             width=width, lanes=lanes, used=len(tparts),
                             tokens=sum(len(t) for _, t in tparts),
                             t=self.clock)
-                self.dft_dec.prefill_rows(
-                    [(seq.dft.row, toks) for seq, toks, _ in chunk])
-                self._count_staged(lanes * width * 4)
-                if self.rec.enabled:
-                    self.rec.prefill(
-                        width=width, lanes=lanes, used=len(chunk),
-                        tokens=sum(len(t) for _, t, _ in chunk),
-                        t=self.clock)
+                hgrp = [(seq, toks, hit)
+                        for seq, toks, restored, hit in chunk if hit]
+                if hgrp:
+                    # suffix prefill over the zero-copy-bound prefix pages
+                    _, feats = self.tgt_dec.prefill_rows_at(
+                        [(seq.tgt.row, toks[hit:]) for seq, toks, hit
+                         in hgrp],
+                        [hit for _, _, hit in hgrp])
+                    self._count_staged(lanes * width * 4)
+                    n_fwd += 1
+                    staged_tokens += lanes * width
+                    for lane, (seq, toks, hit) in enumerate(hgrp):
+                        seq.feats_last = feats[:, lane:lane + 1,
+                                               len(toks) - hit - 1, :]
+                        seq.stats.target_calls += 1
+                    if self.rec.enabled:
+                        self.rec.prefill(
+                            width=width, lanes=lanes, used=len(hgrp),
+                            tokens=sum(len(t) - h for _, t, h in hgrp),
+                            t=self.clock)
+                dparts = [(seq.dft.row, toks)
+                          for seq, toks, _, hit in chunk if not hit]
+                if dparts:
+                    self.dft_dec.prefill_rows(dparts)
+                    self._count_staged(lanes * width * 4)
+                    n_fwd += 1
+                    staged_tokens += lanes * width
+                    if self.rec.enabled:
+                        self.rec.prefill(
+                            width=width, lanes=lanes, used=len(dparts),
+                            tokens=sum(len(t) for _, t in dparts),
+                            t=self.clock)
+                if hgrp:
+                    self.dft_dec.prefill_rows_at(
+                        [(seq.dft.row, toks[hit:]) for seq, toks, hit
+                         in hgrp],
+                        [hit for _, _, hit in hgrp])
+                    self._count_staged(lanes * width * 4)
+                    n_fwd += 1
+                    staged_tokens += lanes * width
+                    if self.rec.enabled:
+                        self.rec.prefill(
+                            width=width, lanes=lanes, used=len(hgrp),
+                            tokens=sum(len(t) - h for _, t, h in hgrp),
+                            t=self.clock)
+        if self.prefix_cache is not None:
+            self._capture_publish_candidates(pending)
+        # admission pricing (runtime/cost_model.py): with t_prefill left at
+        # its 0 default no round is appended and the clock never moves —
+        # bitwise today's TTFT.  Priced, a cached admission's smaller rungs
+        # and fewer forwards cut modeled TTFT, which is what the prefix-
+        # cache bench gates on.
+        if self.cost.t_prefill > 0.0 and n_fwd:
+            rnd = ("prefill", staged_tokens, n_fwd)
+            self.timeline.append(rnd)
+            self.clock += self.cost.round_cost(rnd)
         if self.debug_check:
             self.pool.check()
+            if self.prefix_cache is not None:
+                self.prefix_cache.check()
+
+    def _capture_publish_candidates(
+            self, pending: List[Tuple[_Seq, List[int], bool, int]]) -> None:
+        """Record what each fresh admission may hand to the prefix cache
+        at retire/preempt: its page-aligned prefill-written prompt prefix
+        plus — for SSM-bearing decoders — the ring snapshot at exactly
+        that length.  The snapshot must be taken NOW: the prefill just
+        wrote checkpoints ``hit+1..L`` and the publish length is within a
+        page of L, so the slot is live; by retire time the decode loop's
+        ring writes could have lapped it.  Swap-restored re-admissions
+        skip their prefill, so they keep the candidate captured at their
+        original admission (pack/unpack is bitwise)."""
+        ps = self.pool.page_size
+        for seq, toks, restored, hit in pending:
+            if restored:
+                continue
+            seq.pub_len = (len(toks) // ps) * ps
+            seq.pub_snaps = None
+            if not seq.pub_len:
+                continue
+            snaps: Dict[str, Any] = {}
+            for which, dec, st in (("t", self.tgt_dec, seq.tgt),
+                                   ("d", self.dft_dec, seq.dft)):
+                if dec.has_ssm:
+                    snaps[which] = dec.snapshot(st.row, seq.pub_len)
+            seq.pub_snaps = snaps or None
 
     def admit(self, rid: int, prompt: Sequence[int], max_new: int,
               on_token=None) -> _Seq:
@@ -1004,6 +1232,7 @@ class BatchedEngineBase:
                         victim.tgt.row, victim.tgt.ing)
             except PoolExhausted:
                 pass
+        self._publish_prefix(victim)
         tk, dk = self._pool_keys(victim.rid)
         self.pools["t"].close(tk, "preempt")
         self.pools["d"].close(dk, "preempt")
@@ -1024,9 +1253,16 @@ class BatchedEngineBase:
 
     def _make_room(self, seqs: List[_Seq],
                    fits: Callable[[List[_Seq]], bool]) -> List[_Seq]:
-        """Preempt youngest-first until this round's worst case fits."""
+        """Preempt youngest-first until this round's worst case fits —
+        but spill the prefix cache first: LRU runs no live request holds
+        are strictly cheaper to give up than a live request's rows."""
         preempted = []
         while not fits(seqs):
+            if (self.prefix_cache is not None
+                    and self.prefix_cache.evict_lru()):
+                if self.rec.enabled:
+                    self.rec.prefix("evict", t=self.clock)
+                continue
             if len(seqs) <= 1:
                 raise RuntimeError(
                     "KV pool too small to run a single request round "
@@ -1075,11 +1311,31 @@ class BatchedEngineBase:
             full = seq.prompt + seq.out
             st.pending = [int(t) for t in full[st.ing:]]
 
+    # ----------------------------------------------------- prefix publish
+    def _publish_prefix(self, seq: _Seq) -> None:
+        """Hand the request's prefill-written prompt prefix to the prefix
+        cache — a zero-copy refcount bump on its first ``pub_len`` tokens'
+        pages in BOTH pools.  Must run before the streams close at
+        retire/preempt so the run survives the release; safe because the
+        engines never truncate below committed-1 >= pub_len and never
+        write a slot below the stream length (a tail-page append onto the
+        now-shared last page goes through the pool's COW split)."""
+        pc = self.prefix_cache
+        if pc is None or seq.pub_len <= 0:
+            return
+        tk, dk = self._pool_keys(seq.rid)
+        created = pc.publish(seq.prompt + seq.out, seq.pub_len,
+                             {"t": tk, "d": dk}, snaps=seq.pub_snaps)
+        if self.rec.enabled:
+            self.rec.prefix("publish", rid=seq.rid, tokens=seq.pub_len,
+                            created=created, t=self.clock)
+
     # -------------------------------------------------------------- retire
     def retire_done(self) -> List[Tuple[_Seq, GenResult]]:
         out = []
         for seq in [s for s in self.active if s.done]:
             self.active.remove(seq)
+            self._publish_prefix(seq)
             tk, dk = self._pool_keys(seq.rid)
             self.pools["t"].close(tk, "retire")
             self.pools["d"].close(dk, "retire")

@@ -493,6 +493,23 @@ class DecodeState:
             return jax.tree.map(lambda a: _fresh_like(a, lanes), c)
         return M.map_slot_caches(cache, fix)
 
+    def prefill_take(self, cache, rows: jax.Array):
+        """Batch-``lanes`` cache view for a SUFFIX prefill forward (traced
+        inside the decoder's jit): like ``prefill_view`` but row-axis
+        slots GATHER lane i from ``rows[i]`` instead of starting fresh — a
+        prefix-cache hit restores the run's ring checkpoint into the live
+        row *before* the suffix forward, and the gathered view carries it
+        into the call (a fresh view would zero it).  Pad lanes carry an
+        out-of-bounds row id: the gather clamps them to junk that
+        ``prefill_merge``'s scatter drops."""
+        paged_owns = PagedAttnState.owns
+
+        def fix(c):
+            if paged_owns(c):
+                return c
+            return jax.tree.map(lambda a: a[:, rows], c)
+        return M.map_slot_caches(cache, fix)
+
     def prefill_merge(self, cache, sub, rows: jax.Array):
         """Merge a prefill forward's ``lanes``-batch result back (traced
         inside the decoder's jit): paged slots adopt the written pages,

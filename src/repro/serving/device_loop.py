@@ -42,7 +42,8 @@ from repro.kernels import verify_accept as _va
 from repro.models import layers as _L
 from repro.runtime import sampling as S
 
-__all__ = ["bucket", "prefill_bucket", "kernel_route", "tick_sample",
+__all__ = ["bucket", "prefill_bucket", "prefill_rungs", "kernel_route",
+           "tick_sample",
            "draft_chunk", "masked_token_column", "compose_verify_tokens",
            "sps_verify", "draw_cands", "branch_verify",
            "set_trace_annotations", "annotate"]
@@ -101,6 +102,15 @@ def prefill_bucket(n: int, quantum: int) -> int:
     compiled trace per rung instead of one per distinct length."""
     assert quantum > 0
     return max(quantum, -(-n // quantum) * quantum)
+
+
+def prefill_rungs(lengths, quantum: int):
+    """Distinct prefill-ladder rungs (sorted ascending) a set of prompt /
+    suffix lengths lands on — the number of prefill forwards an admission
+    group costs per decoder when every group member fits one lanes-chunk.
+    Tests and the prefix-cache bench use this to pin "cached admissions
+    run only the uncached suffix rungs" as an exact call count."""
+    return sorted({prefill_bucket(n, quantum) for n in lengths if n > 0})
 
 
 def kernel_route(ttemp: float, dtemp: float) -> bool:

@@ -65,6 +65,7 @@ class PoolStats:
     reclaimed_prune_pages: int = 0     # H-RAD pre-verify pruning
     reclaimed_retire_pages: int = 0    # request completed
     reclaimed_preempt_pages: int = 0   # evicted under pool pressure
+    reclaimed_evict_pages: int = 0     # prefix-cache LRU eviction
 
     @property
     def reclaimed_speculative_pages(self) -> int:
@@ -85,6 +86,7 @@ _RECLAIM_FIELDS = {
     "prune": "reclaimed_prune_pages",
     "retire": "reclaimed_retire_pages",
     "preempt": "reclaimed_preempt_pages",
+    "evict": "reclaimed_evict_pages",
 }
 
 
@@ -131,6 +133,25 @@ class PagedKVPool:
     @property
     def occupancy(self) -> float:
         return self.pages_in_use / self.num_pages
+
+    @property
+    def shared_pages(self) -> int:
+        """Physical pages currently referenced by more than one table —
+        the zero-copy win from branch forks and prefix-cache hits."""
+        return int((self._ref > 1).sum())
+
+    @property
+    def logical_pages(self) -> int:
+        """Table-entry count: what occupancy *would* be without sharing."""
+        return sum(len(t) for t in self._tables.values())
+
+    @property
+    def cow_copies_total(self) -> int:
+        return self.stats.cow_copies
+
+    def refcount(self, page: int) -> int:
+        """Tables currently referencing physical page ``page``."""
+        return int(self._ref[page])
 
     def is_open(self, seq: SeqId) -> bool:
         return seq in self._tables
@@ -253,6 +274,21 @@ class PagedKVPool:
         self._tables[child] = list(table)
         self._lens[child] = self._lens[parent]
 
+    def fork_prefix(self, parent: SeqId, child: SeqId,
+                    n_tokens: int) -> None:
+        """Copy-on-write fork of the parent's first ``n_tokens`` only.
+        ``n_tokens`` must be page-aligned: the child never ends mid-page
+        of a shared page, so a later ``extend`` appends fresh pages
+        without ever COW-copying cached prefix data."""
+        assert child not in self._tables
+        assert n_tokens % self.page_size == 0, n_tokens
+        assert n_tokens <= self._lens[parent], (n_tokens, self._lens[parent])
+        run = self._tables[parent][:n_tokens // self.page_size]
+        for p in run:
+            self._ref[p] += 1
+        self._tables[child] = list(run)
+        self._lens[child] = n_tokens
+
     def adopt(self, parent: SeqId, child: SeqId) -> None:
         """Replace the parent's table with the (winning) child's and close
         the child, without double-counting the shared prefix."""
@@ -310,6 +346,24 @@ class PoolGroup:
     @property
     def occupancy(self) -> float:
         return self.pages_in_use / self.num_pages
+
+    @property
+    def shared_pages(self) -> int:
+        return sum(p.shared_pages for p in self.pools.values())
+
+    @property
+    def logical_pages(self) -> int:
+        return sum(p.logical_pages for p in self.pools.values())
+
+    @property
+    def logical_occupancy(self) -> float:
+        """Bound table entries over capacity — what occupancy would read
+        if every shared page were physically replicated per table."""
+        return self.logical_pages / self.num_pages
+
+    @property
+    def cow_copies_total(self) -> int:
+        return sum(p.cow_copies_total for p in self.pools.values())
 
     @property
     def stats(self) -> PoolStats:

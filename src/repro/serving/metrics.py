@@ -71,6 +71,8 @@ class ServingMetrics:
     def __init__(self):
         self.traces: Dict[int, RequestTrace] = {}
         self.occupancy_samples: List[float] = []   # pool fill at round ends
+        self.logical_samples: List[float] = []     # bound-page (logical) fill
+        self.shared_samples: List[int] = []        # physical pages shared >1x
         self.rounds = 0
         self.preemptions = 0
         self.step_walls: List[float] = []          # wall seconds per round
@@ -116,9 +118,18 @@ class ServingMetrics:
 
     def on_round(self, occupancy: float,
                  step_wall: Optional[float] = None,
-                 dispatches: Optional[int] = None) -> None:
+                 dispatches: Optional[int] = None,
+                 logical_occupancy: Optional[float] = None,
+                 shared_pages: Optional[int] = None) -> None:
         self.rounds += 1
         self.occupancy_samples.append(occupancy)
+        if logical_occupancy is not None:
+            # physical occupancy counts each shared page ONCE; the logical
+            # view sums table-bound pages, so logical - physical is the
+            # COW/prefix-cache sharing win per round
+            self.logical_samples.append(logical_occupancy)
+        if shared_pages is not None:
+            self.shared_samples.append(int(shared_pages))
         if step_wall is not None:
             self.step_walls.append(step_wall)
         if dispatches is not None:
@@ -126,6 +137,12 @@ class ServingMetrics:
         if self._reg is not None:
             self._reg.counter("serving_rounds_total").inc()
             self._reg.histogram("serving_pool_occupancy").observe(occupancy)
+            if logical_occupancy is not None:
+                self._reg.histogram(
+                    "serving_pool_logical_occupancy").observe(
+                        logical_occupancy)
+            if shared_pages is not None:
+                self._reg.gauge("serving_shared_pages").set(shared_pages)
             if step_wall is not None:
                 self._reg.histogram("serving_step_wall_s").observe(step_wall)
             if dispatches is not None:
@@ -157,6 +174,12 @@ class ServingMetrics:
                                     / max(len(self.occupancy_samples), 1)),
             "pool_occupancy_peak": max(self.occupancy_samples, default=0.0),
         }
+        if self.logical_samples:
+            out["pool_logical_occupancy_mean"] = (
+                sum(self.logical_samples) / len(self.logical_samples))
+            out["pool_logical_occupancy_peak"] = max(self.logical_samples)
+        if self.shared_samples:
+            out["shared_pages_peak"] = max(self.shared_samples)
         if self.step_walls:
             out["step_wall_p50"] = percentile(self.step_walls, 50)
             out["step_wall_p95"] = percentile(self.step_walls, 95)
